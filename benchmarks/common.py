@@ -1,0 +1,37 @@
+"""Shared benchmark plumbing: artifact caching + CSV emission."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def cached(name: str, fn: Callable[[], Dict], refresh: bool = False) -> Dict:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name + ".json")
+    if os.path.exists(path) and not refresh:
+        with open(path) as f:
+            return json.load(f)
+    out = fn()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    return out
+
+
+def emit_csv(rows):
+    for r in rows:
+        print(",".join(str(x) for x in r), flush=True)
+
+
+def timeit_us(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,41 @@
+"""Benchmark driver — one section per paper table/figure plus the roofline
+table. Prints ``name,us_per_call,derived``-style CSV per section.
+
+  python -m benchmarks.run            # all (cached artifacts reused)
+  python -m benchmarks.run --only rewards --refresh
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import (
+    bench_cost_quality,
+    bench_encoders,
+    bench_kernels,
+    bench_rewards,
+    bench_roofline,
+)
+from benchmarks.common import emit_csv
+
+SECTIONS = {
+    "rewards": bench_rewards.run,        # paper Fig. 2
+    "encoders": bench_encoders.run,      # paper Fig. 3
+    "cost_quality": bench_cost_quality.run,  # paper Fig. 4
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,      # deliverable (g)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(SECTIONS), default=None)
+    ap.add_argument("--refresh", action="store_true")
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(SECTIONS)
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        emit_csv(SECTIONS[name](refresh=args.refresh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train the NeuralUCB router online over a small RouterBench
+slice stream and compare against the paper's baselines.
+
+    PYTHONPATH=src python examples/quickstart.py [--samples 6000 --slices 5]
+"""
+import argparse
+import json
+
+from repro.core.baselines import FixedActionPolicy, RandomPolicy, RouteLLMBert
+from repro.core.policy import NeuralUCBRouter
+from repro.core.protocol import run_protocol, summarize
+from repro.core.utilitynet import UtilityNetConfig
+from repro.data.routerbench import RouterBenchSim
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=6000)
+    ap.add_argument("--slices", type=int, default=5)
+    ap.add_argument("--epochs", type=int, default=4)
+    args = ap.parse_args()
+
+    env = RouterBenchSim(seed=0, n_samples=args.samples, n_slices=args.slices)
+    print(f"RouterBench surrogate: {env.n} samples, {env.K} models, "
+          f"{args.slices} slices; C_max=${env.c_max:.2f}")
+
+    strong, weak = env.strong_weak_actions()
+    rl = RouteLLMBert(strong, weak, env.x_emb.shape[1])
+    b0 = env.slice_batch(0)
+    rl.fit_offline(b0["x_emb"], b0["quality"][:, strong],
+                   b0["quality"][:, weak])
+
+    cfg = UtilityNetConfig(emb_dim=env.x_emb.shape[1], num_actions=env.K)
+    policies = {
+        "neuralucb": NeuralUCBRouter(cfg, seed=0),
+        "random": RandomPolicy(env.K, seed=1),
+        "min-cost": FixedActionPolicy(env.min_cost_action()),
+        "routellm-bert": rl,
+    }
+    results = run_protocol(env, policies, epochs=args.epochs)
+    print(json.dumps(summarize(results), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end driver (deliverable (b)): serve batched requests through the
+FULL stack — NeuralUCB router in front of a pool of REAL models (reduced
+variants of the assigned architectures, running actual prefill+decode on
+CPU), with bandit feedback closing the loop, Algorithm-1 style slices.
+
+    PYTHONPATH=src python examples/serve_routed.py [--waves 6 --wave-size 16]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import NeuralUCBRouter
+from repro.core.utilitynet import UtilityNetConfig
+from repro.data.routerbench import RouterBenchSim
+from repro.serving import Request, RoutedServingPool, ServingEngine
+
+# the serving pool: three assigned architectures spanning dense/SSM/MoE
+POOL_ARCHS = ["llama3.2-3b", "mamba2-130m", "granite-moe-1b-a400m"]
+# per-token chip-seconds derived from each arch's decode roofline terms
+# (benchmarks/artifacts/dryrun) x an illustrative $/chip-hour, rescaled to
+# the RouterBench cost range
+COST_PER_TOKEN = [2.0e-4, 1.5e-5, 6.0e-5]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--waves", type=int, default=6)
+    ap.add_argument("--wave-size", type=int, default=16)
+    ap.add_argument("--train-every", type=int, default=2)
+    args = ap.parse_args()
+
+    print("building pool:", POOL_ARCHS)
+    engines = []
+    for i, arch in enumerate(POOL_ARCHS):
+        cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+        engines.append(ServingEngine(cfg, seed=i, max_seq=64))
+
+    env = RouterBenchSim(seed=0, n_samples=2000, n_slices=4)
+    # quality replay restricted to the pool's K=3 columns (paper protocol:
+    # graded feedback comes from the benchmark tables)
+    qcols = [0, 5, 2]  # gpt4-ish / mixtral-ish / gpt35-ish quality profiles
+    quality = env.data["quality"][:, qcols]
+
+    ucfg = UtilityNetConfig(emb_dim=env.x_emb.shape[1],
+                            num_actions=len(engines))
+    router = NeuralUCBRouter(ucfg, seed=0, batch_size=64)
+    pool = RoutedServingPool(router, engines, COST_PER_TOKEN,
+                             quality_table=quality, c_max=0.5, max_batch=8)
+
+    rng = np.random.default_rng(0)
+    for wave in range(args.waves):
+        idx = rng.integers(0, env.n, size=args.wave_size)
+        reqs = [Request(tokens=rng.integers(1, 200,
+                                            size=int(rng.integers(4, 12))),
+                        x_emb=env.x_emb[i], x_feat=env.data["x_feat"][i],
+                        domain=int(env.data["domain"][i]), sample_idx=int(i))
+                for i in idx]
+        out = pool.submit(reqs)
+        rewards = [o["reward"] for o in out]
+        actions = [o["action"] for o in out]
+        print(f"wave {wave + 1}: mean_reward={np.mean(rewards):.3f} "
+              f"action_mix={np.bincount(actions, minlength=len(engines))} "
+              f"tokens[0]={out[0]['tokens'][:5]}")
+        if (wave + 1) % args.train_every == 0:
+            metrics = pool.end_slice(epochs=2)
+            print(f"  [slice end] trained: "
+                  f"{ {k: round(v, 4) for k, v in metrics.items()} }")
+    print(f"served {len(pool.log)} requests total; "
+          f"avg reward {np.mean([r['reward'] for r in pool.log]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Train a ~100M-parameter pool member for a few hundred steps (deliverable
+(b) training driver). Uses the real training substrate: AdamW, cosine
+schedule, grad clipping, checkpointing, synthetic LM data.
+
+Default is a CPU-sized quick run; ``--full`` trains a ~100M llama-family
+config for 300 steps (slow on this 1-core host, the same code path the
+dry-run lowers at production scale).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 30] [--full]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.training import train_step as TS
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.schedule import cosine_schedule
+
+
+def synthetic_batch(rng, vocab, batch, seq):
+    """Markov-ish synthetic token stream (learnable bigram structure)."""
+    trans = (np.arange(vocab)[:, None] * 31 + np.arange(8)[None]) % vocab
+    toks = np.zeros((batch, seq), np.int32)
+    toks[:, 0] = rng.integers(0, vocab, batch)
+    choices = rng.integers(0, 8, (batch, seq))
+    for t in range(1, seq):
+        toks[:, t] = trans[toks[:, t - 1], choices[:, t]]
+    return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param config instead of the toy one")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm.npz")
+    args = ap.parse_args()
+
+    base = get_config("llama3.2-3b")
+    if args.full:
+        cfg = dataclasses.replace(
+            base, name="llama-100m", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+            vocab_size=32000, dtype="float32")
+    else:
+        cfg = dataclasses.replace(base.reduced(), dtype="float32")
+    print(f"config {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+    state = TS.make_train_state(jax.random.PRNGKey(0), cfg)
+    step_fn = jax.jit(lambda s, b, lr: TS.train_step(s, b, cfg=cfg, lr=lr))
+    rng = np.random.default_rng(0)
+
+    losses = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = synthetic_batch(rng, cfg.vocab_size, args.batch, args.seq)
+        lr = cosine_schedule(jnp.int32(step), args.lr, args.steps,
+                             warmup_steps=max(args.steps // 10, 1))
+        state, m = step_fn(state, batch, lr)
+        losses.append(float(m["loss"]))
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"({(time.time() - t0) / (step + 1):.2f}s/step)")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+    save_checkpoint(args.ckpt, state["params"])
+    back = load_checkpoint(args.ckpt)
+    n = sum(x.size for x in jax.tree.leaves(back))
+    print(f"checkpoint round-trip OK ({n / 1e6:.1f}M params) -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Dev smoke: reduced forward + decode for every family. Not a test file."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as MODEL
+
+ok = True
+for arch in ARCH_IDS:
+    cfg = get_config(arch).reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    try:
+        key = jax.random.PRNGKey(0)
+        params = MODEL.init_params(key, cfg)
+        B, S = 2, 16
+        batch = {"tokens": jnp.ones((B, S), jnp.int32),
+                 "labels": jnp.ones((B, S), jnp.int32)}
+        if cfg.arch_type == "audio":
+            batch["audio_embed"] = jnp.ones((B, cfg.num_audio_frames, cfg.d_model))
+        if cfg.arch_type == "vlm":
+            batch["image_embed"] = jnp.ones((B, cfg.num_image_tokens, cfg.d_model))
+        logits, aux = MODEL.forward_train(params, cfg, batch)
+        assert logits.shape[:2] == (B, S), logits.shape
+        assert bool(jnp.all(jnp.isfinite(logits))), "NaN in logits"
+        # decode
+        memory = batch.get("audio_embed", batch.get("image_embed"))
+        cache = MODEL.init_cache(cfg, B, 32, memory=memory, params=params)
+        tok = jnp.ones((B, 1), jnp.int32)
+        dlogits, cache2 = MODEL.decode_step(params, cfg, cache, tok)
+        assert dlogits.shape[:2] == (B, 1)
+        assert bool(jnp.all(jnp.isfinite(dlogits))), "NaN in decode"
+        assert int(cache2["pos"]) == 1
+        print(f"OK   {arch:28s} logits{logits.shape} aux={float(aux):.4f}")
+    except Exception as e:
+        ok = False
+        import traceback
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc()
+sys.exit(0 if ok else 1)

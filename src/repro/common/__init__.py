@@ -1,0 +1,11 @@
+from repro.common.config import ModelConfig, InputShape, INPUT_SHAPES
+from repro.common.tree import tree_size, tree_bytes, tree_finite
+
+__all__ = [
+    "ModelConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "tree_size",
+    "tree_bytes",
+    "tree_finite",
+]

@@ -1,0 +1,36 @@
+"""Pytree utilities (no flax/optax available — everything is plain pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_finite(tree) -> bool:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return True
+    return bool(jax.device_get(jnp.all(jnp.stack(leaves))))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

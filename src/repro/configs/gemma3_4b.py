@@ -1,0 +1,28 @@
+"""gemma3-4b [dense] — 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144; 5:1 local:global sliding-window attention, 128k context.
+[hf:google/gemma-3-1b-pt]
+
+The 5:1 local:global interleave makes this the one *dense* arch that runs
+the ``long_500k`` decode shape: local layers use a 1024-token sliding
+window; global layers are capped at ``global_attn_cap`` during long decode
+(deviation from true full-context global attention, recorded in DESIGN.md §4).
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    arch_type="dense",
+    num_layers=34,
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    sliding_window=1024,
+    local_global_ratio=5,
+    global_attn_cap=32768,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    citation="hf:google/gemma-3-1b-pt",
+)

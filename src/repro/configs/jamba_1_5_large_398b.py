@@ -1,0 +1,31 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576, vocab=65536, MoE 16 experts top-2; Mamba+attention 1:7
+interleave (one attention layer per 8), MoE every 2nd layer.
+[arXiv:2403.19887]
+
+Runs ``long_500k``: mamba layers carry O(1) state; the 9 attention layers
+are bounded by ``global_attn_cap`` during long decode (DESIGN.md §4).
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    arch_type="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    attn_every=8,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    global_attn_cap=32768,
+    citation="arXiv:2403.19887",
+)

@@ -1,0 +1,22 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256; gated cross-attention image layers every 5th layer. The
+ViT/projector vision frontend is a STUB: the input pipeline supplies patch
+embeddings (B, 1601, d_model). [hf:meta-llama/Llama-3.2-11B-Vision]
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    arch_type="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    cross_attn_every=5,
+    num_image_tokens=1601,
+    rope_theta=500_000.0,
+    citation="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,21 @@
+"""mamba2-130m [ssm] — 24L d_model=768, attention-free, vocab=50280,
+ssm_state=128, SSD (state-space duality). [arXiv:2405.21060]
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=1,   # attention-free; unused
+    num_kv_heads=1,
+    d_ff=0,        # mamba2 block has no separate FFN
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    citation="arXiv:2405.21060",
+)

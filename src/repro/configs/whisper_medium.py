@@ -1,0 +1,22 @@
+"""whisper-medium [audio] — enc-dec, 24L encoder + 24L decoder, d_model=1024
+16H (kv=16), d_ff=4096, vocab=51865; conv/mel frontend is a STUB: the input
+pipeline supplies precomputed frame embeddings (B, 1500, d_model).
+[arXiv:2212.04356]
+"""
+from repro.common.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    num_layers=24,          # decoder layers
+    num_encoder_layers=24,  # encoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    num_audio_frames=1500,
+    citation="arXiv:2212.04356",
+)

@@ -1,0 +1,25 @@
+"""The paper's primary contribution: reward-based online LLM routing via
+NeuralUCB (UtilityNet + shared-A^-1 UCB + gated exploration + the
+simulated online protocol of Algorithm 1)."""
+from repro.core.reward import utility_reward, normalize_cost
+from repro.core.utilitynet import (
+    init_utilitynet,
+    utilitynet_apply,
+    utilitynet_all_actions,
+)
+from repro.core.neuralucb import init_ainv, sherman_morrison_update, rebuild_ainv
+from repro.core.policy import NeuralUCBRouter
+from repro.core.protocol import run_protocol
+
+__all__ = [
+    "utility_reward",
+    "normalize_cost",
+    "init_utilitynet",
+    "utilitynet_apply",
+    "utilitynet_all_actions",
+    "init_ainv",
+    "sherman_morrison_update",
+    "rebuild_ainv",
+    "NeuralUCBRouter",
+    "run_protocol",
+]

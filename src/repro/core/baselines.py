@@ -1,0 +1,154 @@
+"""Baseline routing policies (paper §4.1):
+
+  random      — uniform over the candidate pool
+  min-cost    — always the cheapest model (by average observed cost)
+  max-quality — always the best-quality model (reference upper line, Fig. 4)
+  RouteLLM-BERT — binary strong/weak router: strong and weak are the models
+      with the highest/lowest average *utility reward*; a text-embedding
+      classifier predicts whether the strong model is needed (Ong et al.
+      2024, adapted as the paper describes)
+  LinUCB      — disjoint linear contextual bandit (Li et al. 2010); not in
+      the paper's figures but the canonical partial-feedback reference the
+      related-work section positions NeuralUCB against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RandomPolicy:
+    def __init__(self, num_actions: int, seed: int = 0):
+        self.K = num_actions
+        self.rng = np.random.default_rng(seed)
+
+    def decide(self, x_emb, x_feat, domain):
+        return self.rng.integers(0, self.K, size=len(x_emb)).astype(np.int32)
+
+    def update(self, *a, **k):
+        pass
+
+    def end_slice(self):
+        pass
+
+
+class FixedActionPolicy:
+    """min-cost / max-quality: a fixed arm chosen from dataset statistics."""
+
+    def __init__(self, action: int):
+        self.action = int(action)
+
+    def decide(self, x_emb, x_feat, domain):
+        return np.full(len(x_emb), self.action, np.int32)
+
+    def update(self, *a, **k):
+        pass
+
+    def end_slice(self):
+        pass
+
+
+class RouteLLMBert:
+    """Binary strong/weak routing (Ong et al. 2024, as adapted in §4.1):
+    strong/weak are the pool's best/worst models by average utility reward;
+    a text-embedding classifier predicts whether the strong model is
+    *needed* (quality gap), and routes accordingly. Like the original
+    RouteLLM, the classifier is trained on preference/quality data and is
+    cost-blind — which is exactly why it loses on *utility* (paper Fig. 2).
+
+    ``fit_offline`` trains the head on held-out preference data (the
+    full-information quality tables of the calibration split), mirroring
+    RouteLLM's offline preference-data training."""
+
+    def __init__(self, strong: int, weak: int, emb_dim: int, *,
+                 lr: float = 0.05, threshold: float = 0.5, seed: int = 0,
+                 gap: float = 0.3):
+        self.strong, self.weak = int(strong), int(weak)
+        self.threshold = threshold
+        self.lr = lr
+        self.gap = gap
+        key = jax.random.PRNGKey(seed)
+        self.w = jax.random.normal(key, (emb_dim,), jnp.float32) * 0.01
+        self.b = jnp.zeros((), jnp.float32)
+
+    def fit_offline(self, x_emb, quality_strong, quality_weak,
+                    epochs: int = 200):
+        """Label: strong needed iff its quality exceeds weak's by > gap."""
+        y = (np.asarray(quality_strong) - np.asarray(quality_weak)
+             > self.gap).astype(np.float32)
+        Xj, yj = jnp.asarray(np.asarray(x_emb, np.float32)), jnp.asarray(y)
+        for _ in range(epochs):
+            p = jax.nn.sigmoid(Xj @ self.w + self.b)
+            grad_z = (p - yj) / len(yj)
+            self.w = self.w - self.lr * (Xj.T @ grad_z)
+            self.b = self.b - self.lr * jnp.sum(grad_z)
+        # calibrate the routing threshold so the strong-routing rate matches
+        # the label base rate (RouteLLM calibrates its threshold for a
+        # target cost budget the same way)
+        p_train = np.asarray(jax.nn.sigmoid(Xj @ self.w + self.b))
+        self.threshold = float(np.quantile(p_train, 1.0 - y.mean()))
+        return self
+
+    def _prob_strong(self, x_emb):
+        z = jnp.asarray(x_emb) @ self.w + self.b
+        return jax.nn.sigmoid(z)
+
+    def decide(self, x_emb, x_feat, domain):
+        p = np.asarray(self._prob_strong(x_emb))
+        return np.where(p >= self.threshold, self.strong, self.weak
+                        ).astype(np.int32)
+
+    def update(self, *a, **k):
+        pass
+
+    def end_slice(self):
+        pass
+
+
+class LinUCB:
+    """Disjoint LinUCB (one ridge model per arm) on text embeddings."""
+
+    def __init__(self, num_actions: int, dim: int, *, alpha: float = 1.0,
+                 ridge: float = 1.0):
+        self.K, self.dim, self.alpha = num_actions, dim + 1, alpha
+        self.ainv = jnp.stack([jnp.eye(self.dim) / ridge] * num_actions)
+        self.bvec = jnp.zeros((num_actions, self.dim))
+
+    def _aug(self, x_emb):
+        x = np.asarray(x_emb, np.float32)
+        x = x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+        return jnp.asarray(np.concatenate([x, np.ones((len(x), 1), np.float32)],
+                                          axis=-1))
+
+    def decide(self, x_emb, x_feat, domain):
+        g = self._aug(x_emb)                                 # (B, D)
+        theta = jnp.einsum("kij,kj->ki", self.ainv, self.bvec)
+        mu = jnp.einsum("bd,kd->bk", g, theta)
+        bonus = jnp.sqrt(jnp.maximum(
+            jnp.einsum("bd,kde,be->bk", g, self.ainv, g), 0.0))
+        return np.asarray(jnp.argmax(mu + self.alpha * bonus, axis=-1)
+                          ).astype(np.int32)
+
+    def update(self, x_emb, x_feat, domain, actions, reward):
+        g = self._aug(x_emb)
+        actions = np.asarray(actions)
+        reward = jnp.asarray(np.asarray(reward, np.float32))
+
+        def step(state, inp):
+            ainv, bvec = state
+            gi, ai, ri = inp
+            v = ainv[ai] @ gi
+            ainv = ainv.at[ai].add(-jnp.outer(v, v) / (1.0 + gi @ v))
+            bvec = bvec.at[ai].add(ri * gi)
+            return (ainv, bvec), None
+
+        (self.ainv, self.bvec), _ = jax.lax.scan(
+            step, (self.ainv, self.bvec),
+            (g, jnp.asarray(actions), reward))
+
+    def end_slice(self):
+        pass

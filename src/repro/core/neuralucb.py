@@ -1,0 +1,74 @@
+"""NeuralUCB statistics (paper §3.3).
+
+A single *shared* inverse covariance A^-1 over the augmented last-layer
+feature g(x,a) = [h(x,a); 1] — NOT per-arm statistics. Online updates are
+rank-1 Sherman-Morrison; after each slice's replay training the matrix is
+REBUILT from the buffer with the new network features via a Cholesky solve
+(Algorithm 1 line 8), which maps onto the MXU far better than n rank-1
+updates.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def augment(h: jax.Array) -> jax.Array:
+    """h (..., d) -> g = [h; 1] (..., d+1), scaled to unit norm.
+
+    The paper appends a bias 1 (§3.3); we additionally L2-normalize h and
+    scale g to unit norm so the beta=1 exploration bonus starts at 1 and
+    A^-1 stays well-conditioned regardless of the trunk's activation scale
+    (DESIGN.md §6 — feature scaling is under-specified in the paper).
+    """
+    h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    ones = jnp.ones(h.shape[:-1] + (1,), h.dtype)
+    return jnp.concatenate([h, ones], axis=-1) / jnp.sqrt(2.0).astype(h.dtype)
+
+
+def init_ainv(dim: int, ridge_lambda0: float = 1.0) -> jax.Array:
+    return jnp.eye(dim, dtype=jnp.float32) / ridge_lambda0
+
+
+@jax.jit
+def sherman_morrison_update(ainv: jax.Array, g: jax.Array) -> jax.Array:
+    """Rank-1 update of A^-1 after observing feature g (d,):
+
+        A^-1 <- A^-1 - (A^-1 g g^T A^-1) / (1 + g^T A^-1 g)
+    """
+    v = ainv @ g
+    denom = 1.0 + g @ v
+    return ainv - jnp.outer(v, v) / denom
+
+
+@jax.jit
+def sherman_morrison_batch(ainv: jax.Array, gs: jax.Array) -> jax.Array:
+    """Sequential rank-1 updates for a batch gs (n, d) via lax.scan."""
+
+    def step(a, g):
+        return sherman_morrison_update(a, g), None
+
+    out, _ = jax.lax.scan(step, ainv, gs)
+    return out
+
+
+@jax.jit
+def rebuild_ainv(gs: jax.Array, ridge_lambda0: float = 1.0) -> jax.Array:
+    """A = lambda0 I + sum_i g_i g_i^T ; return A^-1 via Cholesky solve.
+
+    gs: (n, d) features of all buffered (context, action) pairs recomputed
+    with the freshly trained network.
+    """
+    d = gs.shape[-1]
+    A = ridge_lambda0 * jnp.eye(d, dtype=jnp.float32) + gs.T @ gs
+    cho = jax.scipy.linalg.cho_factor(A)
+    return jax.scipy.linalg.cho_solve(cho, jnp.eye(d, dtype=jnp.float32))
+
+
+def ucb_bonus(ainv: jax.Array, g: jax.Array) -> jax.Array:
+    """sqrt(g^T A^-1 g) for g (..., d). Pure-jnp path (the Pallas kernel in
+    repro.kernels.ucb_score is the TPU serving path)."""
+    quad = jnp.einsum("...i,ij,...j->...", g, ainv, g)
+    return jnp.sqrt(jnp.maximum(quad, 0.0))

@@ -1,0 +1,150 @@
+"""NeuralUCB routing policy (paper §3.3 + Algorithm 1).
+
+DECIDE:   s(x,a) = mu(x,a) + beta * sqrt(g^T A^-1 g); take argmax_a s if
+          the gate fires (p(x) >= tau_g), else the mean-greedy safe action.
+UPDATE:   push (x, a, r, y_gate) into the replay buffer; Sherman-Morrison
+          rank-1 update of the shared A^-1 with g(x, a).
+TRAIN:    E replay epochs of Huber + BCE on the buffer (AdamW).
+REBUILD:  recompute all buffered features with the new net; Cholesky.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import neuralucb as NU
+from repro.core import utilitynet as UN
+from repro.core.replay import ReplayBuffer
+from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decide_jit(params, cfg: UN.UtilityNetConfig, ainv, beta, tau_g,
+                x_emb, x_feat, domain):
+    mu, h, gate_p = UN.utilitynet_all_actions(params, cfg, x_emb, x_feat, domain)
+    g = NU.augment(h)                                   # (B, K, F)
+    bonus = NU.ucb_bonus(ainv, g)                       # (B, K)
+    scores = mu + beta * bonus
+    a_ucb = jnp.argmax(scores, axis=-1)
+    a_safe = jnp.argmax(mu, axis=-1)
+    use_ucb = gate_p >= tau_g
+    actions = jnp.where(use_ucb, a_ucb, a_safe)
+    g_taken = jnp.take_along_axis(
+        g, actions[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
+    return actions, g_taken, mu_safe, gate_p, scores
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _train_step_jit(params, opt, cfg: UN.UtilityNetConfig, batch, lr):
+    (loss, metrics), grads = jax.value_and_grad(
+        UN.utilitynet_loss, has_aux=True)(params, cfg, batch)
+    grads, gn = clip_by_global_norm(grads, 1.0)
+    params, opt = adamw_update(grads, opt, params, lr=lr, weight_decay=1e-4)
+    metrics = dict(metrics, grad_norm=gn, loss=loss)
+    return params, opt, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _features_jit(params, cfg: UN.UtilityNetConfig, x_emb, x_feat, domain,
+                  action):
+    _, h, _ = UN.utilitynet_apply(params, x_emb, x_feat, domain, action)
+    return NU.augment(h)
+
+
+class NeuralUCBRouter:
+    """Stateful router implementing the paper's policy.
+
+    Hyperparameters follow §4.1: lr 1e-3, beta 1, ridge lambda0 1; tau_g and
+    the gate-label margin are under-specified in the paper — see DESIGN.md §6.
+    """
+
+    def __init__(self, cfg: UN.UtilityNetConfig, *, seed: int = 0,
+                 beta: float = 1.0, tau_g: float = 0.5,
+                 ridge_lambda0: float = 1.0, lr: float = 1e-3,
+                 gate_margin: float = 0.05, batch_size: int = 256):
+        self.cfg = cfg
+        self.beta = beta
+        self.tau_g = tau_g
+        self.ridge_lambda0 = ridge_lambda0
+        self.lr = lr
+        self.gate_margin = gate_margin
+        self.batch_size = batch_size
+        key = jax.random.PRNGKey(seed)
+        self.params = UN.init_utilitynet(key, cfg)
+        self.opt = adamw_init(self.params)
+        self.ainv = NU.init_ainv(cfg.ucb_feature_dim, ridge_lambda0)
+        self.buffer = ReplayBuffer(cfg.emb_dim, cfg.feat_dim)
+        self.np_rng = np.random.default_rng(seed + 1)
+        self.warm = True  # slice 1 explores uniformly (warm-start init)
+
+    # ----------------------------------------------------------- DECIDE --
+    def decide(self, x_emb: np.ndarray, x_feat: np.ndarray,
+               domain: np.ndarray) -> Dict[str, np.ndarray]:
+        B = x_emb.shape[0]
+        if self.warm:
+            actions = self.np_rng.integers(0, self.cfg.num_actions, size=B)
+            g = np.asarray(_features_jit(
+                self.params, self.cfg, jnp.asarray(x_emb), jnp.asarray(x_feat),
+                jnp.asarray(domain), jnp.asarray(actions, jnp.int32)))
+            mu_safe = np.zeros(B, np.float32)
+            gate_p = np.ones(B, np.float32)
+        else:
+            a, g, mu_safe, gate_p, _ = _decide_jit(
+                self.params, self.cfg, self.ainv,
+                jnp.float32(self.beta), jnp.float32(self.tau_g),
+                jnp.asarray(x_emb), jnp.asarray(x_feat), jnp.asarray(domain))
+            actions = np.asarray(a)
+            g, mu_safe, gate_p = map(np.asarray, (g, mu_safe, gate_p))
+        return {"action": actions.astype(np.int32), "g": g,
+                "mu_safe": mu_safe, "gate_p": gate_p}
+
+    # ----------------------------------------------------------- UPDATE --
+    def update(self, x_emb, x_feat, domain, decision: Dict, reward) -> None:
+        reward = np.asarray(reward, np.float32)
+        # gate label (DESIGN.md §6): exploration would have been beneficial
+        # iff the realized reward fell short of the predicted safe utility.
+        gate_label = (reward < decision["mu_safe"] - self.gate_margin
+                      ).astype(np.float32)
+        gate_mask = np.zeros_like(gate_label) if self.warm else \
+            np.ones_like(gate_label)
+        self.buffer.add_batch(x_emb, x_feat, domain, decision["action"],
+                              reward, gate_label, gate_mask)
+        self.ainv = NU.sherman_morrison_batch(self.ainv,
+                                              jnp.asarray(decision["g"]))
+
+    # ------------------------------------------------------------ TRAIN --
+    def train(self, epochs: int = 5) -> Dict[str, float]:
+        last = {}
+        for _ in range(epochs):
+            for mb in self.buffer.minibatches(self.np_rng, self.batch_size):
+                jb = {k: jnp.asarray(v) for k, v in mb.items()}
+                self.params, self.opt, m = _train_step_jit(
+                    self.params, self.opt, self.cfg, jb, jnp.float32(self.lr))
+                last = {k: float(v) for k, v in m.items()}
+        return last
+
+    # ---------------------------------------------------------- REBUILD --
+    def rebuild(self) -> None:
+        data = self.buffer.data()
+        gs = []
+        bs = 4096
+        for i in range(0, len(self.buffer), bs):
+            gs.append(np.asarray(_features_jit(
+                self.params, self.cfg,
+                jnp.asarray(data["x_emb"][i:i + bs]),
+                jnp.asarray(data["x_feat"][i:i + bs]),
+                jnp.asarray(data["domain"][i:i + bs]),
+                jnp.asarray(data["action"][i:i + bs]))))
+        self.ainv = NU.rebuild_ainv(jnp.asarray(np.concatenate(gs)),
+                                    self.ridge_lambda0)
+
+    def end_slice(self, epochs: int = 5) -> Dict[str, float]:
+        metrics = self.train(epochs)
+        self.rebuild()
+        self.warm = False
+        return metrics

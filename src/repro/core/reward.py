@@ -1,0 +1,22 @@
+"""Utility reward (paper Eq. 1):
+
+    r(x, a) = q(x, a) * exp(-lambda * c_tilde(x, a))
+    c_tilde  = log(1 + c) / log(1 + C_max)
+
+The log normalization maps cost into [0, 1] and tames the two-orders-of-
+magnitude price spread across the candidate pool (paper §3.1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def normalize_cost(cost, c_max):
+    """cost >= 0, c_max > 0 -> c_tilde in [0, 1] (for cost <= c_max)."""
+    return jnp.log1p(cost) / jnp.log1p(c_max)
+
+
+def utility_reward(quality, cost, c_max, cost_lambda: float = 1.0):
+    """quality in [0,1], raw cost -> utility reward (paper Eq. 1)."""
+    c_tilde = normalize_cost(cost, c_max)
+    return quality * jnp.exp(-cost_lambda * c_tilde)

@@ -1,0 +1,141 @@
+"""UtilityNet (paper §3.2, Figure 1).
+
+Branches:
+  f_text :  x_emb -> h_emb                     (text encoder MLP)
+  Emb_d  :  domain id -> e_d
+  f_feat :  [x_feat, e_d] -> h_feat            (auxiliary feature encoder)
+  Emb_a  :  action id -> e_a
+  trunk  :  z_u = [h_emb, h_feat, e_a] -> h(x,a)  (last hidden, fed to UCB)
+  u-head :  h(x,a) -> mu(x,a)                  (utility regression, Huber)
+  gate   :  z_g = [h_emb, h_feat] -> p(x)      (BCE; activates UCB bonus)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class UtilityNetConfig:
+    emb_dim: int = 384          # text-encoder embedding dim
+    feat_dim: int = 4           # auxiliary scalar features
+    num_domains: int = 86
+    num_actions: int = 11
+    d_domain: int = 16
+    d_action: int = 16
+    d_text: int = 256
+    d_feat: int = 32
+    d_hidden: int = 256
+    d_last: int = 128           # h(x,a) — the NeuralUCB feature width
+    d_gate: int = 64
+    huber_delta: float = 1.0
+
+    @property
+    def ucb_feature_dim(self) -> int:
+        return self.d_last + 1  # [h; 1] bias augmentation (paper §3.3)
+
+
+def _linear(key, n_in, n_out):
+    w = jax.random.normal(key, (n_in, n_out), jnp.float32)
+    return {"w": w / jnp.sqrt(n_in), "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def _apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_utilitynet(key, cfg: UtilityNetConfig) -> Dict:
+    ks = jax.random.split(key, 10)
+    return {
+        "text1": _linear(ks[0], cfg.emb_dim, cfg.d_text),
+        "text2": _linear(ks[1], cfg.d_text, cfg.d_text),
+        "emb_d": jax.random.normal(ks[2], (cfg.num_domains, cfg.d_domain)) * 1.0,
+        "feat": _linear(ks[3], cfg.feat_dim + cfg.d_domain, cfg.d_feat),
+        "emb_a": jax.random.normal(ks[4], (cfg.num_actions, cfg.d_action)) * 1.0,
+        "trunk1": _linear(ks[5], cfg.d_text + cfg.d_feat + cfg.d_action,
+                          cfg.d_hidden),
+        "trunk2": _linear(ks[6], cfg.d_hidden, cfg.d_last),
+        "u_head": _linear(ks[7], cfg.d_last, 1),
+        "gate1": _linear(ks[8], cfg.d_text + cfg.d_feat, cfg.d_gate),
+        "gate2": _linear(ks[9], cfg.d_gate, 1),
+    }
+
+
+def _context_encode(params, x_emb, x_feat, domain):
+    # normalize embeddings (pre-trained sentence encoders are ~unit norm;
+    # LayerNorm-free input standardization keeps the bandit features stable)
+    x_emb = x_emb / jnp.maximum(
+        jnp.linalg.norm(x_emb, axis=-1, keepdims=True), 1e-6)
+    h = jax.nn.gelu(_apply(params["text1"], x_emb))
+    h_emb = jax.nn.gelu(_apply(params["text2"], h))
+    e_d = params["emb_d"][domain]
+    h_feat = jax.nn.gelu(_apply(params["feat"],
+                                jnp.concatenate([x_feat, e_d], axis=-1)))
+    return h_emb, h_feat
+
+
+def utilitynet_apply(params: Dict, x_emb, x_feat, domain, action
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single (context, action) pair per row.
+
+    x_emb: (B, E); x_feat: (B, F); domain, action: (B,) int32.
+    Returns (mu (B,), h (B, d_last), gate_p (B,)).
+    """
+    h_emb, h_feat = _context_encode(params, x_emb, x_feat, domain)
+    e_a = params["emb_a"][action]
+    z_u = jnp.concatenate([h_emb, h_feat, e_a], axis=-1)
+    h = jax.nn.gelu(_apply(params["trunk1"], z_u))
+    h = jax.nn.gelu(_apply(params["trunk2"], h))
+    mu = _apply(params["u_head"], h)[..., 0]
+    z_g = jnp.concatenate([h_emb, h_feat], axis=-1)
+    g = jax.nn.gelu(_apply(params["gate1"], z_g))
+    gate_p = jax.nn.sigmoid(_apply(params["gate2"], g))[..., 0]
+    return mu, h, gate_p
+
+
+def utilitynet_all_actions(params: Dict, cfg: UtilityNetConfig,
+                           x_emb, x_feat, domain
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Score every action for each context.
+
+    Returns (mu (B, K), h (B, K, d_last), gate_p (B,)).
+    """
+    B = x_emb.shape[0]
+    h_emb, h_feat = _context_encode(params, x_emb, x_feat, domain)
+    ctx = jnp.concatenate([h_emb, h_feat], axis=-1)       # (B, C)
+    e_a = params["emb_a"]                                  # (K, A)
+    K = e_a.shape[0]
+    z_u = jnp.concatenate(
+        [jnp.broadcast_to(ctx[:, None], (B, K, ctx.shape[-1])),
+         jnp.broadcast_to(e_a[None], (B, K, e_a.shape[-1]))], axis=-1)
+    h = jax.nn.gelu(_apply(params["trunk1"], z_u))
+    h = jax.nn.gelu(_apply(params["trunk2"], h))
+    mu = _apply(params["u_head"], h)[..., 0]
+    g = jax.nn.gelu(_apply(params["gate1"], ctx))
+    gate_p = jax.nn.sigmoid(_apply(params["gate2"], g))[..., 0]
+    return mu, h, gate_p
+
+
+def huber(pred, target, delta: float = 1.0):
+    err = pred - target
+    abs_e = jnp.abs(err)
+    quad = jnp.minimum(abs_e, delta)
+    return 0.5 * quad ** 2 + delta * (abs_e - quad)
+
+
+def utilitynet_loss(params: Dict, cfg: UtilityNetConfig, batch: Dict
+                    ) -> Tuple[jax.Array, Dict]:
+    """batch: x_emb, x_feat, domain, action, reward, gate_label, gate_mask."""
+    mu, _, gate_p = utilitynet_apply(params, batch["x_emb"], batch["x_feat"],
+                                     batch["domain"], batch["action"])
+    l_u = jnp.mean(huber(mu, batch["reward"], cfg.huber_delta))
+    p = jnp.clip(gate_p, 1e-6, 1 - 1e-6)
+    y = batch["gate_label"]
+    bce = -(y * jnp.log(p) + (1 - y) * jnp.log(1 - p))
+    gm = batch.get("gate_mask", jnp.ones_like(y))
+    l_g = jnp.sum(bce * gm) / jnp.maximum(jnp.sum(gm), 1.0)
+    loss = l_u + 0.5 * l_g
+    return loss, {"loss_u": l_u, "loss_gate": l_g}

@@ -1,0 +1,14 @@
+from repro.data.routerbench import (
+    RouterBenchSim,
+    generate_routerbench,
+    MODEL_POOL,
+)
+from repro.data.encoders import ENCODERS, encode
+
+__all__ = [
+    "RouterBenchSim",
+    "generate_routerbench",
+    "MODEL_POOL",
+    "ENCODERS",
+    "encode",
+]

@@ -1,0 +1,49 @@
+"""Sentence-encoder stubs (DESIGN.md §5).
+
+The paper's encoders (all-MiniLM-L6-v2, all-mpnet-base-v2,
+Qwen3-Embedding-0.6B, multilingual-e5-large-instruct) are unavailable
+offline. Each stub maps the sample's latent topic vector through a fixed
+random projection into the encoder's native dimensionality, with an
+encoder-specific signal-to-noise ratio and a nuisance subspace, so that
+*relative* encoder quality mirrors the paper's Figure 3 finding
+(mpnet ~ MiniLM > qwen3 > e5-instruct)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    name: str
+    dim: int
+    signal: float      # how much of the topic survives
+    noise: float       # idiosyncratic per-sample noise
+    domain_leak: float # how much domain identity leaks into the embedding
+
+
+ENCODERS: Dict[str, EncoderSpec] = {
+    "all-MiniLM-L6-v2": EncoderSpec("all-MiniLM-L6-v2", 384, 1.0, 0.30, 0.30),
+    "all-mpnet-base-v2": EncoderSpec("all-mpnet-base-v2", 768, 1.0, 0.28, 0.30),
+    "Qwen3-Embedding-0.6B": EncoderSpec("Qwen3-Embedding-0.6B", 1024, 0.9,
+                                        0.45, 0.25),
+    "multilingual-e5-large-instruct": EncoderSpec(
+        "multilingual-e5-large-instruct", 1024, 0.55, 0.95, 0.10),
+}
+
+
+def encode(encoder: str, topic: np.ndarray, domain: np.ndarray,
+           seed: int = 0) -> np.ndarray:
+    """topic: (n, Z) latent; domain: (n,) ids -> (n, dim) embeddings."""
+    spec = ENCODERS[encoder]
+    rng = np.random.default_rng(hash(encoder) % (2 ** 31) + seed)
+    z_dim = topic.shape[1]
+    proj = rng.normal(size=(z_dim, spec.dim)) / np.sqrt(z_dim)
+    dom_proj = rng.normal(size=(domain.max() + 1, spec.dim)) * spec.domain_leak
+    emb = (spec.signal * topic @ proj
+           + dom_proj[domain]
+           + spec.noise * rng.normal(size=(len(topic), spec.dim)))
+    return (emb / np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-9)
+            ).astype(np.float32)

@@ -1,0 +1,15 @@
+from repro.distributed.api import (
+    logical_axis_rules,
+    shard,
+    logical_to_spec,
+    current_rules,
+    current_mesh,
+)
+
+__all__ = [
+    "logical_axis_rules",
+    "shard",
+    "logical_to_spec",
+    "current_rules",
+    "current_mesh",
+]

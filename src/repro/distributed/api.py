@@ -1,0 +1,81 @@
+"""Logical-axis sharding: models annotate activations/weights with *logical*
+axis names; a rules context maps them to physical mesh axes (or to nothing,
+on a single device). This is the flax `logical partitioning` pattern,
+re-implemented on plain pjit since flax is unavailable.
+
+Logical axes used across the zoo:
+  batch, seq, kv_seq, d_model, heads, kv_heads, head_dim, ffn, vocab,
+  experts, expert_ffn, ssm_heads, ssm_state, frames, patches, layers
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, Union[str, Tuple[str, ...], None]]]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def logical_axis_rules(rules: Dict[str, Union[str, Tuple[str, ...], None]],
+                       mesh=None):
+    """Activate a logical->physical axis mapping for the enclosed trace."""
+    prev = getattr(_state, "rules", None)
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.rules = rules
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules = prev
+        _state.mesh = prev_mesh
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def logical_to_spec(names: Sequence[Optional[str]],
+                    rules: Optional[Dict] = None) -> P:
+    rules = rules if rules is not None else current_rules()
+    if rules is None:
+        return P()
+    out = []
+    used = set()
+    for n in names:
+        if n is None:
+            out.append(None)
+            continue
+        axis = rules.get(n)
+        # a mesh axis may appear at most once per spec: first logical axis
+        # wins (e.g. context-parallel seq beats head_dim on the same axis)
+        flat = axis if isinstance(axis, tuple) else (axis,)
+        if any(a in used for a in flat if a):
+            out.append(None)
+            continue
+        used.update(a for a in flat if a)
+        out.append(axis)
+    # trim trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (no-op w/o rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_spec(names, rules)
+    mesh = current_mesh()
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,228 @@
+"""Per-architecture sharding rules (DESIGN.md §7).
+
+Two halves:
+
+* ``activation_rules(cfg, shape, mesh)`` — logical-axis -> mesh-axis map
+  consumed by the ``shard()`` constraints inside the model code. Chosen
+  per arch so every sharded dim divides the mesh axis (e.g. llama3.2-3b
+  has 24 heads, not divisible by 16-way model parallelism, so its TP axis
+  is head_dim instead of heads).
+* ``param_partition_specs(cfg, params)`` — PartitionSpec pytree for the
+  weights: column/row tensor parallelism over "model", FSDP over
+  ("pod","data"), expert parallelism over "model" for MoE tables.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import ModelConfig, InputShape
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0 and n > 0
+
+
+def activation_rules(cfg: ModelConfig, shape: InputShape, mesh,
+                     decode: bool = False) -> Dict[str, Axis]:
+    sizes = _mesh_axis_sizes(mesh)
+    mp = sizes.get("model", 1)
+    baxes = _batch_axes(mesh)
+    bsize = int(np.prod([sizes[a] for a in baxes]))
+
+    rules: Dict[str, Axis] = {}
+    rules["batch"] = baxes if _div(shape.global_batch, bsize) else None
+    rules["seq"] = None
+    rules["frames"] = None
+    rules["patches"] = None
+    rules["vocab"] = "model"  # vocab is padded to a /256 multiple
+    rules["ffn"] = "model" if _div(cfg.d_ff, mp) else None
+    rules["experts"] = "model" if _div(cfg.num_experts, mp) else None
+
+    hd = cfg.resolved_head_dim
+    rules["attn_q_seq"] = None
+    if not decode and _div(cfg.num_heads, mp):
+        rules["heads"] = "model"
+        rules["kv_heads"] = "model" if _div(cfg.num_kv_heads, mp) else None
+        rules["head_dim"] = None
+    elif not decode:
+        # head count does not divide the model axis (llama3.2-3b: 24 heads,
+        # gemma3: 8 heads): context-parallel attention — the score tensor
+        # is sharded over the QUERY-sequence dim instead of heads, the QKV
+        # projections stay TP over head_dim.
+        rules["heads"] = None
+        rules["kv_heads"] = None
+        rules["head_dim"] = "model" if _div(hd, mp) else None
+        rules["attn_q_seq"] = "model" if _div(shape.seq_len, mp) else None
+    else:
+        # decode: single-token queries; TP over head_dim keeps the KV cache
+        # sharded without head-divisibility constraints
+        rules["heads"] = None
+        rules["kv_heads"] = None
+        rules["head_dim"] = "model" if _div(hd, mp) else None
+
+    if cfg.ssm_state:
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nheads = d_inner // cfg.ssm_head_dim
+        if _div(nheads, mp):
+            rules["ssm_heads"] = "model"
+            rules["ssm_pdim"] = None
+        else:
+            rules["ssm_heads"] = None
+            rules["ssm_pdim"] = "model" if _div(cfg.ssm_head_dim, mp) else None
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs
+# ---------------------------------------------------------------------------
+
+
+def param_partition_specs(cfg: ModelConfig, params, mesh) -> Dict:
+    """PartitionSpec pytree matching ``params``' structure, keyed on the
+    conventional parameter names used across repro.models."""
+    sizes = _mesh_axis_sizes(mesh)
+    mp = sizes.get("model", 1)
+    fsdp = _batch_axes(mesh)
+    fsdp_size = int(np.prod([sizes[a] for a in fsdp])) if fsdp else 1
+
+    def spec_for(path: Tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        shp = leaf.shape
+        nlead = _num_stack_dims(path, shp, name)
+        lead = (None,) * nlead
+        core = shp[nlead:]
+
+        def fs(dim_idx: int) -> Axis:
+            return fsdp if fsdp and _div(core[dim_idx], fsdp_size) else None
+
+        def tp(dim_idx: int) -> Axis:
+            return "model" if _div(core[dim_idx], mp) else None
+
+        # ---- embeddings / heads -----------------------------------------
+        if name == "embed":
+            return P(tp(0), None)           # vocab-parallel embedding
+        if name == "unembed":
+            return P(fs(0), tp(1))          # column-parallel logits
+        # ---- attention ----------------------------------------------------
+        if name in ("wq", "wk", "wv"):
+            return P(*lead, fs(0), tp(1))
+        if name == "wo":
+            return P(*lead, tp(0), fs(1))
+        # ---- dense FFN ------------------------------------------------------
+        if name in ("wg", "wu") and len(core) == 2:
+            return P(*lead, fs(0), tp(1))
+        if name == "wd" and len(core) == 2:
+            return P(*lead, tp(0), fs(1))
+        # ---- MoE expert tables (E, D, F) / (E, F, D) -----------------------
+        if name in ("wg", "wu") and len(core) == 3:
+            return P(*lead, tp(0), fs(1), None)
+        if name == "wd" and len(core) == 3:
+            return P(*lead, tp(0), None, fs(2))
+        if name == "router":
+            return P(*lead, fs(0), None)
+        # ---- mamba ----------------------------------------------------------
+        if name == "in_proj":
+            return P(*lead, fs(0), tp(1))
+        if name == "out_proj":
+            return P(*lead, tp(0), fs(1))
+        if name in ("conv_w", "conv_b"):
+            return P(*lead, *((None,) * len(core)))
+        # ---- everything else (norms, gates, A_log, D, dt_bias, scalars) ----
+        return P(*lead, *((None,) * len(core)))
+
+    return _map_with_path(spec_for, params)
+
+
+def _num_stack_dims(path: Tuple[str, ...], shp, name: str) -> int:
+    """Count leading layer-stacking dims: any dict level named blocks /
+    enc_blocks / dec_blocks / mamba / moe / ffn_dense / self adds one."""
+    stacking = {"blocks", "enc_blocks", "dec_blocks"}
+    inner_stacking = {"mamba", "moe", "ffn_dense", "self"}
+    n = 0
+    for p in path[:-1]:
+        if p in stacking:
+            n += 1
+        elif p in inner_stacking:
+            n += 1
+    # guard against miscount: never exceed ndim - 2 for matrices
+    core_nd = 2 if name in ("wq", "wk", "wv", "wo", "wg", "wu", "wd",
+                            "in_proj", "out_proj", "router", "w") else None
+    if name in ("wg", "wu", "wd") and len(shp) - n == 3:
+        core_nd = 3
+    if core_nd is not None:
+        n = len(shp) - core_nd
+    return max(n, 0)
+
+
+def _map_with_path(fn, tree, path=()):
+    if isinstance(tree, dict):
+        return {k: _map_with_path(fn, v, path + (k,)) for k, v in tree.items()}
+    return fn(path, tree)
+
+
+# ---------------------------------------------------------------------------
+# input / state specs
+# ---------------------------------------------------------------------------
+
+
+def batch_partition_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                          batch_spec_tree) -> Dict:
+    baxes = _batch_axes(mesh)
+    sizes = _mesh_axis_sizes(mesh)
+    bsize = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+    b = baxes if _div(shape.global_batch, bsize) else None
+
+    def spec_for(path, leaf):
+        return P(b, *((None,) * (len(leaf.shape) - 1)))
+
+    return _map_with_path(spec_for, batch_spec_tree)
+
+
+def cache_partition_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                          cache_spec_tree) -> Dict:
+    """KV/state cache: batch over (pod, data) when divisible; the head_dim
+    (attention) / P dim (mamba) over "model"."""
+    sizes = _mesh_axis_sizes(mesh)
+    mp = sizes.get("model", 1)
+    baxes = _batch_axes(mesh)
+    bsize = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+    b = baxes if _div(shape.global_batch, bsize) else None
+    hd = cfg.resolved_head_dim
+    tp_hd = "model" if _div(hd, mp) else None
+    tp_p = "model" if _div(cfg.ssm_head_dim, mp) else None
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        nd = len(leaf.shape)
+        if name in ("pos", "offset"):
+            return P()
+        if name in ("k", "v"):
+            # (L?, B, KV, S, hd)
+            lead = (None,) * (nd - 4)
+            return P(*lead, b, None, None, tp_hd)
+        if name == "ssm":
+            # (L?, B, H, P, N)
+            lead = (None,) * (nd - 4)
+            return P(*lead, b, None, tp_p, None)
+        if name == "conv":
+            lead = (None,) * (nd - 3)
+            return P(*lead, b, None, None)
+        if name == "image_embed":
+            return P(b, None, None)
+        return P(*((None,) * nd))
+
+    return _map_with_path(spec_for, cache_spec_tree)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package has:
+  kernel.py — ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (padding, GQA plumbing, combines)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels target TPU (MXU-aligned 128-multiples, VMEM-resident blocks) and
+are VALIDATED in interpret mode on this CPU-only host. The pure-XLA model
+zoo paths in ``repro.models`` are numerically equivalent; on real TPU
+deployments the ops here replace them behind the ``use_pallas`` flag.
+
+Inventory:
+  flash_attention — prefill/train attention (causal + sliding window + GQA)
+  decode_attention — flash-decode: 1 query token over a long KV cache,
+      split-K partial-softmax with a jnp combine
+  mamba2_ssd — the quadratic within-chunk part of the SSD scan
+  ucb_score — the paper's serving-time hot loop: batched
+      mu + beta * sqrt(g^T A^-1 g) over (requests x actions)
+"""

@@ -1,0 +1,43 @@
+"""Public flash-decode op: pads, runs split-K partials, combines."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_padded
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s", "interpret"))
+def decode_attention(q, k, v, pos, *, window: int = 0, block_s: int = 1024,
+                     interpret: bool = True):
+    """q: (B, H, D); k, v: (B, KV, S, D); pos: scalar int32 (index of the
+    newest valid cache entry). Returns (B, H, D)."""
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    bs = min(block_s, max(128, S))
+    pad_s = (-S) % bs
+    pad_d = (-D) % 128
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    qg = q.reshape(B, KV, G, D)
+    if pad_d:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    m, l, acc = decode_attention_padded(qg, k, v, pos_arr, window=window,
+                                        block_s=bs, scale_dim=D,
+                                        interpret=interpret)
+    # combine splits: global logsumexp over the NS axis
+    m_g = jnp.max(m, axis=2, keepdims=True)                    # (B,KV,1,G)
+    w = jnp.exp(m - m_g)                                       # (B,KV,NS,G)
+    l_g = jnp.sum(l * w, axis=2)                               # (B,KV,G)
+    acc_g = jnp.sum(acc * w[..., None], axis=2)                # (B,KV,G,D)
+    out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
+    out = out[..., :D]
+    return out.reshape(B, H, D).astype(q.dtype)

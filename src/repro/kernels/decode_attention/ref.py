@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, *, window: int = 0):
+    """q: (B, H, D); k, v: (B, KV, S, D); pos: scalar int (last valid index).
+    Returns (B, H, D)."""
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32)) / math.sqrt(D)
+    k_pos = jnp.arange(S)
+    mask = k_pos <= pos
+    if window > 0:
+        mask &= k_pos > (pos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

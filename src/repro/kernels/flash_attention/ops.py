@@ -1,0 +1,37 @@
+"""Public flash-attention op: pads to MXU/block multiples, calls the Pallas
+kernel, unpads. Interpret mode on CPU; compiled on TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_padded
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=512,
+                    block_k=512, interpret=True):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D) -> (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, max(128, 1 << (Sq - 1).bit_length()))
+    bk = min(block_k, max(128, 1 << (Sk - 1).bit_length()))
+    qp = _pad_to(_pad_to(q, 2, bq), 3, 128)
+    kp = _pad_to(_pad_to(k, 2, bk), 3, 128)
+    vp = _pad_to(_pad_to(v, 2, bk), 3, 128)
+    out = flash_attention_padded(qp, kp, vp, causal=causal, window=window,
+                                 block_q=bq, block_k=bk, kv_len=Sk,
+                                 scale_dim=D, interpret=interpret)
+    return out[:, :, :Sq, :D]

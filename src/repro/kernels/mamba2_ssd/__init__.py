@@ -1,0 +1,3 @@
+from repro.kernels.mamba2_ssd.ops import ssd_chunk_scan
+
+__all__ = ["ssd_chunk_scan"]

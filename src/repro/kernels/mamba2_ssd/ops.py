@@ -1,0 +1,59 @@
+"""Public SSD op: chunk the sequence, run the Pallas within-chunk kernel,
+carry the inter-chunk state recurrence with ``lax.scan``."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_ssd.kernel import ssd_chunk_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
+                   init_state=None, interpret: bool = True):
+    """x: (B, L, H, P); dt: (B, L, H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B, L, N). Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    cs = min(chunk, L)
+    nc = -(-L // cs)
+    pad = nc * cs - L
+
+    def padl(a):
+        if pad == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[1] = (0, pad)
+        return jnp.pad(a, widths)
+
+    xc = padl(x).reshape(B, nc, cs, H, P)
+    dtc = padl(dt).reshape(B, nc, cs, H)
+    Bc = padl(Bm).reshape(B, nc, cs, N)
+    Cc = padl(Cm).reshape(B, nc, cs, N)
+
+    ydiag, cstate, expacum, decay = ssd_chunk_kernel(
+        xc, dtc, A, Bc, Cc, interpret=interpret)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    # inter-chunk: carry the state, emit the incoming state per chunk
+    def step(h, inp):
+        cst, dcy = inp  # (B,H,P,N), (B,H)
+        h_new = h * dcy[:, :, None, None] + cst
+        return h_new, h
+
+    (final, h_in) = jax.lax.scan(
+        step, init_state,
+        (cstate.transpose(1, 0, 2, 3, 4), decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B, NC, H, P, N) state BEFORE chunk
+
+    # y_off_t = exp_acum_t * C_t . h_in
+    y_off = jnp.einsum("bcsn,bchpn,bcsh->bcshp",
+                       Cc.astype(jnp.float32), h_in,
+                       expacum.astype(jnp.float32))
+    y = ydiag.astype(jnp.float32) + y_off
+    y = y.reshape(B, nc * cs, H, P)[:, :L]
+    return y.astype(x.dtype), final

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD scan: the naive O(L) sequential recurrence.
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t * x_t B_t^T
+    y_t = C_t h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, init_state=None):
+    """x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm, Cm: (B, L, N).
+    Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt.astype(jnp.float32) * A)  # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt.astype(jnp.float32),
+                         xt.astype(jnp.float32), bt.astype(jnp.float32))
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,3 @@
+from repro.kernels.ucb_score.ops import ucb_score
+
+__all__ = ["ucb_score"]

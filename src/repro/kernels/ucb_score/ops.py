@@ -1,0 +1,42 @@
+"""Public NeuralUCB scoring op: pads rows/features, runs the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ucb_score.kernel import ucb_score_padded
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def ucb_score(g, ainv, mu, beta, *, block_r: int = 512,
+              interpret: bool = True):
+    """g: (..., F); ainv: (F, F); mu: (...,); beta scalar.
+    Returns UCB scores with g's leading shape, f32.
+
+    Feature padding is safe: padded g columns are zero, and padding A^-1
+    with zeros (not identity) keeps the quadratic form unchanged.
+    """
+    lead = g.shape[:-1]
+    F = g.shape[-1]
+    R = 1
+    for d in lead:
+        R *= d
+    g2 = g.reshape(R, F)
+    mu2 = mu.reshape(R)
+
+    pad_f = (-F) % 128
+    br = min(block_r, max(8, R))
+    pad_r = (-R) % br
+    if pad_f:
+        g2 = jnp.pad(g2, ((0, 0), (0, pad_f)))
+        ainv = jnp.pad(ainv, ((0, pad_f), (0, pad_f)))
+    if pad_r:
+        g2 = jnp.pad(g2, ((0, pad_r), (0, 0)))
+        mu2 = jnp.pad(mu2, (0, pad_r))
+
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1)
+    out = ucb_score_padded(g2, ainv, mu2, beta_arr, block_r=br,
+                           interpret=interpret)
+    return out[:R].reshape(lead)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for NeuralUCB scoring."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ucb_score_ref(g, ainv, mu, beta):
+    """g: (..., F); ainv: (F, F); mu: (...,). Returns (...,) f32 scores."""
+    g32 = g.astype(jnp.float32)
+    quad = jnp.einsum("...i,ij,...j->...", g32, ainv.astype(jnp.float32), g32)
+    return mu.astype(jnp.float32) + beta * jnp.sqrt(jnp.maximum(quad, 0.0))

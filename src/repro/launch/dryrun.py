@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input shape x mesh) combination: build the
+production mesh from 512 placeholder host devices, lower the appropriate
+step function against ShapeDtypeStruct inputs (nothing is allocated),
+``.compile()`` it, and record memory analysis, cost analysis, and the
+collective schedule. Failures here are sharding bugs in the system.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all          # every combo, both meshes
+"""
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.common.config import INPUT_SHAPES, ModelConfig  # noqa: E402
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed import logical_axis_rules  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    activation_rules,
+    batch_partition_specs,
+    cache_partition_specs,
+    param_partition_specs,
+)
+from repro.launch import specs as SPECS  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as MODEL  # noqa: E402
+from repro.roofline import collective_bytes, roofline_terms  # noqa: E402
+from repro.roofline.hlo_cost import hlo_cost  # noqa: E402
+from repro.roofline.model import model_flops_estimate  # noqa: E402
+from repro.training import train_step as TS  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> bool:
+    """DESIGN.md §4 skip matrix: long_500k only for sub-quadratic archs."""
+    if shape_name == "long_500k":
+        return cfg.supports_long_decode
+    return True
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                donate: bool = True):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    decode = shape.kind == "decode"
+    rules = activation_rules(cfg, shape, mesh, decode=decode)
+
+    pspec_tree = SPECS.param_specs(cfg)
+    pparts = param_partition_specs(cfg, pspec_tree, mesh)
+
+    with logical_axis_rules(rules, mesh):
+        if shape.kind == "train":
+            batch = SPECS.train_input_specs(cfg, shape)
+            bparts = batch_partition_specs(cfg, shape, mesh, batch)
+            state = jax.eval_shape(
+                lambda: TS.make_train_state(jax.random.PRNGKey(0), cfg))
+            state_parts = {
+                "params": pparts,
+                "opt": {"mu": pparts, "nu": pparts, "count": P()},
+                "step": P(),
+            }
+            data_shards = mesh.devices.size // mesh.shape["model"]
+            accum = TS.default_accum_steps(cfg, shape.global_batch,
+                                           shape.seq_len, data_shards)
+            fn = functools.partial(TS.train_step, cfg=cfg,
+                                   accum_steps=accum)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_named(mesh, state_parts), _named(mesh, bparts)),
+                out_shardings=(_named(mesh, state_parts), None),
+                donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            batch = SPECS.prefill_input_specs(cfg, shape)
+            bparts = batch_partition_specs(cfg, shape, mesh, batch)
+
+            def prefill_fn(params, b):
+                logits, _ = MODEL.forward_train(params, cfg, b)
+                return logits
+
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(_named(mesh, pparts),
+                                           _named(mesh, bparts)))
+            lowered = jitted.lower(pspec_tree, batch)
+        else:  # decode
+            cache, token = SPECS.decode_input_specs(cfg, shape)
+            cparts = cache_partition_specs(cfg, shape, mesh, cache)
+            tok_part = batch_partition_specs(cfg, shape, mesh,
+                                             {"t": token})["t"]
+
+            def decode_fn(params, c, t):
+                return MODEL.decode_step(params, cfg, c, t)
+
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(_named(mesh, pparts), _named(mesh, cparts),
+                              NamedSharding(mesh, tok_part)),
+                out_shardings=(None, _named(mesh, cparts)),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(pspec_tree, cache, token)
+
+        compiled = lowered.compile()
+    return cfg, shape, mesh, lowered, compiled
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              verbose: bool = True) -> dict:
+    t0 = time.time()
+    cfg, shape, mesh, lowered, compiled = lower_combo(
+        arch, shape_name, multi_pod)
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # loop-aware HLO cost (xla cost_analysis counts scan bodies once —
+    # see repro/roofline/hlo_cost.py)
+    own = hlo_cost(hlo)
+
+    n_dev = mesh.devices.size
+    flops_dev = float(own["flops"])
+    bytes_dev = float(own["bytes"])
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mflops = model_flops_estimate(cfg.param_count(),
+                                  cfg.active_param_count(), tokens,
+                                  shape.kind)
+    terms = roofline_terms(flops_dev, bytes_dev, coll.get("total", 0.0),
+                           model_flops=mflops, num_devices=n_dev)
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": n_dev,
+        "compile_s": round(compile_s, 1),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev,
+                 "xla_flops_loop_unaware": float(cost.get("flops", 0.0)),
+                 "xla_bytes_loop_unaware": float(
+                     cost.get("bytes accessed", 0.0))},
+        "collectives": coll,
+        "roofline": terms,
+    }
+    if verbose:
+        print(json.dumps(report, indent=2, default=float))
+        print(f"memory_analysis: {mem}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON report here")
+    args = ap.parse_args()
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape_name in INPUT_SHAPES:
+                if not shape_supported(cfg, shape_name):
+                    print(f"SKIP {arch} x {shape_name} (full attention at "
+                          f"500k decode unsupported by design)")
+                    continue
+                for mp in (False, True):
+                    tag = f"{arch}_{shape_name}_{'2x16x16' if mp else '16x16'}"
+                    path = os.path.join(ARTIFACT_DIR, tag + ".json")
+                    if os.path.exists(path):
+                        print(f"CACHED {tag}")
+                        continue
+                    try:
+                        rep = run_combo(arch, shape_name, mp, verbose=False)
+                        with open(path, "w") as f:
+                            json.dump(rep, f, indent=1, default=float)
+                        r = rep["roofline"]
+                        print(f"OK {tag}: compile={rep['compile_s']}s "
+                              f"dominant={r['dominant']} "
+                              f"compute={r['compute_s']:.4f}s "
+                              f"memory={r['memory_s']:.4f}s "
+                              f"collective={r['collective_s']:.4f}s",
+                              flush=True)
+                    except Exception as e:  # noqa: BLE001
+                        failures.append((tag, repr(e)))
+                        print(f"FAIL {tag}: {e}", flush=True)
+                        traceback.print_exc()
+        if failures:
+            print(f"{len(failures)} failures")
+            sys.exit(1)
+        print("all dry-runs passed")
+        return
+
+    rep = run_combo(args.arch, args.shape, args.multi_pod)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh builders (deliverable (e) step 1).
+
+Target: TPU v5e pods; 256 chips per pod in a 16x16 (data, model) layout,
+and 2 pods = 512 chips with a leading "pod" axis (pure data parallelism
+across pods — ICI within a pod, DCN across pods).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over the actually-available local devices (tests/examples)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

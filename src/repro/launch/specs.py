@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these; nothing is allocated (deliverable (e), step 2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, InputShape
+from repro.models import model as MODEL
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.arch_type == "audio":
+        batch["audio_embed"] = sds((B, cfg.num_audio_frames, cfg.d_model),
+                                   cfg.dtype)
+    if cfg.arch_type == "vlm":
+        batch["image_embed"] = sds((B, cfg.num_image_tokens, cfg.d_model),
+                                   cfg.dtype)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.arch_type == "audio":
+        batch["audio_embed"] = sds((B, cfg.num_audio_frames, cfg.d_model),
+                                   cfg.dtype)
+    if cfg.arch_type == "vlm":
+        batch["image_embed"] = sds((B, cfg.num_image_tokens, cfg.d_model),
+                                   cfg.dtype)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape
+                       ) -> Tuple[Dict, Dict]:
+    """Returns (cache_spec_pytree, token_spec). serve_step consumes ONE new
+    token against a KV/state cache of ``shape.seq_len``."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def build():
+        memory = None
+        if cfg.arch_type == "audio":
+            memory = jnp.zeros((B, cfg.num_audio_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        if cfg.arch_type == "vlm":
+            memory = jnp.zeros((B, cfg.num_image_tokens, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+        # cross K/V for whisper need params; use a param-free variant here:
+        cache = MODEL.init_cache(cfg, B, S, memory=memory, params=None)
+        if cfg.arch_type == "audio":
+            hd = cfg.resolved_head_dim
+            cache["cross"] = {
+                "k": jnp.zeros((cfg.num_layers, B, cfg.num_kv_heads,
+                                cfg.num_audio_frames, hd), jnp.dtype(cfg.dtype)),
+                "v": jnp.zeros((cfg.num_layers, B, cfg.num_kv_heads,
+                                cfg.num_audio_frames, hd), jnp.dtype(cfg.dtype)),
+            }
+        return cache
+
+    cache_spec = jax.eval_shape(build)
+    token_spec = sds((B, 1), jnp.int32)
+    return cache_spec, token_spec
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(
+        lambda: MODEL.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,9 @@
+from repro.models.model import (
+    init_params,
+    forward_train,
+    init_cache,
+    decode_step,
+    lm_loss,
+)
+
+__all__ = ["init_params", "forward_train", "init_cache", "decode_step", "lm_loss"]

@@ -1,0 +1,4 @@
+from repro.roofline.hlo import collective_bytes, parse_collectives
+from repro.roofline.model import roofline_terms, HW_V5E
+
+__all__ = ["collective_bytes", "parse_collectives", "roofline_terms", "HW_V5E"]

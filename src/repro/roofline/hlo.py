@@ -1,0 +1,153 @@
+"""Parse collective ops out of optimized (post-SPMD) HLO text.
+
+cost_analysis() has no collective accounting, so we regex the compiled
+module: every ``all-reduce``/``all-gather``/``reduce-scatter``/
+``all-to-all``/``collective-permute`` op line carries its result dtype and
+shape; per-device traffic uses the standard ring-collective factors.
+
+Collectives inside ``while`` bodies (the scan-over-layers pattern) execute
+once per trip, so we reconstruct the computation call graph, extract each
+while loop's trip count from its condition computation (the comparison
+constant), and multiply accordingly.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+_TUPLE_ELEM_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# traffic factor applied to the RESULT bytes (ring algorithms, large groups)
+_FACTORS = {
+    "all-reduce": 2.0,        # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 3.0,    # operand is n x result; ~operand bytes move
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->",
+                          re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:call|conditional)\([^)]*\),?.*?to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """name -> computation body text (brace-delimited blocks)."""
+    comps: Dict[str, str] = {}
+    pos = 0
+    for m in _COMP_HDR_RE.finditer(hlo_text):
+        start = hlo_text.find("{", m.end())
+        if start < 0:
+            continue
+        depth = 0
+        i = start
+        while i < len(hlo_text):
+            if hlo_text[i] == "{":
+                depth += 1
+            elif hlo_text[i] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        comps[m.group(1)] = hlo_text[start:i + 1]
+    return comps
+
+
+def _own_collectives(body: str) -> List[Tuple[str, int]]:
+    out = []
+    for m in _OP_RE.finditer(body):
+        tuple_body, dtype, dims, kind, phase = m.groups()
+        if phase == "-done":
+            continue  # -start carries the payload; avoid double count
+        if tuple_body is not None:
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _TUPLE_ELEM_RE.findall(tuple_body))
+        else:
+            total = _shape_bytes(dtype, dims)
+        out.append((kind, total))
+    return out
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int, int]]:
+    """Returns [(kind, result_bytes, multiplicity)] with while-loop trip
+    counts folded into multiplicity."""
+    comps = _split_computations(hlo_text)
+    if not comps:
+        return [(k, b, 1) for k, b in _own_collectives(hlo_text)]
+
+    # locate the entry computation: the one that is not referenced anywhere
+    referenced = set()
+    edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            trips = 1
+            if cond in comps:
+                consts = [int(c) for c in _CONST_RE.findall(comps[cond])]
+                if consts:
+                    trips = max(consts)
+            edges[name].append((wbody, max(trips, 1)))
+            referenced.update((cond, wbody))
+        for m in _CALL_RE.finditer(body):
+            edges[name].append((m.group(1), 1))
+            referenced.add(m.group(1))
+
+    entries = [n for n in comps if n not in referenced]
+
+    memo: Dict[str, List[Tuple[str, int, int]]] = {}
+
+    def collect(name: str, depth=0) -> List[Tuple[str, int, int]]:
+        if name in memo:
+            return memo[name]
+        if depth > 50:
+            return []
+        res = [(k, b, 1) for k, b in _own_collectives(comps.get(name, ""))]
+        for child, trips in edges.get(name, ()):  # noqa: B007
+            if child == name:
+                continue
+            for k, b, mult in collect(child, depth + 1):
+                res.append((k, b, mult * trips))
+        memo[name] = res
+        return res
+
+    out: List[Tuple[str, int, int]] = []
+    for e in entries:
+        out.extend(collect(e))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Aggregate per-device collective traffic in bytes by kind (+ total),
+    with ring factors and loop trip counts applied."""
+    agg: Dict[str, float] = defaultdict(float)
+    count = 0
+    for kind, nbytes, mult in parse_collectives(hlo_text):
+        agg[kind] += nbytes * mult * _FACTORS[kind]
+        count += mult
+    agg["total"] = float(sum(v for k, v in agg.items() if k != "total"))
+    agg["num_ops"] = float(count)
+    return dict(agg)

@@ -1,0 +1,67 @@
+"""Three-term roofline model (deliverable (g)).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (values from the task spec).
+
+cost_analysis() of the SPMD-partitioned module reports per-device FLOPs
+and bytes, so no further division by chip count is needed; the "chips x
+peak" denominators in the spec reduce to per-chip peaks against per-chip
+numerators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float       # FLOP/s (bf16)
+    hbm_bw: float           # bytes/s
+    link_bw: float          # bytes/s per ICI link
+    hbm_bytes: float        # capacity
+
+
+HW_V5E = Hardware("tpu-v5e", 197e12, 819e9, 50e9, 16e9)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float,
+                   hw: Hardware = HW_V5E,
+                   model_flops: Optional[float] = None,
+                   num_devices: int = 1) -> Dict[str, float]:
+    compute_s = flops_per_device / hw.peak_flops
+    memory_s = bytes_per_device / hw.hbm_bw
+    collective_s = collective_bytes_per_device / hw.link_bw
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    out = dict(terms)
+    out["dominant"] = dominant
+    out["step_lower_bound_s"] = bound_s
+    if model_flops is not None and flops_per_device > 0:
+        total_hlo_flops = flops_per_device * num_devices
+        out["model_flops"] = model_flops
+        out["useful_flop_fraction"] = model_flops / total_hlo_flops
+        # MFU-at-roofline: useful FLOPs / (time lower bound x fleet peak)
+        out["mfu_upper_bound"] = model_flops / (
+            bound_s * hw.peak_flops * num_devices)
+    return out
+
+
+def model_flops_estimate(param_count: int, active_param_count: int,
+                         tokens: int, kind: str) -> float:
+    """6 N D for training, 2 N D for a forward/prefill/decode pass (per the
+    standard transformer FLOPs accounting); MoE uses active params."""
+    n = active_param_count
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

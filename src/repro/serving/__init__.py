@@ -1,0 +1,5 @@
+from repro.serving.engine import ServingEngine
+from repro.serving.batcher import RequestBatcher, Request
+from repro.serving.routed import RoutedServingPool
+
+__all__ = ["ServingEngine", "RequestBatcher", "Request", "RoutedServingPool"]

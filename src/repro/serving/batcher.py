@@ -1,0 +1,54 @@
+"""Request batching: group pending requests per target model, pad to the
+engine's batch granularity, preserve submission order within a group."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray                      # (S,) prompt token ids
+    x_emb: Optional[np.ndarray] = None      # router features
+    x_feat: Optional[np.ndarray] = None
+    domain: int = 0
+    sample_idx: int = -1                    # replay-table row (quality/cost)
+    rid: int = dataclasses.field(default_factory=lambda: next(_counter))
+
+
+class RequestBatcher:
+    def __init__(self, max_batch: int = 8, pad_to_multiple: int = 4,
+                 pad_token: int = 0):
+        self.max_batch = max_batch
+        self.pad_to_multiple = pad_to_multiple
+        self.pad_token = pad_token
+        self.queues: Dict[int, List[Request]] = defaultdict(list)
+
+    def submit(self, target: int, req: Request) -> None:
+        self.queues[target].append(req)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def next_batch(self):
+        """Pop up to max_batch requests for the fullest queue. Returns
+        (target, requests, padded_tokens (B, S)) or None."""
+        if not self.pending():
+            return None
+        target = max(self.queues, key=lambda t: len(self.queues[t]))
+        q = self.queues[target]
+        reqs, self.queues[target] = q[:self.max_batch], q[self.max_batch:]
+        if not self.queues[target]:
+            del self.queues[target]
+        max_len = max(len(r.tokens) for r in reqs)
+        max_len = -(-max_len // self.pad_to_multiple) * self.pad_to_multiple
+        toks = np.full((len(reqs), max_len), self.pad_token, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :len(r.tokens)] = r.tokens
+        return target, reqs, toks

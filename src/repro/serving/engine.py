@@ -1,0 +1,83 @@
+"""Single-model serving engine: prefill + jit'd decode loop over the KV/state
+cache, greedy or temperature sampling. CPU-runnable with reduced configs;
+the same step functions are what the dry-run lowers at production shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import model as MODEL
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Optional[Dict] = None,
+                 seed: int = 0, max_seq: int = 256):
+        self.cfg = cfg
+        self.max_seq = max_seq
+        if params is None:
+            params = MODEL.init_params(jax.random.PRNGKey(seed), cfg)
+        self.params = params
+        self._decode = jax.jit(
+            lambda p, c, t: MODEL.decode_step(p, cfg, c, t))
+        self._forward = jax.jit(
+            lambda p, b: MODEL.forward_train(p, cfg, b)[0])
+
+    def prefill(self, tokens: jnp.ndarray, memory: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+        """tokens (B, S) -> (next-token logits (B, V), cache primed to S).
+
+        Prefill writes the prompt K/V into the cache by replaying the prompt
+        through decode steps of width 1 (correct, if not the fast path; the
+        fused prefill kernel is the flash_attention op on TPU)."""
+        B, S = tokens.shape
+        if self.cfg.arch_type == "audio":
+            if memory is None:
+                memory = jnp.zeros((B, self.cfg.num_audio_frames,
+                                    self.cfg.d_model),
+                                   jnp.dtype(self.cfg.dtype))
+            memory = MODEL.encode_audio(self.params, self.cfg, memory)
+        if self.cfg.arch_type == "vlm" and memory is None:
+            memory = jnp.zeros((B, self.cfg.num_image_tokens,
+                                self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+        cache = MODEL.init_cache(self.cfg, B, self.max_seq, memory=memory,
+                                 params=self.params)
+        logits = None
+        for i in range(S):
+            logits, cache = self._decode(self.params, cache, tokens[:, i:i + 1])
+        return logits[:, -1], cache
+
+    def generate(self, tokens: jnp.ndarray, max_new: int = 16,
+                 memory: Optional[jnp.ndarray] = None,
+                 temperature: float = 0.0, seed: int = 0
+                 ) -> Tuple[jnp.ndarray, int]:
+        """Greedy/temperature generation. Returns (B, max_new) new tokens and
+        the number of decode steps executed."""
+        B = tokens.shape[0]
+        logits, cache = self.prefill(tokens, memory=memory)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        cur = None
+        steps = 0
+        vocab = self.cfg.vocab_size
+        for i in range(max_new):
+            if cur is None:
+                nxt_logits = logits
+            else:
+                nxt, cache = self._decode(self.params, cache, cur)
+                nxt_logits = nxt[:, -1]
+                steps += 1
+            nxt_logits = jnp.where(
+                jnp.arange(nxt_logits.shape[-1]) < vocab, nxt_logits, -1e30)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                cur = jax.random.categorical(
+                    sub, nxt_logits / temperature, axis=-1)[:, None]
+            else:
+                cur = jnp.argmax(nxt_logits, axis=-1)[:, None]
+            out.append(cur)
+        return jnp.concatenate(out, axis=1), steps

@@ -1,0 +1,10 @@
+from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.training.schedule import cosine_schedule, linear_warmup
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup",
+]

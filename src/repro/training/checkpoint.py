@@ -1,0 +1,67 @@
+"""Checkpointing: flatten a pytree of arrays into a .npz with path-encoded
+keys (no orbax/flax available offline). Handles nested dicts/lists/tuples
+and scalar leaves; dtypes round-trip exactly."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz cannot represent bfloat16 natively; store a uint16 view tagged in the
+# key and restore the view on load.
+_BF16_TAG = "@bf16"
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "T" if isinstance(tree, tuple) else "L"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{tag}{i}/"))
+    else:
+        arr = np.asarray(tree)
+        key = prefix.rstrip("/")
+        if arr.dtype == ml_dtypes.bfloat16:
+            out[key + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str) -> Any:
+    data = dict(np.load(path, allow_pickle=False))
+    root: Dict = {}
+    for key, val in data.items():
+        if key.endswith(_BF16_TAG):
+            key = key[: -len(_BF16_TAG)]
+            val = val.view(ml_dtypes.bfloat16)
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _rebuild(root)
+
+
+def _rebuild(node):
+    if not isinstance(node, dict):
+        return node
+    keys = list(node)
+    if keys and all(k.startswith("__L") or k.startswith("__T") for k in keys):
+        tup = keys[0].startswith("__T")
+        items = sorted(node.items(), key=lambda kv: int(kv[0][3:]))
+        seq = [_rebuild(v) for _, v in items]
+        return tuple(seq) if tup else seq
+    return {k: _rebuild(v) for k, v in node.items()}

@@ -1,0 +1,65 @@
+"""AdamW + gradient clipping, written on plain pytrees (no optax here).
+
+State layout: {"mu": tree, "nu": tree, "count": scalar} — f32 moments
+regardless of param dtype (bf16 training keeps f32 optimizer state, the
+standard mixed-precision recipe; the dry-run memory analysis accounts it).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> Dict[str, Any]:
+    """``moment_dtype=jnp.bfloat16`` halves optimizer-state HBM (the
+    EXPERIMENTS.md §Perf "next lever" for the 123B/398B single-pod fit);
+    the update math still runs in f32."""
+    return {
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (new_params, new_state). ``lr`` may be a scalar or a
+    schedule value already resolved by the caller."""
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(g, m, v, p):
+        mdt = m.dtype
+        g32 = g.astype(jnp.float32)
+        m = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
+        v = b2 * v.astype(jnp.float32) + (1.0 - b2) * (g32 * g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m.astype(mdt), v.astype(mdt)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "count": count}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn

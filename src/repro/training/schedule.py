@@ -1,0 +1,19 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr: float, warmup_steps: int):
+    frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    return base_lr * frac
+
+
+def cosine_schedule(step, base_lr: float, total_steps: int,
+                    warmup_steps: int = 0, min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(warmup_steps, 1), 1.0) if warmup_steps else 1.0
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

@@ -1,0 +1,22 @@
+import os
+
+# Tests run on the single real CPU device; the 512-device override is ONLY
+# for the dry-run entry point (see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def reduced_f32(arch: str):
+    from repro.configs import get_config
+
+    return dataclasses.replace(get_config(arch).reduced(), dtype="float32")

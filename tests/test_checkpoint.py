@@ -1,0 +1,26 @@
+"""Checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                   "b": jnp.zeros((3,), jnp.bfloat16)},
+        "opt": {"mu": [jnp.ones((2,)), jnp.full((1,), 7, jnp.int32)],
+                "count": jnp.int32(5)},
+    }
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, tree)
+    back = load_checkpoint(path)
+    flat1, td1 = jax.tree.flatten(tree)
+    flat2, td2 = jax.tree.flatten(back)
+    assert td1 == td2
+    for a, b in zip(flat1, flat2):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,76 @@
+"""Synthetic RouterBench substrate: shapes, determinism, calibration bands."""
+import numpy as np
+import pytest
+
+from repro.data.encoders import ENCODERS, encode
+from repro.data.routerbench import (
+    N_DOMAINS,
+    N_MODELS,
+    N_SAMPLES,
+    RouterBenchSim,
+    generate_routerbench,
+)
+
+
+@pytest.fixture(scope="module")
+def env():
+    return RouterBenchSim(seed=0, n_samples=8000)
+
+
+def test_published_shape_defaults():
+    assert N_SAMPLES == 36_497 and N_DOMAINS == 86 and N_MODELS == 11
+
+
+def test_generator_shapes(env):
+    d = env.data
+    n = env.n
+    assert d["quality"].shape == (n, 11)
+    assert d["cost"].shape == (n, 11)
+    assert d["domain"].max() < 86
+    assert np.all((d["quality"] >= 0) & (d["quality"] <= 1))
+    assert np.all(d["cost"] > 0)
+
+
+def test_deterministic():
+    a = generate_routerbench(seed=3, n_samples=500)
+    b = generate_routerbench(seed=3, n_samples=500)
+    np.testing.assert_array_equal(a["quality"], b["quality"])
+    c = generate_routerbench(seed=4, n_samples=500)
+    assert not np.array_equal(a["quality"], c["quality"])
+
+
+def test_reward_table_matches_eq1(env):
+    import jax.numpy as jnp
+
+    from repro.core.reward import utility_reward
+
+    i, k = 17, 3
+    r = float(utility_reward(env.data["quality"][i, k],
+                             env.data["cost"][i, k], env.c_max))
+    assert abs(r - env.reward_table[i, k]) < 1e-6
+
+
+def test_slices_partition(env):
+    all_idx = np.sort(np.concatenate(env.slices))
+    np.testing.assert_array_equal(all_idx, np.arange(env.n))
+
+
+def test_encoders_dims(env):
+    for name, spec in ENCODERS.items():
+        e = encode(name, env.data["topic"][:100], env.data["domain"][:100])
+        assert e.shape == (100, spec.dim)
+        np.testing.assert_allclose(np.linalg.norm(e, axis=1), 1.0, atol=1e-5)
+
+
+def test_calibration_bands(env):
+    """The paper-anchored operating point (see DESIGN.md §5)."""
+    mr = env.mean_reward()
+    assert 0.29 <= mr.mean() <= 0.36, "random-policy band"
+    mc = mr[env.min_cost_action()]
+    assert 0.49 <= mc <= 0.55, "min-cost band"
+    # max-quality reference: high quality, high cost
+    aq = env.data["quality"].argmax(1)
+    q = env.data["quality"][np.arange(env.n), aq].mean()
+    assert q > 0.8
+    # oracle leaves headroom above min-cost
+    assert env.reward_table.max(1).mean() > mc + 0.12

@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba2_ssd.ops import ssd_chunk_scan
+from repro.kernels.mamba2_ssd.ref import ssd_ref
+from repro.kernels.ucb_score.ops import ucb_score
+from repro.kernels.ucb_score.ref import ucb_score_ref
+
+ATOL = {jnp.float32: 3e-5, jnp.bfloat16: 5e-2}
+
+
+@pytest.mark.parametrize("B,H,KV,Sq,Sk,D", [
+    (2, 4, 2, 256, 256, 64),
+    (1, 8, 4, 300, 300, 128),
+    (2, 2, 2, 128, 512, 64),
+    (1, 4, 1, 130, 260, 80),   # ragged + padded head_dim + MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, Sq, Sk, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, KV, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, KV, Sk, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=128, block_k=128)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=ATOL[dtype], rtol=ATOL[dtype])
+
+
+@pytest.mark.parametrize("B,H,KV,S,D,pos,window", [
+    (2, 8, 4, 512, 64, 300, 0),
+    (1, 16, 8, 2048, 128, 2047, 0),
+    (2, 4, 4, 384, 64, 100, 64),
+    (1, 8, 8, 256, 96, 0, 0),   # first decode step, padded head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, KV, S, D, pos, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, D), dtype)
+    out = decode_attention(q, k, v, pos, window=window, block_s=128)
+    ref = decode_attention_ref(q, k, v, pos, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=ATOL[dtype], rtol=ATOL[dtype])
+
+
+@pytest.mark.parametrize("B,L,H,P,N,cs", [
+    (2, 128, 8, 64, 32, 32),
+    (1, 100, 4, 32, 64, 32),   # ragged length
+    (2, 64, 16, 64, 128, 64),
+    (1, 96, 24, 64, 128, 32),  # mamba2-130m head count (HB=8 path)
+])
+def test_ssd_sweep(B, L, H, P, N, cs):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y, st = ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=cs)
+    yr, str_ = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_ssd_carries_state_across_calls():
+    """Chunked scan with an initial state == one long scan split in two."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, L, H, P, N = 1, 64, 4, 32, 32
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y_full, st_full = ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=16)
+    y1, st1 = ssd_chunk_scan(x[:, :32], dt[:, :32], A, Bm[:, :32],
+                             Cm[:, :32], chunk=16)
+    y2, st2 = ssd_chunk_scan(x[:, 32:], dt[:, 32:], A, Bm[:, 32:],
+                             Cm[:, 32:], chunk=16, init_state=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("T,K,F", [(64, 11, 129), (128, 11, 257), (7, 3, 50)])
+@pytest.mark.parametrize("beta", [0.0, 1.0, 2.5])
+def test_ucb_score_sweep(T, K, F, beta):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    g = jax.random.normal(ks[0], (T, K, F), jnp.float32)
+    Lm = jax.random.normal(ks[1], (F, F)) * 0.1
+    ainv = Lm @ Lm.T + jnp.eye(F)
+    mu = jax.random.normal(ks[2], (T, K))
+    out = ucb_score(g, ainv, mu, beta, block_r=128)
+    ref = ucb_score_ref(g, ainv, mu, beta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)

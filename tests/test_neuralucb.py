@@ -1,0 +1,78 @@
+"""NeuralUCB statistics: Sherman-Morrison, rebuild, UCB properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.neuralucb import (
+    augment,
+    init_ainv,
+    rebuild_ainv,
+    sherman_morrison_batch,
+    sherman_morrison_update,
+    ucb_bonus,
+)
+
+
+def _rand_gs(seed, n, d):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * 0.5
+
+
+def test_sherman_morrison_matches_direct_inverse():
+    d, n = 16, 40
+    gs = _rand_gs(0, n, d)
+    ainv = init_ainv(d, ridge_lambda0=1.0)
+    ainv = sherman_morrison_batch(ainv, gs)
+    A = jnp.eye(d) + gs.T @ gs
+    np.testing.assert_allclose(np.asarray(ainv @ A), np.eye(d), atol=1e-3)
+
+
+def test_rebuild_matches_direct_inverse():
+    d, n = 12, 100
+    gs = _rand_gs(1, n, d)
+    ainv = rebuild_ainv(gs, ridge_lambda0=2.0)
+    A = 2.0 * jnp.eye(d) + gs.T @ gs
+    np.testing.assert_allclose(np.asarray(ainv @ A), np.eye(d), atol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 60))
+def test_ainv_stays_symmetric_pd(seed, n):
+    d = 8
+    gs = _rand_gs(seed, n, d)
+    ainv = sherman_morrison_batch(init_ainv(d), gs)
+    a = np.asarray(ainv)
+    np.testing.assert_allclose(a, a.T, atol=1e-5)
+    eig = np.linalg.eigvalsh(a)
+    assert np.all(eig > 0)
+
+
+def test_bonus_shrinks_with_observations():
+    d = 8
+    g = jnp.ones((d,)) / np.sqrt(d)
+    ainv0 = init_ainv(d)
+    b0 = float(ucb_bonus(ainv0, g))
+    ainv1 = sherman_morrison_update(ainv0, g)
+    b1 = float(ucb_bonus(ainv1, g))
+    assert b1 < b0
+
+
+@settings(max_examples=30, deadline=None)
+@given(beta1=st.floats(0.1, 2.0), beta2=st.floats(2.01, 10.0))
+def test_ucb_score_monotone_in_beta(beta1, beta2):
+    """s = mu + beta*bonus: larger beta never lowers any score."""
+    d = 8
+    h = jax.random.normal(jax.random.PRNGKey(0), (5, 3, d))
+    g = augment(h)
+    ainv = init_ainv(d + 1)
+    mu = jnp.zeros((5, 3))
+    s1 = mu + beta1 * ucb_bonus(ainv, g)
+    s2 = mu + beta2 * ucb_bonus(ainv, g)
+    assert bool(jnp.all(s2 >= s1))
+
+
+def test_augment_unit_norm():
+    h = jax.random.normal(jax.random.PRNGKey(2), (7, 16)) * 30.0
+    g = augment(h)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(g), axis=-1), 1.0,
+                               atol=1e-5)

@@ -1,0 +1,70 @@
+"""Optimizer math vs closed form; schedules; clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.training.schedule import cosine_schedule, linear_warmup
+
+
+def test_adamw_first_step_closed_form():
+    """After one step from zero moments, AdamW moves by ~lr*sign(g)
+    (bias-corrected m/sqrt(v) = g/|g|)."""
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.5, -0.1, 2.0])}
+    st = adamw_init(p)
+    new_p, st2 = adamw_update(g, st, p, lr=0.01, weight_decay=0.0)
+    expected = np.array([1.0, -2.0, 3.0]) - 0.01 * np.sign([0.5, -0.1, 2.0])
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expected, atol=1e-4)
+    assert int(st2["count"]) == 1
+
+
+def test_adamw_weight_decay_shrinks():
+    p = {"w": jnp.array([10.0])}
+    g = {"w": jnp.array([0.0])}
+    st = adamw_init(p)
+    new_p, _ = adamw_update(g, st, p, lr=0.1, weight_decay=0.1)
+    assert float(new_p["w"][0]) < 10.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}  # norm 5
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 5.0) < 1e-5
+    total = np.sqrt(float(clipped["a"][0]) ** 2 + float(clipped["b"][0]) ** 2)
+    assert abs(total - 1.0) < 1e-5
+
+
+def test_clip_noop_when_small():
+    g = {"a": jnp.array([0.3])}
+    clipped, _ = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.3], atol=1e-6)
+
+
+def test_schedules():
+    assert float(linear_warmup(jnp.int32(5), 1.0, 10)) == 0.5
+    assert float(cosine_schedule(jnp.int32(0), 1.0, 100, warmup_steps=10)) == 0.0
+    mid = float(cosine_schedule(jnp.int32(10), 1.0, 100, warmup_steps=10))
+    assert abs(mid - 1.0) < 1e-5
+    end = float(cosine_schedule(jnp.int32(100), 1.0, 100, warmup_steps=10))
+    assert abs(end - 0.1) < 1e-5
+
+
+def test_adamw_bf16_moments_track_f32():
+    """bf16 optimizer state (EXPERIMENTS §Perf next lever): the update must
+    stay close to the f32-state reference over several steps."""
+    import jax
+
+    p32 = {"w": jnp.linspace(-1, 1, 16)}
+    pbf = {"w": jnp.linspace(-1, 1, 16)}
+    s32 = adamw_init(p32)
+    sbf = adamw_init(pbf, moment_dtype=jnp.bfloat16)
+    assert jax.tree.leaves(sbf["mu"])[0].dtype == jnp.bfloat16
+    key = jax.random.PRNGKey(0)
+    for i in range(5):
+        key, sub = jax.random.split(key)
+        g = {"w": jax.random.normal(sub, (16,)) * 0.1}
+        p32, s32 = adamw_update(g, s32, p32, lr=1e-2)
+        pbf, sbf = adamw_update(g, sbf, pbf, lr=1e-2)
+    np.testing.assert_allclose(np.asarray(pbf["w"]), np.asarray(p32["w"]),
+                               atol=5e-3)

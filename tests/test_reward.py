@@ -1,0 +1,49 @@
+"""Unit + property tests for the utility reward (paper Eq. 1)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reward import normalize_cost, utility_reward
+
+
+def test_zero_cost_keeps_quality():
+    assert float(utility_reward(0.8, 0.0, 1.0)) == np.float32(0.8)
+
+
+def test_max_cost_applies_full_penalty():
+    r = float(utility_reward(1.0, 3.0, 3.0, cost_lambda=1.0))
+    assert abs(r - np.exp(-1.0)) < 1e-6
+
+
+def test_monotone_decreasing_in_cost():
+    costs = jnp.linspace(0.0, 2.0, 50)
+    r = np.asarray(utility_reward(1.0, costs, 2.0))
+    assert np.all(np.diff(r) < 0)
+
+
+@settings(max_examples=200, deadline=None)
+@given(q=st.floats(0, 1), c=st.floats(0, 100), cmax=st.floats(0.01, 100),
+       lam=st.floats(0.01, 5))
+def test_reward_bounded(q, c, cmax, lam):
+    c = min(c, cmax)
+    r = float(utility_reward(q, c, cmax, lam))
+    assert -1e-6 <= r <= q + 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(c=st.floats(0, 50), cmax=st.floats(0.01, 50))
+def test_cost_normalization_range(c, cmax):
+    c = min(c, cmax)
+    ct = float(normalize_cost(c, cmax))
+    assert -1e-6 <= ct <= 1.0 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(q=st.floats(0.01, 1), c=st.floats(0.01, 10))
+def test_reward_scale_invariance_of_ordering(q, c):
+    """Reordering models never changes under a global cost rescale (the
+    log normalization uses the same C_max for every arm)."""
+    cmax = 20.0
+    r1a = float(utility_reward(q, c, cmax))
+    r1b = float(utility_reward(q, 2 * c, cmax))
+    assert r1a >= r1b

@@ -1,0 +1,207 @@
+"""Online-protocol engine throughput: seed host loop vs. the device-resident
+engine (repro.sim), on the identical replay stream.
+
+Three comparisons, recorded to ``BENCH_protocol.json`` at the repo root
+(schema documented in README.md):
+
+  baseline_protocol_single — one 4-policy protocol run: host Python loop
+      (T x policies device round-trips) vs. one jitted lax.scan per policy.
+  baseline_sweep           — the paper-style multi-seed sweep: host loop
+      over seeds vs. one vmap over PRNG keys (the headline speedup; the
+      seed path *cannot* amortize seeds).
+  neuralucb_slice_step     — Algorithm 1's hot loop for one slice
+      (DECIDE -> feedback lookup -> rank-k UPDATE): host decide()/update()
+      round-trip vs. the fused jit step.
+
+  python -m benchmarks.bench_protocol [--n-samples N] [--n-slices T]
+                                      [--seeds S] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cached
+from repro.core.baselines import (
+    EmpiricalGreedy,
+    FixedActionPolicy,
+    RandomPolicy,
+)
+from repro.core.policy import NeuralUCBRouter
+from repro.core.protocol import run_protocol
+from repro.core.utilitynet import UtilityNetConfig
+from repro.data.routerbench import RouterBenchSim
+from repro.sim import (
+    DeviceNeuralUCB,
+    DeviceReplayEnv,
+    fixed_policy,
+    greedy_policy,
+    random_policy,
+    run_baseline_sweep,
+)
+from repro.sim.engine import _baseline_scan, _nucb_slice_step, _tables
+
+ROOT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_protocol.json")
+
+
+def _host_policies(env: RouterBenchSim, seed: int):
+    return {
+        "random": RandomPolicy(env.K, seed=seed),
+        "min-cost": FixedActionPolicy(env.min_cost_action()),
+        "max-quality": FixedActionPolicy(env.max_quality_action()),
+        "greedy": EmpiricalGreedy(env.K),
+    }
+
+
+def _device_policies(env: DeviceReplayEnv):
+    return [
+        random_policy(env.K),
+        fixed_policy(env.min_cost_action(), "min-cost"),
+        fixed_policy(env.max_quality_action(), "max-quality"),
+        greedy_policy(env.K),
+    ]
+
+
+def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
+                   n_seeds: int = 32) -> Dict:
+    henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
+    denv = DeviceReplayEnv.from_host(henv)
+    tables, xs = _tables(denv), denv.slice_xs()
+    dpols = _device_policies(denv)
+    n_policies = len(dpols)
+
+    # --- single protocol run ---------------------------------------------
+    run_protocol(henv, _host_policies(henv, 0), verbose=False)  # warm numpy
+    t0 = time.perf_counter()
+    run_protocol(henv, _host_policies(henv, 0), verbose=False)
+    host_single = time.perf_counter() - t0
+
+    for p in dpols:  # compile
+        jax.block_until_ready(_baseline_scan(
+            tables, xs, jax.random.PRNGKey(0), p))
+    t0 = time.perf_counter()
+    for p in dpols:
+        jax.block_until_ready(_baseline_scan(
+            tables, xs, jax.random.PRNGKey(0), p))
+    dev_single = time.perf_counter() - t0
+
+    # --- multi-seed sweep -------------------------------------------------
+    t0 = time.perf_counter()
+    for s in range(n_seeds):
+        run_protocol(henv, _host_policies(henv, s), verbose=False)
+    host_sweep = time.perf_counter() - t0
+
+    for p in dpols:  # compile the vmapped scan
+        run_baseline_sweep(denv, p, range(n_seeds))
+    t0 = time.perf_counter()
+    for p in dpols:
+        run_baseline_sweep(denv, p, range(n_seeds))
+    dev_sweep = time.perf_counter() - t0
+    sweep_decisions = n_seeds * n_policies * henv.n
+
+    # --- NeuralUCB slice step (post-warm decide+update, no training) ------
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    router = NeuralUCBRouter(cfg, seed=0)
+    b = henv.slice_batch(0)
+    n0 = len(b["idx"])
+    dec = router.decide(b["x_emb"], b["x_feat"], b["domain"])
+    router.update(b["x_emb"], b["x_feat"], b["domain"], dec,
+                  b["reward"][np.arange(n0), dec["action"]])
+    router.end_slice(epochs=1)
+
+    def host_step():
+        d = router.decide(b["x_emb"], b["x_feat"], b["domain"])
+        router.update(b["x_emb"], b["x_feat"], b["domain"], d,
+                      b["reward"][np.arange(n0), d["action"]])
+
+    host_step()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        host_step()
+    host_step_s = (time.perf_counter() - t0) / 5
+
+    nucb = DeviceNeuralUCB(denv, cfg, seed=0)
+    step_args = (nucb.params, nucb.ainv, tables, nucb.bufs, jnp.int32(1),
+                 denv.idx[1], denv.mask[1], jax.random.PRNGKey(0),
+                 jnp.float32(1.0), jnp.float32(0.5), jnp.float32(0.05))
+    jax.block_until_ready(
+        _nucb_slice_step(*step_args, cfg, nucb.ucb_backend, False)[0])
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(
+            _nucb_slice_step(*step_args, cfg, nucb.ucb_backend, False)[0])
+    dev_step_s = (time.perf_counter() - t0) / 5
+
+    return {
+        # headline: protocol-engine throughput on the paper-style workload
+        # (multi-seed baseline sweep) vs. the seed host loop
+        "speedup": host_sweep / dev_sweep,
+        "meta": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "n_samples": n_samples,
+            "n_slices": n_slices,
+            "n_seeds": n_seeds,
+            "n_policies": n_policies,
+            "ucb_backend": nucb.ucb_backend,
+        },
+        "baseline_protocol_single": {
+            "host_s": host_single,
+            "device_s": dev_single,
+            "speedup": host_single / dev_single,
+        },
+        "baseline_sweep": {
+            "host_s": host_sweep,
+            "device_s": dev_sweep,
+            "speedup": host_sweep / dev_sweep,
+            "host_decisions_per_s": sweep_decisions / host_sweep,
+            "device_decisions_per_s": sweep_decisions / dev_sweep,
+        },
+        "neuralucb_slice_step": {
+            "slice_width": int(denv.slice_width),
+            "host_s": host_step_s,
+            "device_s": dev_step_s,
+            "speedup": host_step_s / dev_step_s,
+        },
+    }
+
+
+def run(refresh: bool = False, **kw):
+    out = cached("protocol_engine", lambda: bench_protocol(**kw), refresh)
+    with open(ROOT_OUT, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
+    for sec in ("baseline_protocol_single", "baseline_sweep",
+                "neuralucb_slice_step"):
+        s = out[sec]
+        rows.append((sec, round(s["host_s"], 4), round(s["device_s"], 5),
+                     round(s["speedup"], 2)))
+    rows.append(("sweep_device_decisions_per_s",
+                 round(out["baseline_sweep"]["device_decisions_per_s"]),
+                 "", ""))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-samples", type=int, default=36_497)
+    ap.add_argument("--n-slices", type=int, default=20)
+    ap.add_argument("--seeds", type=int, default=32)
+    ap.add_argument("--out", default=ROOT_OUT)
+    args = ap.parse_args()
+    out = bench_protocol(args.n_samples, args.n_slices, args.seeds)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(json.dumps(out, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

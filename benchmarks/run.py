@@ -12,6 +12,7 @@ from benchmarks import (
     bench_cost_quality,
     bench_encoders,
     bench_kernels,
+    bench_protocol,
     bench_rewards,
     bench_roofline,
 )
@@ -23,6 +24,7 @@ SECTIONS = {
     "cost_quality": bench_cost_quality.run,  # paper Fig. 4
     "kernels": bench_kernels.run,
     "roofline": bench_roofline.run,      # deliverable (g)
+    "protocol": bench_protocol.run,      # sim engine vs seed host loop
 }
 
 

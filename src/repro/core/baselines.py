@@ -52,6 +52,31 @@ class FixedActionPolicy:
         pass
 
 
+class EmpiricalGreedy:
+    """Context-free greedy: play the arm with the best empirical mean
+    reward so far (ties -> lowest index; unplayed arms count as mean 0).
+
+    Deterministic given the reward stream, which makes it the parity anchor
+    between this host loop and the device-resident engine in
+    ``repro.sim.engine`` (tests/test_sim_engine.py)."""
+
+    def __init__(self, num_actions: int):
+        self.K = num_actions
+        self.sum_r = np.zeros(num_actions, np.float64)
+        self.cnt = np.zeros(num_actions, np.float64)
+
+    def decide(self, x_emb, x_feat, domain):
+        mean_r = self.sum_r / np.maximum(self.cnt, 1.0)
+        return np.full(len(x_emb), int(mean_r.argmax()), np.int32)
+
+    def update(self, x_emb, x_feat, domain, actions, reward):
+        np.add.at(self.sum_r, np.asarray(actions), np.asarray(reward))
+        np.add.at(self.cnt, np.asarray(actions), 1.0)
+
+    def end_slice(self):
+        pass
+
+
 class RouteLLMBert:
     """Binary strong/weak routing (Ong et al. 2024, as adapted in §4.1):
     strong/weak are the pool's best/worst models by average utility reward;

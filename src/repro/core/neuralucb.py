@@ -45,13 +45,52 @@ def sherman_morrison_update(ainv: jax.Array, g: jax.Array) -> jax.Array:
 
 @jax.jit
 def sherman_morrison_batch(ainv: jax.Array, gs: jax.Array) -> jax.Array:
-    """Sequential rank-1 updates for a batch gs (n, d) via lax.scan."""
+    """Sequential rank-1 updates for a batch gs (n, d) via lax.scan.
+
+    Reference path: algebraically identical to :func:`woodbury_update` but
+    n sequential (d, d) outer products instead of one blocked solve — keep
+    for testing; the protocol engine uses the blocked update."""
 
     def step(a, g):
         return sherman_morrison_update(a, g), None
 
     out, _ = jax.lax.scan(step, ainv, gs)
     return out
+
+
+@jax.jit
+def _woodbury_block(ainv: jax.Array, gs: jax.Array) -> jax.Array:
+    """One rank-k Woodbury step for a block gs (k, d):
+
+        (A + GᵀG)⁻¹ = A⁻¹ − A⁻¹Gᵀ (I_k + G A⁻¹ Gᵀ)⁻¹ G A⁻¹
+
+    i.e. one (k, k) Cholesky solve + three GEMMs on the MXU, replacing k
+    sequential rank-1 Sherman-Morrison updates (DESIGN.md §6)."""
+    u = gs @ ainv                                           # G A^-1   (k, d)
+    k = gs.shape[0]
+    s = jnp.eye(k, dtype=ainv.dtype) + u @ gs.T             # I + G A^-1 G^T
+    cho = jax.scipy.linalg.cho_factor(s)
+    x = jax.scipy.linalg.cho_solve(cho, u)                  # S^-1 G A^-1
+    out = ainv - u.T @ x
+    return 0.5 * (out + out.T)                              # keep symmetric
+
+
+def woodbury_update(ainv: jax.Array, gs: jax.Array,
+                    block_size: int = 0) -> jax.Array:
+    """Blocked rank-k update of A^-1 after observing features gs (n, d).
+
+    Equivalent to ``sherman_morrison_batch`` up to float error, but a
+    whole slice (n ~ 1.8k) becomes ceil(n / block) Cholesky solves
+    instead of n sequential rank-1 updates. ``block_size`` bounds the
+    (k, k) system solved per step; 0 picks ``max(128, d)`` — the (k, k)
+    solve is O(k^3) while the GEMMs are O(k d^2), so blocks much wider
+    than the feature dim make the solve dominate and can end up slower
+    than the sequential path it replaces."""
+    n, d = gs.shape
+    block = block_size if block_size > 0 else max(128, d)
+    for i in range(0, n, block):
+        ainv = _woodbury_block(ainv, gs[i:i + block])
+    return ainv
 
 
 @jax.jit

@@ -2,8 +2,10 @@
 
 DECIDE:   s(x,a) = mu(x,a) + beta * sqrt(g^T A^-1 g); take argmax_a s if
           the gate fires (p(x) >= tau_g), else the mean-greedy safe action.
-UPDATE:   push (x, a, r, y_gate) into the replay buffer; Sherman-Morrison
-          rank-1 update of the shared A^-1 with g(x, a).
+          On TPU the scores come from the Pallas ucb_score kernel; the jnp
+          einsum path is the portable fallback (see default_ucb_backend).
+UPDATE:   push (x, a, r, y_gate) into the replay buffer; blocked rank-k
+          Woodbury update of the shared A^-1 with the slice's g(x, a).
 TRAIN:    E replay epochs of Huber + BCE on the buffer (AdamW).
 REBUILD:  recompute all buffered features with the new net; Cholesky.
 """
@@ -19,16 +21,31 @@ import numpy as np
 from repro.core import neuralucb as NU
 from repro.core import utilitynet as UN
 from repro.core.replay import ReplayBuffer
+from repro.kernels.ucb_score.ops import ucb_score
 from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+def default_ucb_backend() -> str:
+    """'pallas' on TPU (native Pallas kernel), 'jnp' elsewhere. The kernel
+    also runs in interpret mode off-TPU, but interpretation is strictly
+    slower than the jnp einsum path, so it is opt-in (backend='pallas')."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
 def _decide_jit(params, cfg: UN.UtilityNetConfig, ainv, beta, tau_g,
-                x_emb, x_feat, domain):
+                x_emb, x_feat, domain, backend: str = "jnp"):
     mu, h, gate_p = UN.utilitynet_all_actions(params, cfg, x_emb, x_feat, domain)
     g = NU.augment(h)                                   # (B, K, F)
-    bonus = NU.ucb_bonus(ainv, g)                       # (B, K)
-    scores = mu + beta * bonus
+    if backend == "pallas":
+        # serving path: (B*K, F) quadratic forms as one MXU GEMM sweep with
+        # A^-1 VMEM-resident (repro.kernels.ucb_score); interpret mode keeps
+        # the same code path testable on CPU.
+        interpret = jax.default_backend() != "tpu"
+        scores = ucb_score(g, ainv, mu, beta, interpret=interpret)
+    else:
+        bonus = NU.ucb_bonus(ainv, g)                   # (B, K)
+        scores = mu + beta * bonus
     a_ucb = jnp.argmax(scores, axis=-1)
     a_safe = jnp.argmax(mu, axis=-1)
     use_ucb = gate_p >= tau_g
@@ -66,8 +83,10 @@ class NeuralUCBRouter:
     def __init__(self, cfg: UN.UtilityNetConfig, *, seed: int = 0,
                  beta: float = 1.0, tau_g: float = 0.5,
                  ridge_lambda0: float = 1.0, lr: float = 1e-3,
-                 gate_margin: float = 0.05, batch_size: int = 256):
+                 gate_margin: float = 0.05, batch_size: int = 256,
+                 ucb_backend: Optional[str] = None):
         self.cfg = cfg
+        self.ucb_backend = ucb_backend or default_ucb_backend()
         self.beta = beta
         self.tau_g = tau_g
         self.ridge_lambda0 = ridge_lambda0
@@ -97,7 +116,8 @@ class NeuralUCBRouter:
             a, g, mu_safe, gate_p, _ = _decide_jit(
                 self.params, self.cfg, self.ainv,
                 jnp.float32(self.beta), jnp.float32(self.tau_g),
-                jnp.asarray(x_emb), jnp.asarray(x_feat), jnp.asarray(domain))
+                jnp.asarray(x_emb), jnp.asarray(x_feat), jnp.asarray(domain),
+                backend=self.ucb_backend)
             actions = np.asarray(a)
             g, mu_safe, gate_p = map(np.asarray, (g, mu_safe, gate_p))
         return {"action": actions.astype(np.int32), "g": g,
@@ -114,8 +134,9 @@ class NeuralUCBRouter:
             np.ones_like(gate_label)
         self.buffer.add_batch(x_emb, x_feat, domain, decision["action"],
                               reward, gate_label, gate_mask)
-        self.ainv = NU.sherman_morrison_batch(self.ainv,
-                                              jnp.asarray(decision["g"]))
+        # blocked rank-k Woodbury: one Cholesky solve per block instead of
+        # n sequential rank-1 Sherman-Morrison updates (DESIGN.md §6)
+        self.ainv = NU.woodbury_update(self.ainv, jnp.asarray(decision["g"]))
 
     # ------------------------------------------------------------ TRAIN --
     def train(self, epochs: int = 5) -> Dict[str, float]:

@@ -1,0 +1,20 @@
+"""Pallas-TPU API compatibility shims.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` around
+0.5.x; the kernels in this package are written against the new name and on
+older jax (e.g. 0.4.37, the pinned CI version) resolve it through this
+module instead of ``pltpu`` directly. Import the symbol from here in every
+kernel so one shim covers the whole package:
+
+    from repro.kernels.compat import CompilerParams
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # jax <= 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _ucb_kernel(g_ref, ainv_ref, mu_ref, beta_ref, out_ref):
     g = g_ref[...].astype(jnp.float32)        # (Br, F)
@@ -53,7 +55,7 @@ def ucb_score_padded(g, ainv, mu, beta, *, block_r: int = 512,
         ],
         out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((R,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(g, ainv, mu, beta)

@@ -1,0 +1,35 @@
+"""Device-resident online routing protocol engine (DESIGN.md §8).
+
+The seed implementation (`repro.core.protocol.run_protocol`) drives the
+paper's Algorithm 1 as a host Python loop with a device round-trip per
+slice per policy and per-minibatch host transfers; this package keeps the
+whole replay environment (quality / cost / reward tables) resident on the
+accelerator and runs each slice's DECIDE → feedback-lookup → UPDATE as a
+single fused jit call. Baselines become stateless jnp policies swept over
+seeds with vmap, and a full T-slice baseline run is one lax.scan.
+"""
+from repro.sim.env import DeviceReplayEnv
+from repro.sim.policies import (
+    DevicePolicy,
+    fixed_policy,
+    greedy_policy,
+    random_policy,
+)
+from repro.sim.engine import (
+    DeviceNeuralUCB,
+    run_baseline_device,
+    run_baseline_sweep,
+    run_protocol_device,
+)
+
+__all__ = [
+    "DeviceReplayEnv",
+    "DevicePolicy",
+    "fixed_policy",
+    "greedy_policy",
+    "random_policy",
+    "DeviceNeuralUCB",
+    "run_baseline_device",
+    "run_baseline_sweep",
+    "run_protocol_device",
+]

@@ -1,0 +1,354 @@
+"""Vectorized online protocol engine (DESIGN.md §8).
+
+Three runners over a :class:`repro.sim.env.DeviceReplayEnv`:
+
+* :func:`run_baseline_device` — a full T-slice protocol run of one
+  stateless baseline as a single jitted ``lax.scan`` (one device dispatch
+  for the whole run, vs. the seed host loop's T × policies round-trips).
+* :func:`run_baseline_sweep` — the same scan ``vmap``-ed over PRNG keys
+  for multi-seed sweeps.
+* :class:`DeviceNeuralUCB` — Algorithm 1 with the whole slice's
+  DECIDE → feedback-lookup → UPDATE fused into one jit call; replay
+  training is a ``lax.scan`` over uniformly-sampled minibatches and the
+  A^-1 rebuild is a single masked full-capacity pass (both stay on
+  device; only per-slice scalar metrics ever reach the host).
+
+Differences vs. the seed host loop (``repro.core.protocol.run_protocol``),
+see DESIGN.md §8.3: the random baseline and warm-slice exploration draw
+from the jax PRNG (numpy's in the seed), and replay training samples
+minibatches with replacement (permutation epochs in the seed). Policies
+that are deterministic given the reward stream (fixed arms, greedy) are
+bit-compatible — asserted by tests/test_sim_engine.py.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import neuralucb as NU
+from repro.core import utilitynet as UN
+from repro.core.policy import default_ucb_backend
+from repro.kernels.ucb_score.ops import ucb_score
+from repro.sim.env import DeviceReplayEnv
+from repro.sim.policies import DevicePolicy
+from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
+
+
+def _tables(env: DeviceReplayEnv) -> Dict[str, jnp.ndarray]:
+    return {"x_emb": env.x_emb, "x_feat": env.x_feat, "domain": env.domain,
+            "quality": env.quality, "cost": env.cost, "reward": env.reward}
+
+
+def _context(tables, idx):
+    return {"x_emb": tables["x_emb"][idx], "x_feat": tables["x_feat"][idx],
+            "domain": tables["domain"][idx]}
+
+
+def _slice_metrics(tables, idx, mask, actions):
+    denom = jnp.maximum(mask.sum(), 1.0)
+    r = tables["reward"][idx, actions] * mask
+    q = tables["quality"][idx, actions] * mask
+    c = tables["cost"][idx, actions] * mask
+    K = tables["reward"].shape[1]
+    hist = (jax.nn.one_hot(actions, K, dtype=jnp.float32)
+            * mask[:, None]).sum(axis=0)
+    return {"sum_reward": r.sum(), "avg_reward": r.sum() / denom,
+            "avg_cost": c.sum() / denom, "avg_quality": q.sum() / denom,
+            "action_hist": hist}
+
+
+def _metrics_to_results(ms: Dict[str, np.ndarray], wall_s: float) -> Dict:
+    """Convert stacked per-slice device metrics to the
+    ``core.protocol.run_protocol`` per-policy result format."""
+    T = len(ms["avg_reward"])
+    cum = np.cumsum(np.asarray(ms["sum_reward"], np.float64))
+    return {
+        "avg_reward": [float(v) for v in ms["avg_reward"]],
+        "cum_reward": [float(v) for v in cum],
+        "avg_cost": [float(v) for v in ms["avg_cost"]],
+        "avg_quality": [float(v) for v in ms["avg_quality"]],
+        "action_hist": np.asarray(ms["action_hist"]),
+        "wall_s": [wall_s / T] * T,
+    }
+
+
+# --------------------------------------------------------------- baselines --
+def _baseline_scan_impl(tables, xs, key, policy: DevicePolicy):
+    state = policy.init(key)
+
+    def step(carry, x):
+        state, key = carry
+        key, kd = jax.random.split(key)
+        idx, mask = x["idx"], x["mask"]
+        batch = _context(tables, idx)
+        a = policy.decide(state, kd, batch)
+        m = _slice_metrics(tables, idx, mask, a)
+        state = policy.update(state, batch, a, tables["reward"][idx, a], mask)
+        return (state, key), m
+
+    _, ms = jax.lax.scan(step, (state, key), xs)
+    return ms
+
+
+_baseline_scan = jax.jit(_baseline_scan_impl, static_argnames=("policy",))
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _baseline_sweep_scan(tables, xs, keys, policy: DevicePolicy):
+    """The full T-slice scan vmapped over PRNG keys, compiled as one unit
+    so repeated sweeps are a single cached dispatch."""
+    return jax.vmap(
+        lambda k: _baseline_scan_impl(tables, xs, k, policy))(keys)
+
+
+def run_baseline_device(env: DeviceReplayEnv, policy: DevicePolicy, *,
+                        seed: int = 0) -> Dict:
+    """One policy, all T slices, one device dispatch. Returns the
+    ``run_protocol`` per-policy result dict (summarize-compatible)."""
+    t0 = time.perf_counter()
+    ms = jax.block_until_ready(_baseline_scan(
+        _tables(env), env.slice_xs(), jax.random.PRNGKey(seed), policy))
+    return _metrics_to_results(ms, time.perf_counter() - t0)
+
+
+def run_baseline_sweep(env: DeviceReplayEnv, policy: DevicePolicy,
+                       seeds) -> Dict[str, np.ndarray]:
+    """Multi-seed sweep: vmap the whole T-slice scan over PRNG keys.
+
+    Returns stacked raw metrics with a leading seed axis, e.g.
+    ``out["avg_reward"]`` has shape (n_seeds, T)."""
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    ms = _baseline_sweep_scan(_tables(env), env.slice_xs(), keys, policy)
+    return {k: np.asarray(v) for k, v in ms.items()}
+
+
+# --------------------------------------------------------------- neuralucb --
+def _weighted_loss(params, cfg: UN.UtilityNetConfig, batch):
+    """Replay loss with per-row validity weights (padded rows carry w=0)."""
+    mu, _, gate_p = UN.utilitynet_apply(
+        params, batch["x_emb"], batch["x_feat"], batch["domain"],
+        batch["action"])
+    w = batch["w"]
+    l_u = (UN.huber(mu, batch["reward"], cfg.huber_delta) * w
+           ).sum() / jnp.maximum(w.sum(), 1.0)
+    p = jnp.clip(gate_p, 1e-6, 1 - 1e-6)
+    y = batch["gate_label"]
+    bce = -(y * jnp.log(p) + (1 - y) * jnp.log(1 - p))
+    gw = batch["gate_w"]
+    l_g = (bce * gw).sum() / jnp.maximum(gw.sum(), 1.0)
+    return l_u + 0.5 * l_g, {"loss_u": l_u, "loss_gate": l_g}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"))
+def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
+                     beta, tau_g, gate_margin,
+                     cfg: UN.UtilityNetConfig, backend: str, warm: bool):
+    """DECIDE -> feedback lookup -> buffer write -> rank-k UPDATE, fused."""
+    batch = _context(tables, idx)
+    B = idx.shape[0]
+    if warm:
+        a = jax.random.randint(key, (B,), 0, cfg.num_actions, jnp.int32)
+        _, h, _ = UN.utilitynet_apply(
+            params, batch["x_emb"], batch["x_feat"], batch["domain"], a)
+        g = NU.augment(h)
+        mu_safe = jnp.zeros((B,), jnp.float32)
+    else:
+        mu, h, gate_p = UN.utilitynet_all_actions(
+            params, cfg, batch["x_emb"], batch["x_feat"], batch["domain"])
+        g_all = NU.augment(h)                                  # (B, K, F)
+        if backend == "pallas":
+            interpret = jax.default_backend() != "tpu"
+            scores = ucb_score(g_all, ainv, mu, beta, interpret=interpret)
+        else:
+            scores = mu + beta * NU.ucb_bonus(ainv, g_all)
+        a_ucb = jnp.argmax(scores, axis=-1)
+        a_safe = jnp.argmax(mu, axis=-1)
+        a = jnp.where(gate_p >= tau_g, a_ucb, a_safe).astype(jnp.int32)
+        g = jnp.take_along_axis(
+            g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
+
+    r = tables["reward"][idx, a]
+    gate_label = (r < mu_safe - gate_margin).astype(jnp.float32)
+    gate_w = jnp.zeros_like(mask) if warm else mask
+
+    bufs = {
+        "action": bufs["action"].at[t].set(a),
+        "reward": bufs["reward"].at[t].set(r),
+        "gate_label": bufs["gate_label"].at[t].set(gate_label),
+        "w": bufs["w"].at[t].set(mask),
+        "gate_w": bufs["gate_w"].at[t].set(gate_w),
+    }
+    # padded rows are zeroed -> contribute nothing to the rank-k update
+    ainv = NU.woodbury_update(ainv, g * mask[:, None])
+    metrics = _slice_metrics(tables, idx, mask, a)
+    return ainv, bufs, metrics
+
+
+# SGD steps per compiled training dispatch. The per-slice step budget is
+# rounded UP to a multiple of this, so the scan compiles exactly once for
+# the whole run instead of once per distinct per-slice step count.
+TRAIN_CHUNK = 32
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "num_steps", "batch_size"))
+def _nucb_train(params, opt, tables, env_idx, bufs, key, count, lr,
+                cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int):
+    """``num_steps`` SGD steps on uniformly-sampled replay minibatches,
+    all on device. ``count`` (traced) bounds the flat sample range; padded
+    rows are neutralized by their w=0 weights."""
+    S = env_idx.shape[1]
+
+    def step(carry, k):
+        params, opt = carry
+        flat = jax.random.randint(k, (batch_size,), 0, count)
+        row, col = flat // S, flat % S
+        sid = env_idx[row, col]
+        batch = {
+            "x_emb": tables["x_emb"][sid],
+            "x_feat": tables["x_feat"][sid],
+            "domain": tables["domain"][sid],
+            "action": bufs["action"][row, col],
+            "reward": bufs["reward"][row, col],
+            "gate_label": bufs["gate_label"][row, col],
+            "w": bufs["w"][row, col],
+            "gate_w": bufs["gate_w"][row, col],
+        }
+        (_, _), grads = jax.value_and_grad(
+            _weighted_loss, has_aux=True)(params, cfg, batch)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(grads, opt, params, lr=lr,
+                                   weight_decay=1e-4)
+        return (params, opt), None
+
+    (params, opt), _ = jax.lax.scan(
+        step, (params, opt), jax.random.split(key, num_steps))
+    return params, opt
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _nucb_rebuild(params, tables, env_idx, action_buf, w_buf,
+                  cfg: UN.UtilityNetConfig, ridge_lambda0):
+    """Recompute g for every buffered pair with the fresh net; one masked
+    full-capacity pass (unwritten/padded rows have w=0 and vanish from
+    A = lambda0 I + sum w_i g_i g_i^T), then one Cholesky solve."""
+    sid = env_idx.reshape(-1)
+    a = action_buf.reshape(-1)
+    w = w_buf.reshape(-1)
+    _, h, _ = UN.utilitynet_apply(
+        params, tables["x_emb"][sid], tables["x_feat"][sid],
+        tables["domain"][sid], a)
+    g = NU.augment(h) * w[:, None]
+    return NU.rebuild_ainv(g, ridge_lambda0)
+
+
+class DeviceNeuralUCB:
+    """Device-resident NeuralUCB protocol runner (paper Algorithm 1).
+
+    Same hyperparameters as :class:`repro.core.policy.NeuralUCBRouter`;
+    the replay buffer is (T, S) device arrays of outcomes keyed by the
+    env's slice-index matrix, so buffered contexts are looked up from the
+    resident tables instead of being copied."""
+
+    def __init__(self, env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
+                 seed: int = 0, beta: float = 1.0, tau_g: float = 0.5,
+                 ridge_lambda0: float = 1.0, lr: float = 1e-3,
+                 gate_margin: float = 0.05, batch_size: int = 256,
+                 ucb_backend: Optional[str] = None):
+        self.env = env
+        self.cfg = cfg
+        self.beta = beta
+        self.tau_g = tau_g
+        self.ridge_lambda0 = ridge_lambda0
+        self.lr = lr
+        self.gate_margin = gate_margin
+        self.batch_size = batch_size
+        self.ucb_backend = ucb_backend or default_ucb_backend()
+        self.key = jax.random.PRNGKey(seed)
+        self.params = UN.init_utilitynet(jax.random.PRNGKey(seed), cfg)
+        self.opt = adamw_init(self.params)
+        self.ainv = NU.init_ainv(cfg.ucb_feature_dim, ridge_lambda0)
+        T, S = env.idx.shape
+        self.bufs = {
+            "action": jnp.zeros((T, S), jnp.int32),
+            "reward": jnp.zeros((T, S), jnp.float32),
+            "gate_label": jnp.zeros((T, S), jnp.float32),
+            "w": jnp.zeros((T, S), jnp.float32),
+            "gate_w": jnp.zeros((T, S), jnp.float32),
+        }
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def run(self, *, epochs: int = 5, verbose: bool = False,
+            max_slices: Optional[int] = None) -> Dict:
+        """Run Algorithm 1 end to end; returns the ``run_protocol``
+        per-policy result dict (summarize-compatible)."""
+        env = self.env
+        tables = _tables(env)
+        T = env.n_slices if max_slices is None else min(env.n_slices,
+                                                        max_slices)
+        S = env.slice_width
+        sizes = env.slice_sizes
+        per_slice = []
+        wall = []
+        seen = 0
+        for t in range(T):
+            t0 = time.perf_counter()
+            self.ainv, self.bufs, m = _nucb_slice_step(
+                self.params, self.ainv, tables, self.bufs,
+                jnp.int32(t), env.idx[t], env.mask[t], self._next_key(),
+                jnp.float32(self.beta), jnp.float32(self.tau_g),
+                jnp.float32(self.gate_margin),
+                self.cfg, self.ucb_backend, t == 0)
+            seen += int(sizes[t])
+            # round the step budget up to TRAIN_CHUNK-sized dispatches:
+            # num_steps grows every slice, and as a static jit arg each
+            # distinct value would recompile the whole training scan
+            num_steps = epochs * (seen // self.batch_size)
+            for _ in range(-(-num_steps // TRAIN_CHUNK)):
+                self.params, self.opt = _nucb_train(
+                    self.params, self.opt, tables, env.idx, self.bufs,
+                    self._next_key(), jnp.int32((t + 1) * S),
+                    jnp.float32(self.lr), self.cfg, TRAIN_CHUNK,
+                    self.batch_size)
+            self.ainv = _nucb_rebuild(
+                self.params, tables, env.idx, self.bufs["action"],
+                self.bufs["w"], self.cfg, jnp.float32(self.ridge_lambda0))
+            jax.block_until_ready(self.ainv)
+            per_slice.append(m)
+            wall.append(time.perf_counter() - t0)
+            if verbose:
+                print(f"[sim slice {t + 1:2d}/{T}] "
+                      f"avg_reward={float(m['avg_reward']):.3f}", flush=True)
+        ms = {k: np.stack([np.asarray(m[k]) for m in per_slice])
+              for k in per_slice[0]}
+        out = _metrics_to_results(ms, sum(wall))
+        out["wall_s"] = wall
+        return out
+
+
+def run_protocol_device(env: DeviceReplayEnv,
+                        policies: Dict[str, DevicePolicy], *,
+                        neuralucb: Optional[DeviceNeuralUCB] = None,
+                        epochs: int = 5, seed: int = 0,
+                        verbose: bool = False) -> Dict[str, Dict]:
+    """Drop-in device-resident counterpart of
+    ``repro.core.protocol.run_protocol``: every policy replays the same
+    slice stream; results feed ``repro.core.protocol.summarize``."""
+    results = {}
+    if neuralucb is not None:
+        results["neuralucb"] = neuralucb.run(epochs=epochs, verbose=verbose)
+    for name, pol in policies.items():
+        results[name] = run_baseline_device(env, pol, seed=seed)
+        if verbose:
+            print(f"[sim] {name}: avg_reward="
+                  f"{np.mean(results[name]['avg_reward']):.3f}", flush=True)
+    return results

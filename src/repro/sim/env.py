@@ -1,0 +1,88 @@
+"""Device-resident RouterBench replay environment (DESIGN.md §8.1).
+
+Wraps the host-side :class:`repro.data.routerbench.RouterBenchSim` tables
+as jnp arrays plus a padded slice-index matrix so a whole protocol run can
+be expressed as a ``lax.scan`` over slices with zero host transfers. The
+slice permutation is taken verbatim from the host env, so both runners
+replay the *identical* stream — the parity anchor for
+tests/test_sim_engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.routerbench import RouterBenchSim
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceReplayEnv:
+    """Replay tables on device.
+
+    idx / mask are (T, S) with S = max slice length; padded entries carry
+    idx 0 and mask 0 and are excluded from every metric and update.
+    """
+
+    x_emb: jnp.ndarray      # (n, E) f32
+    x_feat: jnp.ndarray     # (n, F) f32
+    domain: jnp.ndarray     # (n,)   i32
+    quality: jnp.ndarray    # (n, K) f32
+    cost: jnp.ndarray       # (n, K) f32
+    reward: jnp.ndarray     # (n, K) f32
+    idx: jnp.ndarray        # (T, S) i32
+    mask: jnp.ndarray       # (T, S) f32
+
+    @property
+    def n(self) -> int:
+        return self.x_emb.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.quality.shape[1]
+
+    @property
+    def n_slices(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def slice_width(self) -> int:
+        return self.idx.shape[1]
+
+    @property
+    def slice_sizes(self) -> np.ndarray:
+        return np.asarray(self.mask.sum(axis=1)).astype(np.int64)
+
+    def slice_xs(self) -> Dict[str, jnp.ndarray]:
+        """Per-slice scan inputs: the index rows and their masks."""
+        return {"idx": self.idx, "mask": self.mask}
+
+    # arm statistics (match RouterBenchSim's convenience methods) ----------
+    def min_cost_action(self) -> int:
+        return int(jnp.argmin(self.cost.mean(axis=0)))
+
+    def max_quality_action(self) -> int:
+        return int(jnp.argmax(self.quality.mean(axis=0)))
+
+    @classmethod
+    def from_host(cls, env: RouterBenchSim) -> "DeviceReplayEnv":
+        """Lift a host RouterBenchSim (tables + its slice permutation)."""
+        T = env.n_slices
+        S = max(len(s) for s in env.slices)
+        idx = np.zeros((T, S), np.int32)
+        mask = np.zeros((T, S), np.float32)
+        for t, sl in enumerate(env.slices):
+            idx[t, :len(sl)] = sl
+            mask[t, :len(sl)] = 1.0
+        return cls(
+            x_emb=jnp.asarray(env.x_emb, jnp.float32),
+            x_feat=jnp.asarray(env.data["x_feat"], jnp.float32),
+            domain=jnp.asarray(env.data["domain"], jnp.int32),
+            quality=jnp.asarray(env.data["quality"], jnp.float32),
+            cost=jnp.asarray(env.data["cost"], jnp.float32),
+            reward=jnp.asarray(env.reward_table, jnp.float32),
+            idx=jnp.asarray(idx),
+            mask=jnp.asarray(mask),
+        )

@@ -1,0 +1,87 @@
+"""Stateless device baseline policies (DESIGN.md §8.2).
+
+Each baseline is a triple of pure functions over an explicit state pytree,
+so a full protocol run is one ``lax.scan`` and a multi-seed sweep is one
+``vmap`` over PRNG keys — no Python objects, no host RNG:
+
+    init(key)                          -> state
+    decide(state, key, batch)          -> actions (S,) i32
+    update(state, batch, a, r, mask)   -> state
+
+``batch`` is the per-slice gather from :class:`DeviceReplayEnv` (x_emb,
+x_feat, domain — context only; feedback stays in the engine). Semantics
+mirror the host classes in ``repro.core.baselines``: greedy here is
+bit-compatible with ``EmpiricalGreedy`` (decide from pre-slice statistics,
+ties to the lowest index); random draws from the jax PRNG instead of
+numpy's, so it matches the host loop in distribution, not samples.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DevicePolicy(NamedTuple):
+    name: str
+    init: Callable
+    decide: Callable
+    update: Callable
+
+
+def _no_update(state, batch, actions, rewards, mask):
+    return state
+
+
+def random_policy(num_actions: int) -> DevicePolicy:
+    """Uniform over the pool, one fold of the scan key per slice."""
+
+    def init(key):
+        return ()
+
+    def decide(state, key, batch):
+        B = batch["x_emb"].shape[0]
+        return jax.random.randint(key, (B,), 0, num_actions, jnp.int32)
+
+    return DevicePolicy("random", init, decide, _no_update)
+
+
+def fixed_policy(action: int, name: str = "fixed") -> DevicePolicy:
+    """min-cost / max-quality: a fixed arm chosen from dataset statistics."""
+
+    def init(key):
+        return ()
+
+    def decide(state, key, batch):
+        B = batch["x_emb"].shape[0]
+        return jnp.full((B,), action, jnp.int32)
+
+    return DevicePolicy(name, init, decide, _no_update)
+
+
+def greedy_policy(num_actions: int) -> DevicePolicy:
+    """Context-free empirical-mean greedy (= core.baselines.EmpiricalGreedy).
+
+    State is (sum_r, cnt) per arm; a slice's update is one masked one-hot
+    matmul instead of a per-sample scatter loop.
+    """
+
+    def init(key):
+        return (jnp.zeros((num_actions,), jnp.float32),
+                jnp.zeros((num_actions,), jnp.float32))
+
+    def decide(state, key, batch):
+        sum_r, cnt = state
+        mean_r = sum_r / jnp.maximum(cnt, 1.0)
+        a = jnp.argmax(mean_r)          # ties -> lowest index, as np.argmax
+        B = batch["x_emb"].shape[0]
+        return jnp.full((B,), a, jnp.int32)
+
+    def update(state, batch, actions, rewards, mask):
+        sum_r, cnt = state
+        onehot = jax.nn.one_hot(actions, num_actions, dtype=jnp.float32)
+        onehot = onehot * mask[:, None]
+        return (sum_r + onehot.T @ rewards, cnt + onehot.sum(axis=0))
+
+    return DevicePolicy("greedy", init, decide, update)

@@ -1,0 +1,76 @@
+"""Minimal stand-in for ``hypothesis`` so the property-test modules collect
+and run when hypothesis is not installed (it is an optional dev dependency,
+see pyproject.toml ``[project.optional-dependencies] dev``).
+
+The stub runs each ``@given`` test over a small deterministic example set
+(bounds + midpoint of every strategy) instead of randomized search — far
+weaker than real hypothesis, but it keeps the properties exercised and the
+suite green in minimal environments. Install hypothesis to get the real
+engine; the test modules prefer it automatically.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Any, List
+
+
+class _Strategy:
+    def __init__(self, examples: List[Any]):
+        self.examples = examples
+
+
+def _integers(min_value: int = 0, max_value: int = 100) -> _Strategy:
+    mid = (min_value + max_value) // 2
+    return _Strategy(sorted({min_value, mid, max_value}))
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    mid = 0.5 * (min_value + max_value)
+    return _Strategy(sorted({min_value, mid, max_value}))
+
+
+def _sampled_from(elements) -> _Strategy:
+    return _Strategy(list(elements))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy([False, True])
+
+
+class st:  # mirrors ``hypothesis.strategies`` for the subset the tests use
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+    sampled_from = staticmethod(_sampled_from)
+    booleans = staticmethod(_booleans)
+
+
+def given(**strategies):
+    """Run the test once per example tuple. Examples are zipped (bounds with
+    bounds, midpoints with midpoints) rather than crossed, so the number of
+    invocations stays tiny; strategies with fewer examples repeat their last."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            names = list(strategies)
+            n = max(len(strategies[k].examples) for k in names)
+            for i in range(n):
+                vals = {k: strategies[k].examples[min(i, len(strategies[k].examples) - 1)]
+                        for k in names}
+                fn(*args, **kwargs, **vals)
+
+        # pytest resolves fixture names via inspect.signature, which follows
+        # __wrapped__ back to fn and would treat the strategy kwargs as
+        # fixtures — hide the original signature.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+
+    return deco

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — fall back to the local stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.common.config import ModelConfig
 from repro.models.moe import expert_capacity, init_moe, moe_ffn

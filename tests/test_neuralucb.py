@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — fall back to the local stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.neuralucb import (
     augment,

@@ -1,7 +1,10 @@
 """Unit + property tests for the utility reward (paper Eq. 1)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — fall back to the local stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.reward import normalize_cost, utility_reward
 

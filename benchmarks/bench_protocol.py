@@ -1,7 +1,7 @@
 """Online-protocol engine throughput: seed host loop vs. the device-resident
 engine (repro.sim), on the identical replay stream.
 
-Three comparisons, recorded to ``BENCH_protocol.json`` at the repo root
+Five comparisons, recorded to ``BENCH_protocol.json`` at the repo root
 (schema documented in README.md):
 
   baseline_protocol_single — one 4-policy protocol run: host Python loop
@@ -12,15 +12,25 @@ Three comparisons, recorded to ``BENCH_protocol.json`` at the repo root
   neuralucb_slice_step     — Algorithm 1's hot loop for one slice
       (DECIDE -> feedback lookup -> rank-k UPDATE): host decide()/update()
       round-trip vs. the fused jit step.
+  neuralucb_scan_vs_stepped — a full Algorithm 1 run on the same fixed
+      training schedule: the PR-1-style per-slice runner
+      (~ceil(steps/32)+2 dispatches + one sync per slice) vs. the
+      single-dispatch lax.scan (DESIGN.md §8.4).
+  neuralucb_sweep          — the paper's multi-seed NeuralUCB sweep:
+      sequential per-slice runs (the only way the stepped runner can
+      sweep) vs. one vmapped scan dispatch sharded over local devices.
 
   python -m benchmarks.bench_protocol [--n-samples N] [--n-slices T]
-                                      [--seeds S] [--out PATH]
+      [--seeds S] [--nucb-samples N] [--nucb-slices T] [--nucb-seeds S]
+      [--nucb-train-steps K] [--nucb-batch B] [--out PATH]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 from typing import Dict
 
@@ -45,8 +55,17 @@ from repro.sim import (
     greedy_policy,
     random_policy,
     run_baseline_sweep,
+    run_neuralucb_device,
+    run_neuralucb_sweep,
 )
-from repro.sim.engine import _baseline_scan, _nucb_slice_step, _tables
+from repro.sim.engine import (
+    _baseline_scan,
+    _nucb_slice_step,
+    _tables,
+)
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         os.pardir))
 
 ROOT_OUT = os.path.join(os.path.dirname(__file__), os.pardir,
                         "BENCH_protocol.json")
@@ -70,8 +89,104 @@ def _device_policies(env: DeviceReplayEnv):
     ]
 
 
+def _median_wall(fn, reps: int = 3) -> float:
+    """Median-of-reps wall time (protocol runs are seconds-long; medians
+    absorb scheduler noise better than means)."""
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return sorted(walls)[len(walls) // 2]
+
+
+def bench_neuralucb_runs(n_samples: int = 1200, n_slices: int = 32,
+                         n_seeds: int = 4, train_steps: int = 32,
+                         batch_size: int = 32) -> Dict:
+    """Full-Algorithm-1 comparisons on one fixed training schedule: the
+    per-slice runner vs. the single-dispatch scan, single-run and as a
+    multi-seed sweep (DESIGN.md §8.4). The workload is the paper's
+    protocol shape at reduced stream size — what's measured here is
+    engine structure (dispatch count, sweep amortization, device
+    sharding), which the full stream only dilutes with model FLOPs."""
+    henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
+    denv = DeviceReplayEnv.from_host(henv)
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+
+    def stepped_run(seed: int):
+        return DeviceNeuralUCB(denv, cfg, seed=seed, batch_size=batch_size
+                               ).run(train_steps=train_steps, scan=False)
+
+    def scan_run():
+        return run_neuralucb_device(denv, cfg, seed=0,
+                                    train_steps=train_steps,
+                                    batch_size=batch_size)
+
+    def sweep_run():
+        return run_neuralucb_sweep(denv, cfg, seeds=range(n_seeds),
+                                   train_steps=train_steps,
+                                   batch_size=batch_size)
+
+    stepped_run(0)                      # compile all three paths
+    scan_run()
+    sweep_run()
+
+    stepped_single = _median_wall(lambda: stepped_run(0))
+    scan_single = _median_wall(scan_run)
+    stepped_sweep = _median_wall(
+        lambda: [stepped_run(s) for s in range(n_seeds)])
+    scan_sweep = _median_wall(sweep_run)
+    shape = {"n_samples": n_samples, "n_slices": n_slices,
+             "train_steps": train_steps, "batch_size": batch_size}
+    return {
+        "neuralucb_scan_vs_stepped": dict(
+            shape, stepped_s=stepped_single, scan_s=scan_single,
+            speedup=stepped_single / scan_single),
+        "neuralucb_sweep": dict(
+            shape, n_seeds=n_seeds, stepped_s=stepped_sweep,
+            scan_s=scan_sweep, speedup=stepped_sweep / scan_sweep,
+            n_devices=len(jax.local_devices())),
+    }
+
+
+def bench_neuralucb_subprocess(n_samples: int, n_slices: int, n_seeds: int,
+                               train_steps: int, batch_size: int) -> Dict:
+    """Run :func:`bench_neuralucb_runs` in a subprocess with the host's
+    CPU cores exposed as XLA host-platform devices (the sweep shards its
+    lane axis across them, DESIGN.md §8.4 — same mechanism as the
+    512-device dry-run). Isolating the flag in a child process keeps this
+    process, and every other benchmark section, on the default single
+    device. Both runners inside the child see the identical device set."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        # more devices than sweep lanes would be pure startup overhead in
+        # the child — shard_sweep_axis only ever uses the first n_seeds
+        n_dev = max(1, min(os.cpu_count() or 1, n_seeds))
+        env["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n_dev}"
+        ).strip()
+    src = os.path.join(REPO_ROOT, "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_protocol", "--nucb-only",
+         "--nucb-samples", str(n_samples), "--nucb-slices", str(n_slices),
+         "--nucb-seeds", str(n_seeds),
+         "--nucb-train-steps", str(train_steps),
+         "--nucb-batch", str(batch_size)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise RuntimeError("nucb bench subprocess failed:\n"
+                           + out.stderr[-2000:])
+    return json.loads(out.stdout)
+
+
 def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
-                   n_seeds: int = 32) -> Dict:
+                   n_seeds: int = 32, nucb_samples: int = 1200,
+                   nucb_slices: int = 32, nucb_seeds: int = 4,
+                   nucb_train_steps: int = 32,
+                   nucb_batch: int = 32) -> Dict:
     henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
     denv = DeviceReplayEnv.from_host(henv)
     tables, xs = _tables(denv), denv.slice_xs()
@@ -140,6 +255,9 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
             _nucb_slice_step(*step_args, cfg, nucb.ucb_backend, False)[0])
     dev_step_s = (time.perf_counter() - t0) / 5
 
+    nucb_runs = bench_neuralucb_subprocess(
+        nucb_samples, nucb_slices, nucb_seeds, nucb_train_steps, nucb_batch)
+
     return {
         # headline: protocol-engine throughput on the paper-style workload
         # (multi-seed baseline sweep) vs. the seed host loop
@@ -151,6 +269,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
             "n_slices": n_slices,
             "n_seeds": n_seeds,
             "n_policies": n_policies,
+            "n_devices": len(jax.local_devices()),
             "ucb_backend": nucb.ucb_backend,
         },
         "baseline_protocol_single": {
@@ -171,11 +290,12 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
             "device_s": dev_step_s,
             "speedup": host_step_s / dev_step_s,
         },
+        **nucb_runs,
     }
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v2", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -183,6 +303,10 @@ def run(refresh: bool = False, **kw):
                 "neuralucb_slice_step"):
         s = out[sec]
         rows.append((sec, round(s["host_s"], 4), round(s["device_s"], 5),
+                     round(s["speedup"], 2)))
+    for sec in ("neuralucb_scan_vs_stepped", "neuralucb_sweep"):
+        s = out[sec]
+        rows.append((sec, round(s["stepped_s"], 4), round(s["scan_s"], 4),
                      round(s["speedup"], 2)))
     rows.append(("sweep_device_decisions_per_s",
                  round(out["baseline_sweep"]["device_decisions_per_s"]),
@@ -195,9 +319,26 @@ def main() -> None:
     ap.add_argument("--n-samples", type=int, default=36_497)
     ap.add_argument("--n-slices", type=int, default=20)
     ap.add_argument("--seeds", type=int, default=32)
+    ap.add_argument("--nucb-samples", type=int, default=1200)
+    ap.add_argument("--nucb-slices", type=int, default=32)
+    ap.add_argument("--nucb-seeds", type=int, default=4)
+    ap.add_argument("--nucb-train-steps", type=int, default=32)
+    ap.add_argument("--nucb-batch", type=int, default=32)
+    ap.add_argument("--nucb-only", action="store_true",
+                    help="internal: run only the NeuralUCB sections and "
+                         "print their JSON (the subprocess entry point)")
     ap.add_argument("--out", default=ROOT_OUT)
     args = ap.parse_args()
-    out = bench_protocol(args.n_samples, args.n_slices, args.seeds)
+    if args.nucb_only:
+        out = bench_neuralucb_runs(
+            args.nucb_samples, args.nucb_slices, args.nucb_seeds,
+            args.nucb_train_steps, args.nucb_batch)
+        print(json.dumps(out, default=float))
+        return
+    out = bench_protocol(args.n_samples, args.n_slices, args.seeds,
+                         args.nucb_samples, args.nucb_slices,
+                         args.nucb_seeds, args.nucb_train_steps,
+                         args.nucb_batch)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(json.dumps(out, indent=1, default=float))

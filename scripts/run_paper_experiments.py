@@ -1,15 +1,22 @@
-"""Reproduce the paper's summary table (NeuralUCB vs. baselines on utility
-reward / cost / quality, RouterBench replay, 20 slices) on the
-device-resident protocol engine, with a multi-seed sweep for the random
-baseline.
+"""Paper experiment driver: the summary table (NeuralUCB vs. baselines on
+utility reward / cost / quality, RouterBench replay, 20 slices) plus the
+Figures 2-4 sweep — seeds x beta (x tau_g x cost_lambda) grids — all on
+the device-resident protocol engine.
 
-  PYTHONPATH=src python scripts/run_paper_experiments.py                # full
+  PYTHONPATH=src python scripts/run_paper_experiments.py              # table
   PYTHONPATH=src python scripts/run_paper_experiments.py \
-      --n-samples 4000 --n-slices 4 --epochs 2                          # smoke
+      --n-samples 4000 --n-slices 4 --epochs 2                        # smoke
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --sweep-seeds 5 --betas 0.25 0.5 1.0 2.0                       # Fig. 2-4
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --n-samples 1500 --n-slices 3 --sweep-seeds 2 --betas 0.5 1.0 \
+      --train-steps 32 --sweep-only                                   # CI
 
-Writes the summary (plus per-slice curves) to --out (default
-``paper_experiments.json``) and prints the paper-style table. Slice 1 is
-warm-start-affected and excluded from the summary means (paper §4.2).
+The sweep runs as ONE device dispatch (`repro.sim.run_neuralucb_sweep`:
+the whole T-slice Algorithm-1 scan vmapped over (grid x seed) lanes and
+sharded across local devices), then each cell is summarized with the
+shared ``core.protocol.summarize`` (slice 1 excluded, paper §4.2).
+Writes summary + curves to --out (default ``paper_experiments.json``).
 """
 from __future__ import annotations
 
@@ -29,29 +36,14 @@ from repro.sim import (
     greedy_policy,
     random_policy,
     run_baseline_sweep,
+    run_neuralucb_sweep,
     run_protocol_device,
+    sweep_point_results,
 )
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n-samples", type=int, default=36_497)
-    ap.add_argument("--n-slices", type=int, default=20)
-    ap.add_argument("--epochs", type=int, default=5)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--random-seeds", type=int, default=5,
-                    help="seeds for the random-baseline sweep (vmap)")
-    ap.add_argument("--cost-lambda", type=float, default=1.0)
-    ap.add_argument("--out", default="paper_experiments.json")
-    ap.add_argument("--quiet", action="store_true")
-    args = ap.parse_args(argv)
-
-    henv = RouterBenchSim(seed=args.seed, n_samples=args.n_samples,
-                          n_slices=args.n_slices,
-                          cost_lambda=args.cost_lambda)
-    denv = DeviceReplayEnv.from_host(henv)
-    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
-
+def run_summary_table(henv, denv, cfg, args):
+    """Single-run NeuralUCB vs. baselines table (paper Table 1 shape)."""
     policies = {
         "random": random_policy(denv.K),
         "min-cost": fixed_policy(denv.min_cost_action(), "min-cost"),
@@ -91,7 +83,6 @@ def main(argv=None) -> int:
           f"(paper: ~33%)")
 
     out = {
-        "config": vars(args),
         "summary": summ,
         "oracle_reward": oracle,
         "neuralucb_cost_fraction_of_max_quality": frac,
@@ -101,14 +92,107 @@ def main(argv=None) -> int:
         "action_hist": {k: np.asarray(v["action_hist"]).tolist()
                         for k, v in results.items()},
     }
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=1, default=float)
-    print(f"\nwrote {args.out}")
-
-    # paper's qualitative ordering must hold on the full run
     ok = (summ["neuralucb"]["avg_reward"] > summ["random"]["avg_reward"]
           and summ["neuralucb"]["avg_reward"]
           > summ["max-quality-arm"]["avg_reward"] * 0.9)
+    return out, ok
+
+
+def run_figure_sweep(denv, cfg, args):
+    """Figures 2-4: seeds x (beta, tau_g, cost_lambda) grid in one
+    vmapped scan dispatch, each cell summarized with the shared
+    ``summarize`` and aggregated mean +/- std over seeds."""
+    lambdas = [None if l < 0 else l for l in args.cost_lambdas] \
+        if args.cost_lambdas else [None]
+    sweep = run_neuralucb_sweep(
+        denv, cfg, seeds=range(args.sweep_seeds), betas=args.betas,
+        tau_gs=args.tau_gs, cost_lambdas=lambdas, epochs=args.epochs,
+        train_steps=args.train_steps)
+    G, S = sweep["avg_reward"].shape[:2]
+    points = []
+    for g in range(G):
+        cells = [summarize({"p": sweep_point_results(sweep, g, s)})["p"]
+                 for s in range(S)]
+        agg = {"beta": float(sweep["beta"][g]),
+               "tau_g": float(sweep["tau_g"][g]),
+               "cost_lambda": (None if np.isnan(sweep["cost_lambda"][g])
+                               else float(sweep["cost_lambda"][g]))}
+        for k in ("avg_reward", "avg_cost", "avg_quality"):
+            vals = np.asarray([c[k] for c in cells])
+            agg[f"{k}_mean"] = float(vals.mean())
+            agg[f"{k}_std"] = float(vals.std())
+        agg["per_slice_avg_reward_mean"] = \
+            sweep["avg_reward"][g].mean(axis=0).tolist()
+        points.append(agg)
+
+    header = (f"{'beta':>6}{'tau_g':>7}{'lambda':>8}{'avg_reward':>16}"
+              f"{'avg_cost':>14}{'avg_quality':>12}")
+    print("\nNeuralUCB sweep "
+          f"({args.sweep_seeds} seeds x {G} grid points, one dispatch)")
+    print(header)
+    print("-" * len(header))
+    for p in points:
+        lam = "env" if p["cost_lambda"] is None else f"{p['cost_lambda']:.2f}"
+        print(f"{p['beta']:>6.2f}{p['tau_g']:>7.2f}{lam:>8}"
+              f"{p['avg_reward_mean']:>9.4f}±{p['avg_reward_std']:.4f}"
+              f"{p['avg_cost_mean']:>9.4f}±{p['avg_cost_std']:.4f}"
+              f"{p['avg_quality_mean']:>12.4f}")
+    ok = all(np.isfinite(p["avg_reward_mean"]) and p["avg_reward_mean"] > 0
+             for p in points)
+    return {"seeds": int(args.sweep_seeds),
+            "train_steps": int(sweep["train_steps"]),
+            "points": points}, ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-samples", type=int, default=36_497)
+    ap.add_argument("--n-slices", type=int, default=20)
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--random-seeds", type=int, default=5,
+                    help="seeds for the random-baseline sweep (vmap)")
+    ap.add_argument("--cost-lambda", type=float, default=1.0)
+    ap.add_argument("--sweep-seeds", type=int, default=0,
+                    help="NeuralUCB sweep seeds; 0 disables the sweep")
+    ap.add_argument("--betas", type=float, nargs="+", default=[1.0],
+                    help="beta grid for the NeuralUCB sweep (Fig. 2-4)")
+    ap.add_argument("--tau-gs", type=float, nargs="+", default=[0.5])
+    ap.add_argument("--cost-lambdas", type=float, nargs="+", default=None,
+                    help="cost_lambda grid; negative = env's own table")
+    ap.add_argument("--train-steps", type=int, default=None,
+                    help="fixed per-slice SGD budget for the scanned "
+                         "runner (default: derived from --epochs)")
+    ap.add_argument("--sweep-only", action="store_true",
+                    help="skip the single-run summary table (CI smoke)")
+    ap.add_argument("--out", default="paper_experiments.json")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    henv = RouterBenchSim(seed=args.seed, n_samples=args.n_samples,
+                          n_slices=args.n_slices,
+                          cost_lambda=args.cost_lambda)
+    denv = DeviceReplayEnv.from_host(henv)
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+
+    out = {"config": vars(args)}
+    ok = True
+    if not args.sweep_only:
+        table, ok_t = run_summary_table(henv, denv, cfg, args)
+        out.update(table)
+        ok = ok and ok_t
+    if args.sweep_seeds > 0:
+        sweep_out, ok_s = run_figure_sweep(denv, cfg, args)
+        out["sweep"] = sweep_out
+        ok = ok and ok_s
+    elif args.sweep_only:
+        print("--sweep-only given but --sweep-seeds is 0; nothing to do",
+              file=sys.stderr)
+        ok = False
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"\nwrote {args.out}")
     return 0 if ok else 1
 
 

@@ -94,12 +94,18 @@ def woodbury_update(ainv: jax.Array, gs: jax.Array,
 
 
 @jax.jit
-def rebuild_ainv(gs: jax.Array, ridge_lambda0: float = 1.0) -> jax.Array:
-    """A = lambda0 I + sum_i g_i g_i^T ; return A^-1 via Cholesky solve.
+def rebuild_ainv(gs: jax.Array, ridge_lambda0: float = 1.0,
+                 weights: jax.Array | None = None) -> jax.Array:
+    """A = lambda0 I + sum_i w_i g_i g_i^T ; return A^-1 via Cholesky solve.
 
     gs: (n, d) features of all buffered (context, action) pairs recomputed
-    with the freshly trained network.
+    with the freshly trained network. ``weights`` (n,) optionally masks
+    rows with binary validity weights (the protocol engine's padded /
+    unwritten buffer rows carry w=0 and vanish from the sum; w^2 = w for
+    binary weights, so scaling g by w is exact, not approximate).
     """
+    if weights is not None:
+        gs = gs * weights[..., None]
     d = gs.shape[-1]
     A = ridge_lambda0 * jnp.eye(d, dtype=jnp.float32) + gs.T @ gs
     cho = jax.scipy.linalg.cho_factor(A)

@@ -48,9 +48,18 @@ class ReplayBuffer:
 
     def minibatches(self, rng: np.random.Generator, batch_size: int
                     ) -> Iterator[Dict[str, np.ndarray]]:
+        """Shuffled full minibatches; a buffer smaller than ``batch_size``
+        yields its whole content as one short batch instead of silently
+        skipping SGD (early protocol slices, small serving pools never
+        trained). Once full batches exist the sub-batch tail is dropped —
+        every distinct batch shape retraces the jitted train step, and the
+        shuffle already rotates the dropped samples across epochs."""
         data = self.data()
         n = len(self)
         order = rng.permutation(n)
+        if n < batch_size:
+            yield {k: v[order] for k, v in data.items()}
+            return
         for i in range(0, n - batch_size + 1, batch_size):
             idx = order[i:i + batch_size]
             yield {k: v[idx] for k, v in data.items()}

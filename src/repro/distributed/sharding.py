@@ -87,6 +87,37 @@ def activation_rules(cfg: ModelConfig, shape: InputShape, mesh,
 
 
 # ---------------------------------------------------------------------------
+# protocol-engine sweep sharding
+# ---------------------------------------------------------------------------
+
+
+def shard_sweep_axis(tree, n_items: Optional[int] = None):
+    """Shard the leading (sweep) axis of every leaf across local devices.
+
+    Used by the protocol engine's seed/beta sweep harnesses (DESIGN.md
+    §8.4): the vmapped grid axis is data-parallel across whatever local
+    devices exist. Picks the largest device count that divides the axis so
+    no grid shape is rejected; identity on a single device (CPU CI) so
+    callers need no gating.
+    """
+    devs = jax.local_devices()
+    if len(devs) <= 1:
+        return tree
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree
+    n = n_items if n_items is not None else int(leaves[0].shape[0])
+    nd = len(devs)
+    while nd > 1 and n % nd:
+        nd -= 1
+    if nd <= 1:
+        return tree
+    mesh = jax.sharding.Mesh(np.asarray(devs[:nd]), ("sweep",))
+    sharding = jax.sharding.NamedSharding(mesh, P("sweep"))
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
+
+
+# ---------------------------------------------------------------------------
 # parameter partition specs
 # ---------------------------------------------------------------------------
 

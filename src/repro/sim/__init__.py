@@ -6,30 +6,45 @@ slice per policy and per-minibatch host transfers; this package keeps the
 whole replay environment (quality / cost / reward tables) resident on the
 accelerator and runs each slice's DECIDE → feedback-lookup → UPDATE as a
 single fused jit call. Baselines become stateless jnp policies swept over
-seeds with vmap, and a full T-slice baseline run is one lax.scan.
+seeds with vmap, a full T-slice baseline run is one lax.scan, and the
+whole NeuralUCB Algorithm-1 run is one scanned dispatch
+(`run_neuralucb_device`) with seed/β sweeps as one vmapped, device-sharded
+dispatch (`run_neuralucb_sweep`, DESIGN.md §8.4).
 """
 from repro.sim.env import DeviceReplayEnv
 from repro.sim.policies import (
     DevicePolicy,
+    NeuralUCBHypers,
+    NeuralUCBState,
     fixed_policy,
     greedy_policy,
     random_policy,
 )
 from repro.sim.engine import (
     DeviceNeuralUCB,
+    neuralucb_train_schedule,
     run_baseline_device,
     run_baseline_sweep,
+    run_neuralucb_device,
+    run_neuralucb_sweep,
     run_protocol_device,
+    sweep_point_results,
 )
 
 __all__ = [
     "DeviceReplayEnv",
     "DevicePolicy",
+    "NeuralUCBHypers",
+    "NeuralUCBState",
     "fixed_policy",
     "greedy_policy",
     "random_policy",
     "DeviceNeuralUCB",
+    "neuralucb_train_schedule",
     "run_baseline_device",
     "run_baseline_sweep",
+    "run_neuralucb_device",
+    "run_neuralucb_sweep",
     "run_protocol_device",
+    "sweep_point_results",
 ]

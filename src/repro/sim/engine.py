@@ -1,21 +1,27 @@
 """Vectorized online protocol engine (DESIGN.md §8).
 
-Three runners over a :class:`repro.sim.env.DeviceReplayEnv`:
+Runners over a :class:`repro.sim.env.DeviceReplayEnv`:
 
 * :func:`run_baseline_device` — a full T-slice protocol run of one
   stateless baseline as a single jitted ``lax.scan`` (one device dispatch
   for the whole run, vs. the seed host loop's T × policies round-trips).
 * :func:`run_baseline_sweep` — the same scan ``vmap``-ed over PRNG keys
   for multi-seed sweeps.
-* :class:`DeviceNeuralUCB` — Algorithm 1 with the whole slice's
-  DECIDE → feedback-lookup → UPDATE fused into one jit call; replay
-  training is a ``lax.scan`` over uniformly-sampled minibatches and the
-  A^-1 rebuild is a single masked full-capacity pass (both stay on
-  device; only per-slice scalar metrics ever reach the host).
+* :func:`run_neuralucb_device` — Algorithm 1 end to end as ONE device
+  dispatch (DESIGN.md §8.4): the whole T-slice run — DECIDE → feedback →
+  rank-k Woodbury UPDATE → replay-train scan → Cholesky REBUILD — is a
+  single ``lax.scan`` over a pure :class:`NeuralUCBState` pytree with a
+  fixed per-slice training schedule.
+* :func:`run_neuralucb_sweep` — that scan ``vmap``-ed over PRNG keys and
+  over a ``(beta, tau_g, cost_lambda)`` hyperparameter grid, sharded over
+  local devices when more than one is present.
+* :class:`DeviceNeuralUCB` — the host-stepped runner (one fused jit call
+  per slice phase), kept as the parity reference; its ``run()`` delegates
+  to the scanned path when the schedule allows.
 
 Differences vs. the seed host loop (``repro.core.protocol.run_protocol``),
-see DESIGN.md §8.3: the random baseline and warm-slice exploration draw
-from the jax PRNG (numpy's in the seed), and replay training samples
+see DESIGN.md §8.3/§8.4: the random baseline and warm-slice exploration
+draw from the jax PRNG (numpy's in the seed), and replay training samples
 minibatches with replacement (permutation epochs in the seed). Policies
 that are deterministic given the reward stream (fixed arms, greedy) are
 bit-compatible — asserted by tests/test_sim_engine.py.
@@ -23,8 +29,9 @@ bit-compatible — asserted by tests/test_sim_engine.py.
 from __future__ import annotations
 
 import functools
+import itertools
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,15 +40,21 @@ import numpy as np
 from repro.core import neuralucb as NU
 from repro.core import utilitynet as UN
 from repro.core.policy import default_ucb_backend
+from repro.core.reward import normalize_cost
+from repro.distributed.sharding import shard_sweep_axis
 from repro.kernels.ucb_score.ops import ucb_score
 from repro.sim.env import DeviceReplayEnv
-from repro.sim.policies import DevicePolicy
+from repro.sim.policies import DevicePolicy, NeuralUCBHypers, NeuralUCBState
 from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
 
 def _tables(env: DeviceReplayEnv) -> Dict[str, jnp.ndarray]:
+    """Resident replay tables. ``cnorm`` is the Eq.-1 normalized cost,
+    carried so sweep harnesses can re-derive the reward table for any
+    ``cost_lambda`` on device (baseline scans simply never read it)."""
     return {"x_emb": env.x_emb, "x_feat": env.x_feat, "domain": env.domain,
-            "quality": env.quality, "cost": env.cost, "reward": env.reward}
+            "quality": env.quality, "cost": env.cost, "reward": env.reward,
+            "cnorm": normalize_cost(env.cost, env.cost.max())}
 
 
 def _context(tables, idx):
@@ -118,11 +131,13 @@ def run_baseline_device(env: DeviceReplayEnv, policy: DevicePolicy, *,
 
 def run_baseline_sweep(env: DeviceReplayEnv, policy: DevicePolicy,
                        seeds) -> Dict[str, np.ndarray]:
-    """Multi-seed sweep: vmap the whole T-slice scan over PRNG keys.
+    """Multi-seed sweep: vmap the whole T-slice scan over PRNG keys,
+    sharded across local devices on the seed axis when several exist.
 
     Returns stacked raw metrics with a leading seed axis, e.g.
     ``out["avg_reward"]`` has shape (n_seeds, T)."""
-    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    keys = shard_sweep_axis(
+        jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds]))
     ms = _baseline_sweep_scan(_tables(env), env.slice_xs(), keys, policy)
     return {k: np.asarray(v) for k, v in ms.items()}
 
@@ -144,71 +159,114 @@ def _weighted_loss(params, cfg: UN.UtilityNetConfig, batch):
     return l_u + 0.5 * l_g, {"loss_u": l_u, "loss_gate": l_g}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"))
-def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
-                     beta, tau_g, gate_margin,
-                     cfg: UN.UtilityNetConfig, backend: str, warm: bool):
-    """DECIDE -> feedback lookup -> buffer write -> rank-k UPDATE, fused."""
-    batch = _context(tables, idx)
-    B = idx.shape[0]
-    if warm:
-        a = jax.random.randint(key, (B,), 0, cfg.num_actions, jnp.int32)
-        _, h, _ = UN.utilitynet_apply(
-            params, batch["x_emb"], batch["x_feat"], batch["domain"], a)
-        g = NU.augment(h)
-        mu_safe = jnp.zeros((B,), jnp.float32)
-    else:
-        mu, h, gate_p = UN.utilitynet_all_actions(
-            params, cfg, batch["x_emb"], batch["x_feat"], batch["domain"])
-        g_all = NU.augment(h)                                  # (B, K, F)
-        if backend == "pallas":
-            interpret = jax.default_backend() != "tpu"
-            scores = ucb_score(g_all, ainv, mu, beta, interpret=interpret)
-        else:
-            scores = mu + beta * NU.ucb_bonus(ainv, g_all)
-        a_ucb = jnp.argmax(scores, axis=-1)
-        a_safe = jnp.argmax(mu, axis=-1)
-        a = jnp.where(gate_p >= tau_g, a_ucb, a_safe).astype(jnp.int32)
-        g = jnp.take_along_axis(
-            g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-        mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
+def _apply_cost_lambda(tables, cost_lambda):
+    """Re-derive the reward table for a swept ``cost_lambda`` (Eq. 1):
+    r = q * exp(-lambda * c_tilde). Negative lambda is the sentinel for
+    "keep the env's precomputed table" (both sides of the where are cheap
+    elementwise passes over the resident (n, K) tables)."""
+    swept = tables["quality"] * jnp.exp(
+        -jnp.abs(cost_lambda) * tables["cnorm"])
+    return dict(tables, reward=jnp.where(
+        cost_lambda >= 0, swept, tables["reward"]))
 
+
+def _decide_warm(params, batch, key, cfg: UN.UtilityNetConfig):
+    """Slice-1 warm start: uniform exploration; the safe-utility reference
+    is 0 and the gate loss is masked (gate scale 0)."""
+    B = batch["x_emb"].shape[0]
+    a = jax.random.randint(key, (B,), 0, cfg.num_actions, jnp.int32)
+    _, h, _ = UN.utilitynet_apply(
+        params, batch["x_emb"], batch["x_feat"], batch["domain"], a)
+    return a, NU.augment(h), jnp.zeros((B,), jnp.float32), jnp.float32(0.0)
+
+
+def _decide_ucb(params, ainv, batch, beta, tau_g,
+                cfg: UN.UtilityNetConfig, backend: str):
+    """Gated UCB decision over all actions (paper §3.3)."""
+    mu, h, gate_p = UN.utilitynet_all_actions(
+        params, cfg, batch["x_emb"], batch["x_feat"], batch["domain"])
+    g_all = NU.augment(h)                                  # (B, K, F)
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        scores = ucb_score(g_all, ainv, mu, beta, interpret=interpret)
+    else:
+        scores = mu + beta * NU.ucb_bonus(ainv, g_all)
+    a_ucb = jnp.argmax(scores, axis=-1)
+    a_safe = jnp.argmax(mu, axis=-1)
+    a = jnp.where(gate_p >= tau_g, a_ucb, a_safe).astype(jnp.int32)
+    g = jnp.take_along_axis(
+        g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
+    return a, g, mu_safe, jnp.float32(1.0)
+
+
+def _post_decide(ainv, tables, bufs, t, idx, mask, a, g, mu_safe,
+                 gate_scale, gate_margin):
+    """Feedback lookup -> buffer write -> rank-k Woodbury UPDATE, shared
+    by the static-warm step and the scanned traced-warm step."""
     r = tables["reward"][idx, a]
     gate_label = (r < mu_safe - gate_margin).astype(jnp.float32)
-    gate_w = jnp.zeros_like(mask) if warm else mask
-
     bufs = {
         "action": bufs["action"].at[t].set(a),
         "reward": bufs["reward"].at[t].set(r),
         "gate_label": bufs["gate_label"].at[t].set(gate_label),
         "w": bufs["w"].at[t].set(mask),
-        "gate_w": bufs["gate_w"].at[t].set(gate_w),
+        "gate_w": bufs["gate_w"].at[t].set(mask * gate_scale),
     }
     # padded rows are zeroed -> contribute nothing to the rank-k update
     ainv = NU.woodbury_update(ainv, g * mask[:, None])
-    metrics = _slice_metrics(tables, idx, mask, a)
-    return ainv, bufs, metrics
+    return ainv, bufs, _slice_metrics(tables, idx, mask, a)
 
 
-# SGD steps per compiled training dispatch. The per-slice step budget is
-# rounded UP to a multiple of this, so the scan compiles exactly once for
-# the whole run instead of once per distinct per-slice step count.
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"))
+def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
+                     beta, tau_g, gate_margin,
+                     cfg: UN.UtilityNetConfig, backend: str, warm: bool):
+    """DECIDE -> feedback lookup -> buffer write -> rank-k UPDATE, fused.
+    Host-stepped entry point: ``warm`` is static (one trace per phase)."""
+    batch = _context(tables, idx)
+    if warm:
+        a, g, mu_safe, gs = _decide_warm(params, batch, key, cfg)
+    else:
+        a, g, mu_safe, gs = _decide_ucb(params, ainv, batch, beta, tau_g,
+                                        cfg, backend)
+    return _post_decide(ainv, tables, bufs, t, idx, mask, a, g, mu_safe,
+                        gs, gate_margin)
+
+
+# SGD steps per compiled training dispatch. Per-slice step budgets are
+# rounded UP to a multiple of this, so the training scan compiles exactly
+# once for the whole run instead of once per distinct step count.
 TRAIN_CHUNK = 32
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "num_steps", "batch_size"))
-def _nucb_train(params, opt, tables, env_idx, bufs, key, count, lr,
-                cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int):
+def _sample_valid(key, batch_size: int, cum0, count):
+    """Uniform flat draw over the first ``count`` VALID buffer entries.
+
+    Valid entries are the per-row prefixes of the (T, S) buffers (the
+    padded tail of each row carries mask 0 — DeviceReplayEnv layout), so
+    with cum0 = [0, cumsum(slice_sizes)] a flat u in [0, count) maps to
+    row = searchsorted(cum0, u, 'right') - 1 and col = u - cum0[row].
+    Sampling the raw (t+1)*S padded range instead (the PR-1 bug) shrank
+    the effective minibatch by the padding fraction: padded rows carry
+    w=0, so they neutralize their loss term but still occupy batch slots.
+    """
+    flat = jax.random.randint(key, (batch_size,), 0, jnp.maximum(count, 1))
+    row = jnp.searchsorted(cum0, flat, side="right").astype(jnp.int32) - 1
+    col = flat - cum0[row]
+    return row, col
+
+
+def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
+                 cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int):
     """``num_steps`` SGD steps on uniformly-sampled replay minibatches,
-    all on device. ``count`` (traced) bounds the flat sample range; padded
-    rows are neutralized by their w=0 weights."""
-    S = env_idx.shape[1]
+    all on device; ``count`` (traced) is the number of valid buffered
+    samples. Shared verbatim by the host-stepped and scanned runners so
+    identical keys give identical training trajectories."""
 
     def step(carry, k):
         params, opt = carry
-        flat = jax.random.randint(k, (batch_size,), 0, count)
-        row, col = flat // S, flat % S
+        row, col = _sample_valid(k, batch_size, cum0, count)
         sid = env_idx[row, col]
         batch = {
             "x_emb": tables["x_emb"][sid],
@@ -232,8 +290,11 @@ def _nucb_train(params, opt, tables, env_idx, bufs, key, count, lr,
     return params, opt
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _nucb_rebuild(params, tables, env_idx, action_buf, w_buf,
+_nucb_train = jax.jit(_train_chunk,
+                      static_argnames=("cfg", "num_steps", "batch_size"))
+
+
+def _rebuild_impl(params, tables, env_idx, action_buf, w_buf,
                   cfg: UN.UtilityNetConfig, ridge_lambda0):
     """Recompute g for every buffered pair with the fresh net; one masked
     full-capacity pass (unwritten/padded rows have w=0 and vanish from
@@ -244,17 +305,266 @@ def _nucb_rebuild(params, tables, env_idx, action_buf, w_buf,
     _, h, _ = UN.utilitynet_apply(
         params, tables["x_emb"][sid], tables["x_feat"][sid],
         tables["domain"][sid], a)
-    g = NU.augment(h) * w[:, None]
-    return NU.rebuild_ainv(g, ridge_lambda0)
+    return NU.rebuild_ainv(NU.augment(h), ridge_lambda0, weights=w)
+
+
+_nucb_rebuild = jax.jit(_rebuild_impl, static_argnames=("cfg",))
+
+
+# ------------------------------------------------ single-dispatch scan -----
+def _scan_xs(env: DeviceReplayEnv) -> Dict[str, jnp.ndarray]:
+    return {"t": jnp.arange(env.n_slices, dtype=jnp.int32),
+            "idx": env.idx, "mask": env.mask}
+
+
+def _cum_valid(env: DeviceReplayEnv) -> jnp.ndarray:
+    """(T+1,) int32 cumulative VALID sample counts: cum0[t+1] = number of
+    real (unpadded) samples in slices 0..t — the searchsorted table for
+    :func:`_sample_valid` and the training-budget base."""
+    sizes = np.asarray(env.slice_sizes, np.int64)
+    return jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
+
+
+def neuralucb_train_schedule(env: DeviceReplayEnv, epochs: int = 5,
+                             batch_size: int = 256,
+                             max_slices: Optional[int] = None) -> int:
+    """Fixed per-slice SGD budget (steps) for the scanned runner.
+
+    The host-stepped growing schedule spends ``epochs * (seen_t //
+    batch)`` steps after slice t (rounded up to TRAIN_CHUNK dispatches);
+    the scan needs ONE static budget for every slice, so we spread the
+    growing schedule's total chunk count evenly (rounded up) — same total
+    compute to within T chunks, uniform trace.
+    """
+    sizes = np.asarray(env.slice_sizes, np.int64)
+    if max_slices is not None:
+        sizes = sizes[:max_slices]
+    seen = np.cumsum(sizes)
+    chunks = [-(-int(epochs * (s // batch_size)) // TRAIN_CHUNK)
+              for s in seen]
+    per_slice = max(1, -(-sum(chunks) // len(chunks)))
+    return per_slice * TRAIN_CHUNK
+
+
+def _init_state(key, cfg: UN.UtilityNetConfig, T: int, S: int,
+                ridge_lambda0) -> NeuralUCBState:
+    """One key split feeds BOTH the network init and the run stream —
+    split[0] -> init, split[1] -> exploration/training draws. (The PR-1
+    runner fed PRNGKey(seed) to both, correlating warm-slice exploration
+    with the weight init; the host router uses seed and seed+1.)"""
+    k_init, key = jax.random.split(key)
+    params = UN.init_utilitynet(k_init, cfg)
+    return NeuralUCBState(
+        params=params,
+        opt=adamw_init(params),
+        ainv=NU.init_ainv(cfg.ucb_feature_dim, ridge_lambda0),
+        bufs={
+            "action": jnp.zeros((T, S), jnp.int32),
+            "reward": jnp.zeros((T, S), jnp.float32),
+            "gate_label": jnp.zeros((T, S), jnp.float32),
+            "w": jnp.zeros((T, S), jnp.float32),
+            "gate_w": jnp.zeros((T, S), jnp.float32),
+        },
+        key=key)
+
+
+def _nucb_slice_full(state: NeuralUCBState, x, tables, env_idx, cum0,
+                     hyp: NeuralUCBHypers, cfg: UN.UtilityNetConfig,
+                     backend: str, train_chunks: int, batch_size: int):
+    """One whole slice of Algorithm 1 (DECIDE → UPDATE → TRAIN → REBUILD)
+    as a pure scan body. Key discipline mirrors the host-stepped runner
+    exactly (one split per slice step, one per training chunk) so both
+    paths consume identical PRNG streams."""
+    params, opt, ainv, bufs, key = state
+    t, idx, mask = x["t"], x["idx"], x["mask"]
+    key, k_slice = jax.random.split(key)
+    batch = _context(tables, idx)
+    a, g, mu_safe, gs = jax.lax.cond(
+        t == 0,
+        lambda: _decide_warm(params, batch, k_slice, cfg),
+        lambda: _decide_ucb(params, ainv, batch, hyp.beta, hyp.tau_g,
+                            cfg, backend))
+    ainv, bufs, metrics = _post_decide(
+        ainv, tables, bufs, t, idx, mask, a, g, mu_safe, gs,
+        hyp.gate_margin)
+    count = cum0[t + 1]
+
+    def chunk(carry, _):
+        params, opt, key = carry
+        key, kc = jax.random.split(key)
+        params, opt = _train_chunk(
+            params, opt, tables, env_idx, bufs, kc, cum0, count, hyp.lr,
+            cfg, TRAIN_CHUNK, batch_size)
+        return (params, opt, key), None
+
+    (params, opt, key), _ = jax.lax.scan(
+        chunk, (params, opt, key), None, length=train_chunks)
+    ainv = _rebuild_impl(params, tables, env_idx, bufs["action"],
+                         bufs["w"], cfg, hyp.ridge_lambda0)
+    return NeuralUCBState(params, opt, ainv, bufs, key), metrics
+
+
+def _nucb_scan_impl(tables, xs, env_idx, cum0, key, hyp: NeuralUCBHypers,
+                    cfg: UN.UtilityNetConfig, backend: str,
+                    train_chunks: int, batch_size: int):
+    T, S = env_idx.shape
+    tables = _apply_cost_lambda(tables, hyp.cost_lambda)
+    state = _init_state(key, cfg, T, S, hyp.ridge_lambda0)
+
+    def step(carry, x):
+        return _nucb_slice_full(carry, x, tables, env_idx, cum0, hyp,
+                                cfg, backend, train_chunks, batch_size)
+
+    return jax.lax.scan(step, state, xs)
+
+
+_nucb_scan = jax.jit(
+    _nucb_scan_impl,
+    static_argnames=("cfg", "backend", "train_chunks", "batch_size"))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "backend", "train_chunks",
+                              "batch_size"))
+def _nucb_sweep_scan(tables, xs, env_idx, cum0, keys,
+                     hyp: NeuralUCBHypers, cfg: UN.UtilityNetConfig,
+                     backend: str, train_chunks: int, batch_size: int):
+    """One flat vmap over (grid x seed) lanes — ``keys`` (L, 2) and every
+    ``hyp`` leaf (L,) are pre-flattened by the caller, which reshapes the
+    (L, T, ...) metrics back to (G, n_seeds, T, ...). A single batching
+    axis compiles to markedly better CPU code than nested grid/seed
+    vmaps, and gives the device sharding one unambiguous axis."""
+    def one(k, h):
+        return _nucb_scan_impl(tables, xs, env_idx, cum0, k, h, cfg,
+                               backend, train_chunks, batch_size)[1]
+
+    return jax.vmap(one)(keys, hyp)
+
+
+def _hypers(beta, tau_g, gate_margin, lr, ridge_lambda0,
+            cost_lambda) -> NeuralUCBHypers:
+    f = jnp.float32
+    return NeuralUCBHypers(
+        beta=f(beta), tau_g=f(tau_g), gate_margin=f(gate_margin), lr=f(lr),
+        ridge_lambda0=f(ridge_lambda0),
+        cost_lambda=f(-1.0 if cost_lambda is None else cost_lambda))
+
+
+def run_neuralucb_device(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
+                         seed: int = 0, epochs: int = 5,
+                         train_steps: Optional[int] = None,
+                         beta: float = 1.0, tau_g: float = 0.5,
+                         ridge_lambda0: float = 1.0, lr: float = 1e-3,
+                         gate_margin: float = 0.05, batch_size: int = 256,
+                         cost_lambda: Optional[float] = None,
+                         ucb_backend: Optional[str] = None,
+                         return_state: bool = False):
+    """Algorithm 1 end to end as ONE device dispatch (DESIGN.md §8.4).
+
+    ``train_steps`` is the fixed per-slice SGD budget (rounded up to a
+    TRAIN_CHUNK multiple); when omitted it is derived from ``epochs`` via
+    :func:`neuralucb_train_schedule` to match the stepped runner's total
+    budget. Returns the ``run_protocol`` per-policy result dict; with
+    ``return_state=True`` also the final :class:`NeuralUCBState`.
+    """
+    backend = ucb_backend or default_ucb_backend()
+    if train_steps is None:
+        train_steps = neuralucb_train_schedule(env, epochs, batch_size)
+    chunks = -(-int(train_steps) // TRAIN_CHUNK)
+    hyp = _hypers(beta, tau_g, gate_margin, lr, ridge_lambda0, cost_lambda)
+    t0 = time.perf_counter()
+    state, ms = _nucb_scan(_tables(env), _scan_xs(env), env.idx,
+                           _cum_valid(env), jax.random.PRNGKey(seed), hyp,
+                           cfg, backend, chunks, batch_size)
+    jax.block_until_ready(ms)
+    res = _metrics_to_results({k: np.asarray(v) for k, v in ms.items()},
+                              time.perf_counter() - t0)
+    return (res, state) if return_state else res
+
+
+def run_neuralucb_sweep(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
+                        seeds: Sequence[int], betas=(1.0,), tau_gs=(0.5,),
+                        cost_lambdas=(None,), epochs: int = 5,
+                        train_steps: Optional[int] = None,
+                        ridge_lambda0: float = 1.0, lr: float = 1e-3,
+                        gate_margin: float = 0.05, batch_size: int = 256,
+                        ucb_backend: str = "jnp") -> Dict[str, np.ndarray]:
+    """Multi-seed, multi-hyper NeuralUCB sweep as one dispatch.
+
+    The hyper grid is the cartesian product ``betas x tau_gs x
+    cost_lambdas`` (G points, ``itertools.product`` order, recorded in the
+    returned ``beta`` / ``tau_g`` / ``cost_lambda`` arrays); metric leaves
+    come back with shape (G, n_seeds, T, ...). The flattened (grid x
+    seed) lane axis is sharded across local devices when more than one is
+    present. The default UCB backend is the portable jnp path — the
+    Pallas kernel is the single-run serving path and is not batched under
+    the sweep vmap.
+    """
+    seeds = list(seeds)
+    if train_steps is None:
+        train_steps = neuralucb_train_schedule(env, epochs, batch_size)
+    chunks = -(-int(train_steps) // TRAIN_CHUNK)
+    grid = list(itertools.product(betas, tau_gs, cost_lambdas))
+    G, n_seeds = len(grid), len(seeds)
+    f = functools.partial(jnp.asarray, dtype=jnp.float32)
+    # flatten (grid x seed) into one lane axis: lane l = (g, s) with
+    # g = l // n_seeds, s = l % n_seeds — one vmap, one shardable axis
+    L = G * n_seeds
+    rep = functools.partial(jnp.repeat, repeats=n_seeds)
+    hyp = NeuralUCBHypers(
+        beta=rep(f([b for b, _, _ in grid])),
+        tau_g=rep(f([t for _, t, _ in grid])),
+        gate_margin=jnp.full((L,), gate_margin, jnp.float32),
+        lr=jnp.full((L,), lr, jnp.float32),
+        ridge_lambda0=jnp.full((L,), ridge_lambda0, jnp.float32),
+        cost_lambda=rep(f([-1.0 if l is None else l for _, _, l in grid])))
+    keys = jnp.tile(
+        jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds]), (G, 1))
+    keys, hyp = shard_sweep_axis((keys, hyp), L)
+    ms = _nucb_sweep_scan(_tables(env), _scan_xs(env), env.idx,
+                          _cum_valid(env), keys, hyp, cfg, ucb_backend,
+                          chunks, batch_size)
+    out = {k: np.asarray(v).reshape((G, n_seeds) + v.shape[1:])
+           for k, v in ms.items()}
+    out["beta"] = np.asarray([b for b, _, _ in grid], np.float32)
+    out["tau_g"] = np.asarray([t for _, t, _ in grid], np.float32)
+    out["cost_lambda"] = np.asarray(
+        [np.nan if l is None else l for _, _, l in grid], np.float32)
+    out["seeds"] = np.asarray(list(seeds))
+    out["train_steps"] = np.asarray(chunks * TRAIN_CHUNK)
+    return out
+
+
+def sweep_point_results(sweep: Dict[str, np.ndarray], g: int,
+                        s: int) -> Dict:
+    """Extract one (grid point, seed) run from a sweep as a
+    ``run_protocol`` per-policy result dict, so sweep cells feed
+    ``repro.core.protocol.summarize`` unchanged."""
+    cum = np.cumsum(np.asarray(sweep["sum_reward"][g, s], np.float64))
+    T = len(cum)
+    return {
+        "avg_reward": [float(v) for v in sweep["avg_reward"][g, s]],
+        "cum_reward": [float(v) for v in cum],
+        "avg_cost": [float(v) for v in sweep["avg_cost"][g, s]],
+        "avg_quality": [float(v) for v in sweep["avg_quality"][g, s]],
+        "action_hist": np.asarray(sweep["action_hist"][g, s]),
+        "wall_s": [0.0] * T,
+    }
 
 
 class DeviceNeuralUCB:
-    """Device-resident NeuralUCB protocol runner (paper Algorithm 1).
+    """Host-stepped NeuralUCB protocol runner (paper Algorithm 1).
 
     Same hyperparameters as :class:`repro.core.policy.NeuralUCBRouter`;
     the replay buffer is (T, S) device arrays of outcomes keyed by the
     env's slice-index matrix, so buffered contexts are looked up from the
-    resident tables instead of being copied."""
+    resident tables instead of being copied.
+
+    This is the parity reference for the single-dispatch scanned path
+    (:func:`run_neuralucb_device`): ~ceil(steps/TRAIN_CHUNK)+2 dispatches
+    and one sync per slice, identical math. ``run()`` delegates to the
+    scanned path when the schedule allows (fixed ``train_steps``, full
+    stream, fresh state); pass ``scan=False`` to force stepping."""
 
     def __init__(self, env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
                  seed: int = 0, beta: float = 1.0, tau_g: float = 0.5,
@@ -263,6 +573,7 @@ class DeviceNeuralUCB:
                  ucb_backend: Optional[str] = None):
         self.env = env
         self.cfg = cfg
+        self.seed = seed
         self.beta = beta
         self.tau_g = tau_g
         self.ridge_lambda0 = ridge_lambda0
@@ -270,36 +581,74 @@ class DeviceNeuralUCB:
         self.gate_margin = gate_margin
         self.batch_size = batch_size
         self.ucb_backend = ucb_backend or default_ucb_backend()
-        self.key = jax.random.PRNGKey(seed)
-        self.params = UN.init_utilitynet(jax.random.PRNGKey(seed), cfg)
-        self.opt = adamw_init(self.params)
-        self.ainv = NU.init_ainv(cfg.ucb_feature_dim, ridge_lambda0)
         T, S = env.idx.shape
-        self.bufs = {
-            "action": jnp.zeros((T, S), jnp.int32),
-            "reward": jnp.zeros((T, S), jnp.float32),
-            "gate_label": jnp.zeros((T, S), jnp.float32),
-            "w": jnp.zeros((T, S), jnp.float32),
-            "gate_w": jnp.zeros((T, S), jnp.float32),
-        }
+        # same split discipline as the scanned _init_state: split[0] ->
+        # network init, split[1] -> run stream (the PR-1 runner fed
+        # PRNGKey(seed) to both, correlating warm-slice exploration with
+        # the weight init)
+        state = _init_state(jax.random.PRNGKey(seed), cfg, T, S,
+                            ridge_lambda0)
+        self.params, self.opt = state.params, state.opt
+        self.ainv, self.bufs, self.key = state.ainv, state.bufs, state.key
+        self._cum0 = _cum_valid(env)
+        self._stepped = False   # True once run() has mutated state host-side
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
         return k
 
     def run(self, *, epochs: int = 5, verbose: bool = False,
-            max_slices: Optional[int] = None) -> Dict:
+            max_slices: Optional[int] = None,
+            train_steps: Optional[int] = None, scan="auto") -> Dict:
         """Run Algorithm 1 end to end; returns the ``run_protocol``
-        per-policy result dict (summarize-compatible)."""
+        per-policy result dict (summarize-compatible).
+
+        ``train_steps`` fixes the per-slice SGD budget (scanned-runner
+        schedule); without it the budget grows with the buffer
+        (``epochs * (seen // batch)``, the seed-loop schedule), which only
+        the stepped path can express. ``scan="auto"`` delegates to the
+        single-dispatch scanned runner whenever the schedule allows —
+        fixed ``train_steps``, full stream, state untouched by a previous
+        stepped run; ``scan=False`` forces stepping (parity reference)."""
+        can_scan = (train_steps is not None and max_slices is None
+                    and not self._stepped)
+        if scan is True and not can_scan:
+            raise ValueError(
+                "scan=True requires a fixed train_steps schedule, "
+                "max_slices=None, and state untouched by a stepped run")
+        if scan is not False and can_scan:
+            return self._run_scanned(train_steps, verbose)
+        return self._run_stepped(epochs=epochs, verbose=verbose,
+                                 max_slices=max_slices,
+                                 train_steps=train_steps)
+
+    def _run_scanned(self, train_steps: int, verbose: bool) -> Dict:
+        res, state = run_neuralucb_device(
+            self.env, self.cfg, seed=self.seed, train_steps=train_steps,
+            beta=self.beta, tau_g=self.tau_g,
+            ridge_lambda0=self.ridge_lambda0, lr=self.lr,
+            gate_margin=self.gate_margin, batch_size=self.batch_size,
+            ucb_backend=self.ucb_backend, return_state=True)
+        self.params, self.opt = state.params, state.opt
+        self.ainv, self.bufs, self.key = state.ainv, state.bufs, state.key
+        self._stepped = True
+        if verbose:
+            T = len(res["avg_reward"])
+            for t, v in enumerate(res["avg_reward"]):
+                print(f"[sim slice {t + 1:2d}/{T}] avg_reward={v:.3f}",
+                      flush=True)
+        return res
+
+    def _run_stepped(self, *, epochs: int, verbose: bool,
+                     max_slices: Optional[int],
+                     train_steps: Optional[int]) -> Dict:
         env = self.env
+        self._stepped = True
         tables = _tables(env)
         T = env.n_slices if max_slices is None else min(env.n_slices,
                                                         max_slices)
-        S = env.slice_width
-        sizes = env.slice_sizes
         per_slice = []
         wall = []
-        seen = 0
         for t in range(T):
             t0 = time.perf_counter()
             self.ainv, self.bufs, m = _nucb_slice_step(
@@ -308,15 +657,20 @@ class DeviceNeuralUCB:
                 jnp.float32(self.beta), jnp.float32(self.tau_g),
                 jnp.float32(self.gate_margin),
                 self.cfg, self.ucb_backend, t == 0)
-            seen += int(sizes[t])
+            # valid samples observed so far — the sampling range AND the
+            # growing-schedule budget base (was the padded (t+1)*S range)
+            count = self._cum0[t + 1]
+            if train_steps is not None:
+                num_steps = int(train_steps)
+            else:
+                num_steps = epochs * (int(count) // self.batch_size)
             # round the step budget up to TRAIN_CHUNK-sized dispatches:
-            # num_steps grows every slice, and as a static jit arg each
-            # distinct value would recompile the whole training scan
-            num_steps = epochs * (seen // self.batch_size)
+            # as a static jit arg each distinct value would recompile the
+            # whole training scan
             for _ in range(-(-num_steps // TRAIN_CHUNK)):
                 self.params, self.opt = _nucb_train(
                     self.params, self.opt, tables, env.idx, self.bufs,
-                    self._next_key(), jnp.int32((t + 1) * S),
+                    self._next_key(), self._cum0, count,
                     jnp.float32(self.lr), self.cfg, TRAIN_CHUNK,
                     self.batch_size)
             self.ainv = _nucb_rebuild(

@@ -17,7 +17,7 @@ numpy's, so it matches the host loop in distribution, not samples.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +28,34 @@ class DevicePolicy(NamedTuple):
     init: Callable
     decide: Callable
     update: Callable
+
+
+class NeuralUCBState(NamedTuple):
+    """Everything Algorithm 1 mutates across slices, as one explicit pytree
+    (DESIGN.md §8.4) — the carry of the single-dispatch protocol scan, and
+    the state snapshot the host-stepped runner threads between jit calls.
+    """
+
+    params: Dict[str, Any]      # UtilityNet weights
+    opt: Dict[str, Any]         # AdamW moments
+    ainv: jnp.ndarray           # shared inverse covariance (F, F)
+    bufs: Dict[str, jnp.ndarray]  # (T, S) replay outcome buffers
+    key: jnp.ndarray            # PRNG stream (network init already split off)
+
+
+class NeuralUCBHypers(NamedTuple):
+    """Per-run scalar hyperparameters, grouped so the sweep harness can
+    ``vmap`` one leading grid axis over all of them at once. A negative
+    ``cost_lambda`` is the sentinel for "keep the env's precomputed reward
+    table" (the replay tables carry normalized cost so reward can be
+    re-derived per Eq. 1 for any positive lambda on device)."""
+
+    beta: jnp.ndarray           # UCB exploration scale
+    tau_g: jnp.ndarray          # gate threshold
+    gate_margin: jnp.ndarray    # gate-label margin
+    lr: jnp.ndarray             # AdamW learning rate
+    ridge_lambda0: jnp.ndarray  # A = lambda0 I + ... ridge
+    cost_lambda: jnp.ndarray    # reward trade-off; < 0 -> env's table
 
 
 def _no_update(state, batch, actions, rewards, mask):

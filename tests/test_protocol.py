@@ -8,6 +8,7 @@ import pytest
 from repro.core.baselines import FixedActionPolicy, LinUCB, RandomPolicy
 from repro.core.policy import NeuralUCBRouter
 from repro.core.protocol import run_protocol, summarize
+from repro.core.replay import ReplayBuffer
 from repro.core.utilitynet import UtilityNetConfig
 from repro.data.routerbench import RouterBenchSim
 
@@ -62,6 +63,55 @@ def test_warm_start_then_ucb(small_env):
     assert not router.warm
     dec2 = router.decide(b["x_emb"][:8], b["x_feat"][:8], b["domain"][:8])
     assert dec2["action"].shape == (8,)
+
+
+def _fill_buffer(buf: ReplayBuffer, n: int, emb: int = 8, feat: int = 4):
+    rng = np.random.default_rng(0)
+    buf.add_batch(rng.normal(size=(n, emb)), rng.normal(size=(n, feat)),
+                  rng.integers(0, 3, n), rng.integers(0, 5, n),
+                  rng.uniform(size=n), rng.integers(0, 2, n))
+
+
+def test_replay_short_buffer_yields_tail():
+    """Regression: len(buffer) < batch_size used to yield NOTHING, so
+    train() silently did zero SGD steps on early slices and small
+    serving pools. The tail must come out as one short minibatch."""
+    buf = ReplayBuffer(8, 4)
+    _fill_buffer(buf, 40)
+    mbs = list(buf.minibatches(np.random.default_rng(1), batch_size=64))
+    assert len(mbs) == 1
+    assert len(mbs[0]["action"]) == 40
+
+
+def test_replay_full_batches_keep_static_shape():
+    """Once full batches exist the tail is dropped (a new batch shape
+    would retrace the jitted train step every slice); the short-batch
+    path is reserved for buffers smaller than one batch."""
+    buf = ReplayBuffer(8, 4)
+    _fill_buffer(buf, 100)
+    mbs = list(buf.minibatches(np.random.default_rng(1), batch_size=64))
+    assert [len(m["action"]) for m in mbs] == [64]
+    buf2 = ReplayBuffer(8, 4)
+    _fill_buffer(buf2, 128)
+    mbs2 = list(buf2.minibatches(np.random.default_rng(1), batch_size=64))
+    assert [len(m["action"]) for m in mbs2] == [64, 64]
+
+
+def test_router_trains_on_short_buffer(small_env):
+    """The host router must take SGD steps even when the buffer is
+    smaller than one batch (the bug left params untouched)."""
+    env = small_env
+    cfg = UtilityNetConfig(emb_dim=env.x_emb.shape[1], num_actions=env.K)
+    router = NeuralUCBRouter(cfg, seed=0, batch_size=256)
+    b = env.slice_batch(0)
+    n = 48                                 # < batch_size
+    dec = router.decide(b["x_emb"][:n], b["x_feat"][:n], b["domain"][:n])
+    router.update(b["x_emb"][:n], b["x_feat"][:n], b["domain"][:n], dec,
+                  b["reward"][np.arange(n), dec["action"]])
+    before = np.asarray(router.params["trunk1"]["w"]).copy()
+    metrics = router.train(epochs=1)
+    assert metrics, "train() returned no metrics -> no SGD step ran"
+    assert not np.array_equal(before, np.asarray(router.params["trunk1"]["w"]))
 
 
 def test_linucb_runs(small_env):

@@ -1,13 +1,17 @@
 """Protocol-layer regression: the device-resident engine (repro.sim) must
 reproduce the seed host loop (repro.core.protocol.run_protocol) on the
 same slice stream — deterministic policies match per-slice within float
-tolerance — and the shared summarize() must exclude slice 1."""
+tolerance — the single-dispatch scanned NeuralUCB runner must match the
+host-stepped parity reference, and the shared summarize() must exclude
+slice 1."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.baselines import EmpiricalGreedy, FixedActionPolicy
 from repro.core.protocol import run_protocol, summarize
-from repro.core.utilitynet import UtilityNetConfig
+from repro.core.utilitynet import UtilityNetConfig, init_utilitynet
 from repro.data.routerbench import RouterBenchSim
 from repro.sim import (
     DeviceNeuralUCB,
@@ -17,8 +21,12 @@ from repro.sim import (
     random_policy,
     run_baseline_device,
     run_baseline_sweep,
+    run_neuralucb_device,
+    run_neuralucb_sweep,
     run_protocol_device,
+    sweep_point_results,
 )
+from repro.sim.engine import _cum_valid, _sample_valid
 
 
 @pytest.fixture(scope="module")
@@ -98,6 +106,124 @@ def test_device_neuralucb_learns_and_is_monotone(envs):
     assert all(b >= a for a, b in zip(cum, cum[1:]))
     # warm slice covers most of the pool
     assert (res["action_hist"][0] > 0).sum() >= denv.K - 2
+
+
+@pytest.fixture(scope="module")
+def tiny_envs():
+    """Smaller stream for the scanned-runner tests (compile cost)."""
+    henv = RouterBenchSim(seed=0, n_samples=900, n_slices=3)
+    return henv, DeviceReplayEnv.from_host(henv)
+
+
+def test_scanned_matches_stepped_parity(tiny_envs):
+    """ISSUE acceptance: the single-dispatch scanned runner and the
+    host-stepped parity reference consume identical PRNG streams and run
+    identical per-slice math — metrics must match (bit-exact on CPU; the
+    tolerance absorbs cross-program fusion differences elsewhere)."""
+    henv, denv = tiny_envs
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    scanned = run_neuralucb_device(denv, cfg, seed=0, train_steps=32,
+                                   batch_size=128)
+    stepped = DeviceNeuralUCB(denv, cfg, seed=0, batch_size=128).run(
+        train_steps=32, scan=False)
+    for key in ("avg_reward", "cum_reward", "avg_cost", "avg_quality"):
+        np.testing.assert_allclose(scanned[key], stepped[key],
+                                   rtol=1e-4, atol=1e-4, err_msg=key)
+    np.testing.assert_array_equal(scanned["action_hist"],
+                                  stepped["action_hist"])
+
+
+def test_run_delegates_to_scan_and_matches(tiny_envs):
+    """run(scan='auto') with a fixed schedule must take the scanned path
+    and agree with an explicitly scanned run; scan=True after a stepped
+    run must refuse."""
+    henv, denv = tiny_envs
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    nucb = DeviceNeuralUCB(denv, cfg, seed=3, batch_size=128)
+    auto = nucb.run(train_steps=32)
+    ref = run_neuralucb_device(denv, cfg, seed=3, train_steps=32,
+                               batch_size=128)
+    np.testing.assert_allclose(auto["avg_reward"], ref["avg_reward"],
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        nucb.run(train_steps=32, scan=True)   # state already consumed
+
+
+def test_neuralucb_sweep_shapes_and_determinism(tiny_envs):
+    henv, denv = tiny_envs
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    kw = dict(seeds=[0, 1], betas=[0.5, 1.0], tau_gs=[0.5],
+              train_steps=32, batch_size=128)
+    sw = run_neuralucb_sweep(denv, cfg, **kw)
+    T = denv.n_slices
+    assert sw["avg_reward"].shape == (2, 2, T)
+    assert sw["action_hist"].shape == (2, 2, T, denv.K)
+    assert sw["beta"].tolist() == [0.5, 1.0]
+    assert sw["seeds"].tolist() == [0, 1]
+    # same seeds/grid -> bit-identical metrics (single cached dispatch)
+    sw2 = run_neuralucb_sweep(denv, cfg, **kw)
+    np.testing.assert_array_equal(sw["avg_reward"], sw2["avg_reward"])
+    # distinct seeds genuinely differ (uncorrelated init + exploration)
+    assert not np.array_equal(sw["avg_reward"][0, 0], sw["avg_reward"][0, 1])
+    # a sweep cell is exactly the corresponding single scanned run (pin
+    # the jnp backend: sweeps always use it, but a bare single run would
+    # pick the Pallas kernel on TPU and score with a different kernel)
+    single = run_neuralucb_device(denv, cfg, seed=1, beta=0.5,
+                                  train_steps=32, batch_size=128,
+                                  ucb_backend="jnp")
+    np.testing.assert_allclose(sw["avg_reward"][0, 1], single["avg_reward"],
+                               rtol=1e-5, atol=1e-6)
+    # sweep cells feed the shared summarize() unchanged
+    summ = summarize({"p": sweep_point_results(sw, 0, 1)})
+    assert np.isfinite(summ["p"]["avg_reward"])
+
+
+def test_neuralucb_sweep_cost_lambda_axis(tiny_envs):
+    """Sweeping cost_lambda re-derives the reward table on device: lambda
+    equal to the env's must reproduce the env-table sentinel run, and a
+    harsher lambda must lower the measured reward."""
+    henv, denv = tiny_envs
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    sw = run_neuralucb_sweep(denv, cfg, seeds=[0],
+                             cost_lambdas=[None, henv.cost_lambda, 4.0],
+                             train_steps=32, batch_size=128)
+    np.testing.assert_allclose(sw["avg_reward"][0, 0],
+                               sw["avg_reward"][1, 0], rtol=1e-5, atol=1e-6)
+    assert (sw["avg_reward"][2, 0].mean()
+            < sw["avg_reward"][0, 0].mean())
+
+
+def test_device_neuralucb_prng_streams_decorrelated(tiny_envs):
+    """Regression (PR-1 bug): PRNGKey(seed) fed BOTH init_utilitynet and
+    the run stream. Now one split feeds both consumers."""
+    henv, denv = tiny_envs
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    nucb = DeviceNeuralUCB(denv, cfg, seed=7)
+    k_init, k_run = jax.random.split(jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(nucb.key, k_run)
+    expect = init_utilitynet(k_init, cfg)
+    np.testing.assert_array_equal(nucb.params["text1"]["w"],
+                                  expect["text1"]["w"])
+    # and the old correlated layout is gone
+    old = init_utilitynet(jax.random.PRNGKey(7), cfg)
+    assert not np.array_equal(nucb.params["text1"]["w"], old["text1"]["w"])
+
+
+def test_sample_valid_never_hits_padding(envs):
+    """Regression (PR-1 bug): replay minibatch indices were drawn from the
+    padded (t+1)*S range, diluting batches by the padding fraction. The
+    valid-prefix draw must only ever land on real samples."""
+    _, denv = envs
+    cum0 = _cum_valid(denv)
+    t = denv.n_slices - 1
+    count = cum0[t + 1]
+    row, col = _sample_valid(jax.random.PRNGKey(0), 4096, cum0, count)
+    row, col = np.asarray(row), np.asarray(col)
+    assert row.min() >= 0 and row.max() <= t
+    mask = np.asarray(denv.mask)
+    assert (mask[row, col] == 1.0).all()
+    # every slice gets sampled (uniform over the valid prefix)
+    assert len(np.unique(row)) == denv.n_slices
 
 
 def test_summarize_skip_first_excludes_slice_1(envs):

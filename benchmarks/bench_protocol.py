@@ -19,10 +19,17 @@ Five comparisons, recorded to ``BENCH_protocol.json`` at the repo root
   neuralucb_sweep          — the paper's multi-seed NeuralUCB sweep:
       sequential per-slice runs (the only way the stepped runner can
       sweep) vs. one vmapped scan dispatch sharded over local devices.
+  scenario_scan            — the non-stationary scenario engine's cost
+      (DESIGN.md §9): the same Algorithm-1 scan with and without the
+      price_shock per-slice transforms (acceptance bound <= 1.3x).
+  scenario_adaptivity      — what forgetting buys: vanilla vs the
+      recency-forgetting variant (replay_rho=0.4) on the price_shock
+      and arm_outage scenarios, seed-mean avg reward per config.
 
   python -m benchmarks.bench_protocol [--n-samples N] [--n-slices T]
       [--seeds S] [--nucb-samples N] [--nucb-slices T] [--nucb-seeds S]
-      [--nucb-train-steps K] [--nucb-batch B] [--out PATH]
+      [--nucb-train-steps K] [--nucb-batch B] [--scen-samples N]
+      [--scen-slices T] [--scen-seeds S] [--out PATH]
 """
 from __future__ import annotations
 
@@ -51,6 +58,7 @@ from repro.data.routerbench import RouterBenchSim
 from repro.sim import (
     DeviceNeuralUCB,
     DeviceReplayEnv,
+    ForgettingConfig,
     fixed_policy,
     greedy_policy,
     random_policy,
@@ -149,14 +157,70 @@ def bench_neuralucb_runs(n_samples: int = 1200, n_slices: int = 32,
     }
 
 
-def bench_neuralucb_subprocess(n_samples: int, n_slices: int, n_seeds: int,
-                               train_steps: int, batch_size: int) -> Dict:
-    """Run :func:`bench_neuralucb_runs` in a subprocess with the host's
-    CPU cores exposed as XLA host-platform devices (the sweep shards its
-    lane axis across them, DESIGN.md §8.4 — same mechanism as the
-    512-device dry-run). Isolating the flag in a child process keeps this
-    process, and every other benchmark section, on the default single
-    device. Both runners inside the child see the identical device set."""
+def bench_scenarios(n_samples: int = 6000, n_slices: int = 12,
+                    n_seeds: int = 6, train_steps: int = 32,
+                    batch_size: int = 32) -> Dict:
+    """Non-stationary scenario engine (DESIGN.md §9), two questions:
+
+    * ``scenario_scan`` — what does the declarative per-slice transform
+      path COST? The same Algorithm-1 scan with and without the
+      price_shock transforms (per-slice quality/cost/reward re-derive +
+      availability handling); the ISSUE acceptance bound is <= 1.3x.
+    * ``scenario_adaptivity`` — what does forgetting BUY? Seed-mean avg
+      reward of vanilla NeuralUCB vs the recency-forgetting variant
+      (replay_rho=0.4, §9.2) under the price_shock and arm_outage
+      scenarios, each config one vmapped sweep dispatch.
+    """
+    henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
+    denv = DeviceReplayEnv.from_host(henv)
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    kw = dict(train_steps=train_steps, batch_size=batch_size,
+              ucb_backend="jnp")
+
+    def stationary():
+        return run_neuralucb_device(denv, cfg, seed=0, **kw)
+
+    def scenario():
+        return run_neuralucb_device(denv, cfg, seed=0,
+                                    scenario="price_shock", **kw)
+
+    stationary()                        # compile both traces
+    scenario()
+    stat_s = _median_wall(stationary)
+    scen_s = _median_wall(scenario)
+
+    adaptivity = {}
+    fg = ForgettingConfig(replay_rho=0.4)
+    for scen in ("price_shock", "arm_outage"):
+        row = {}
+        for name, f in (("vanilla", None), ("forgetting", fg)):
+            skw = dict(seeds=range(n_seeds), train_steps=train_steps,
+                       batch_size=batch_size, scenario=scen)
+            if f is not None:
+                skw["forgetting"] = f
+            sw = run_neuralucb_sweep(denv, cfg, **skw)
+            row[name] = float(sw["avg_reward"][0, :, 1:].mean())
+        row["delta"] = row["forgetting"] - row["vanilla"]
+        adaptivity[scen] = row
+
+    shape = {"n_samples": n_samples, "n_slices": n_slices,
+             "train_steps": train_steps, "batch_size": batch_size}
+    return {
+        "scenario_scan": dict(
+            shape, scenario="price_shock", stationary_s=stat_s,
+            scenario_s=scen_s, overhead=scen_s / stat_s),
+        "scenario_adaptivity": dict(
+            shape, n_seeds=n_seeds, replay_rho=0.4,
+            n_devices=len(jax.local_devices()), **adaptivity),
+    }
+
+
+def _bench_subprocess(args, n_seeds: int) -> Dict:
+    """Run a bench section in a subprocess with the host's CPU cores
+    exposed as XLA host-platform devices (sweeps shard their lane axis
+    across them, DESIGN.md §8.4 — same mechanism as the 512-device
+    dry-run). Isolating the flag in a child process keeps this process,
+    and every other benchmark section, on the default single device."""
     env = dict(os.environ)
     flags = env.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
@@ -170,23 +234,41 @@ def bench_neuralucb_subprocess(n_samples: int, n_slices: int, n_seeds: int,
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (src, env.get("PYTHONPATH")) if p)
     out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.bench_protocol", "--nucb-only",
+        [sys.executable, "-m", "benchmarks.bench_protocol", *args],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise RuntimeError("bench subprocess failed:\n"
+                           + out.stderr[-2000:])
+    return json.loads(out.stdout)
+
+
+def bench_neuralucb_subprocess(n_samples: int, n_slices: int, n_seeds: int,
+                               train_steps: int, batch_size: int) -> Dict:
+    return _bench_subprocess(
+        ["--nucb-only",
          "--nucb-samples", str(n_samples), "--nucb-slices", str(n_slices),
          "--nucb-seeds", str(n_seeds),
          "--nucb-train-steps", str(train_steps),
-         "--nucb-batch", str(batch_size)],
-        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
-    if out.returncode != 0:
-        raise RuntimeError("nucb bench subprocess failed:\n"
-                           + out.stderr[-2000:])
-    return json.loads(out.stdout)
+         "--nucb-batch", str(batch_size)], n_seeds)
+
+
+def bench_scenarios_subprocess(n_samples: int, n_slices: int,
+                               n_seeds: int, train_steps: int,
+                               batch_size: int) -> Dict:
+    return _bench_subprocess(
+        ["--scen-only",
+         "--scen-samples", str(n_samples), "--scen-slices", str(n_slices),
+         "--scen-seeds", str(n_seeds),
+         "--nucb-train-steps", str(train_steps),
+         "--nucb-batch", str(batch_size)], n_seeds)
 
 
 def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
                    n_seeds: int = 32, nucb_samples: int = 1200,
                    nucb_slices: int = 32, nucb_seeds: int = 4,
                    nucb_train_steps: int = 32,
-                   nucb_batch: int = 32) -> Dict:
+                   nucb_batch: int = 32, scen_samples: int = 6000,
+                   scen_slices: int = 12, scen_seeds: int = 6) -> Dict:
     henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
     denv = DeviceReplayEnv.from_host(henv)
     tables, xs = _tables(denv), denv.slice_xs()
@@ -257,6 +339,9 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
 
     nucb_runs = bench_neuralucb_subprocess(
         nucb_samples, nucb_slices, nucb_seeds, nucb_train_steps, nucb_batch)
+    scen_runs = bench_scenarios_subprocess(
+        scen_samples, scen_slices, scen_seeds, nucb_train_steps,
+        nucb_batch)
 
     return {
         # headline: protocol-engine throughput on the paper-style workload
@@ -291,11 +376,12 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
             "speedup": host_step_s / dev_step_s,
         },
         **nucb_runs,
+        **scen_runs,
     }
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine_v2", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v3", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -308,6 +394,14 @@ def run(refresh: bool = False, **kw):
         s = out[sec]
         rows.append((sec, round(s["stepped_s"], 4), round(s["scan_s"], 4),
                      round(s["speedup"], 2)))
+    s = out["scenario_scan"]
+    rows.append(("scenario_scan(overhead)", round(s["stationary_s"], 4),
+                 round(s["scenario_s"], 4), round(s["overhead"], 3)))
+    for scen, row in out["scenario_adaptivity"].items():
+        if isinstance(row, dict):
+            rows.append((f"adaptivity/{scen}", round(row["vanilla"], 4),
+                         round(row["forgetting"], 4),
+                         f"+{row['delta']:.4f}"))
     rows.append(("sweep_device_decisions_per_s",
                  round(out["baseline_sweep"]["device_decisions_per_s"]),
                  "", ""))
@@ -324,8 +418,14 @@ def main() -> None:
     ap.add_argument("--nucb-seeds", type=int, default=4)
     ap.add_argument("--nucb-train-steps", type=int, default=32)
     ap.add_argument("--nucb-batch", type=int, default=32)
+    ap.add_argument("--scen-samples", type=int, default=6000)
+    ap.add_argument("--scen-slices", type=int, default=12)
+    ap.add_argument("--scen-seeds", type=int, default=6)
     ap.add_argument("--nucb-only", action="store_true",
                     help="internal: run only the NeuralUCB sections and "
+                         "print their JSON (the subprocess entry point)")
+    ap.add_argument("--scen-only", action="store_true",
+                    help="internal: run only the scenario sections and "
                          "print their JSON (the subprocess entry point)")
     ap.add_argument("--out", default=ROOT_OUT)
     args = ap.parse_args()
@@ -335,10 +435,17 @@ def main() -> None:
             args.nucb_train_steps, args.nucb_batch)
         print(json.dumps(out, default=float))
         return
+    if args.scen_only:
+        out = bench_scenarios(
+            args.scen_samples, args.scen_slices, args.scen_seeds,
+            args.nucb_train_steps, args.nucb_batch)
+        print(json.dumps(out, default=float))
+        return
     out = bench_protocol(args.n_samples, args.n_slices, args.seeds,
                          args.nucb_samples, args.nucb_slices,
                          args.nucb_seeds, args.nucb_train_steps,
-                         args.nucb_batch)
+                         args.nucb_batch, args.scen_samples,
+                         args.scen_slices, args.scen_seeds)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(json.dumps(out, indent=1, default=float))

@@ -11,6 +11,8 @@ the device-resident protocol engine.
   PYTHONPATH=src python scripts/run_paper_experiments.py \
       --n-samples 1500 --n-slices 3 --sweep-seeds 2 --betas 0.5 1.0 \
       --train-steps 32 --sweep-only                                   # CI
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --scenario price_shock arm_outage --replay-rho 0.4              # §9
 
 The sweep runs as ONE device dispatch (`repro.sim.run_neuralucb_sweep`:
 the whole T-slice Algorithm-1 scan vmapped over (grid x seed) lanes and
@@ -32,10 +34,13 @@ from repro.data.routerbench import RouterBenchSim
 from repro.sim import (
     DeviceNeuralUCB,
     DeviceReplayEnv,
+    ForgettingConfig,
     fixed_policy,
     greedy_policy,
     random_policy,
+    run_baseline_device,
     run_baseline_sweep,
+    run_neuralucb_device,
     run_neuralucb_sweep,
     run_protocol_device,
     sweep_point_results,
@@ -144,6 +149,50 @@ def run_figure_sweep(denv, cfg, args):
             "points": points}, ok
 
 
+def run_scenario_suite(denv, cfg, args):
+    """Non-stationary scenario runs (DESIGN.md §9): per scenario, the
+    scanned NeuralUCB (vanilla AND the forgetting variant) plus greedy /
+    random baselines over the identical drifting stream — each run one
+    device dispatch — summarized with dynamic-oracle regret."""
+    fcfg = ForgettingConfig(gamma=args.gamma, window=args.window,
+                            replay_rho=args.replay_rho)
+    out = {}
+    ok = True
+    for name in args.scenario:
+        kw = dict(seed=args.seed, train_steps=args.train_steps,
+                  epochs=args.epochs)
+        results = {
+            "neuralucb": run_neuralucb_device(denv, cfg, scenario=name,
+                                              **kw),
+            "neuralucb-forget": run_neuralucb_device(
+                denv, cfg, scenario=name, forgetting=fcfg, **kw),
+            "greedy": run_baseline_device(denv, greedy_policy(denv.K),
+                                          seed=args.seed, scenario=name),
+            "random": run_baseline_device(denv, random_policy(denv.K),
+                                          seed=args.seed, scenario=name),
+        }
+        summ = summarize(results, skip_first=True)
+        header = (f"{'policy':<18}{'avg_reward':>11}{'oracle':>9}"
+                  f"{'dyn_regret':>11}{'avg_cost':>10}")
+        print(f"\nscenario: {name}  (forgetting: gamma={args.gamma} "
+              f"window={args.window} rho={args.replay_rho})")
+        print(header)
+        print("-" * len(header))
+        for pol, s in summ.items():
+            print(f"{pol:<18}{s['avg_reward']:>11.4f}"
+                  f"{s['oracle_avg_reward']:>9.4f}"
+                  f"{s['dynamic_regret']:>11.4f}{s['avg_cost']:>10.4f}")
+        out[name] = {
+            "summary": summ,
+            "per_slice": {k: {kk: vv for kk, vv in v.items()
+                              if kk not in ("action_hist",)}
+                          for k, v in results.items()},
+        }
+        ok = ok and all(np.isfinite(s["avg_reward"])
+                        for s in summ.values())
+    return out, ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-samples", type=int, default=36_497)
@@ -165,6 +214,20 @@ def main(argv=None) -> int:
                          "runner (default: derived from --epochs)")
     ap.add_argument("--sweep-only", action="store_true",
                     help="skip the single-run summary table (CI smoke)")
+    ap.add_argument("--scenario", nargs="+", default=None,
+                    help="non-stationary scenario names (DESIGN.md §9); "
+                         "each runs NeuralUCB (vanilla + forgetting) and "
+                         "baselines over the drifting stream")
+    ap.add_argument("--scenario-only", action="store_true",
+                    help="run only the --scenario suite (CI smoke)")
+    ap.add_argument("--gamma", type=float, default=1.0,
+                    help="A^-1 rebuild discount for the forgetting "
+                         "variant (1.0 = off)")
+    ap.add_argument("--window", type=int, default=0,
+                    help="A^-1 sliding window in slices (0 = off)")
+    ap.add_argument("--replay-rho", type=float, default=0.4,
+                    help="recency weight for replay sampling "
+                         "(1.0 = uniform)")
     ap.add_argument("--out", default="paper_experiments.json")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
@@ -177,7 +240,7 @@ def main(argv=None) -> int:
 
     out = {"config": vars(args)}
     ok = True
-    if not args.sweep_only:
+    if not args.sweep_only and not args.scenario_only:
         table, ok_t = run_summary_table(henv, denv, cfg, args)
         out.update(table)
         ok = ok and ok_t
@@ -187,6 +250,14 @@ def main(argv=None) -> int:
         ok = ok and ok_s
     elif args.sweep_only:
         print("--sweep-only given but --sweep-seeds is 0; nothing to do",
+              file=sys.stderr)
+        ok = False
+    if args.scenario:
+        scen_out, ok_n = run_scenario_suite(denv, cfg, args)
+        out["scenarios"] = scen_out
+        ok = ok and ok_n
+    elif args.scenario_only:
+        print("--scenario-only given but no --scenario names",
               file=sys.stderr)
         ok = False
 

@@ -99,13 +99,15 @@ def rebuild_ainv(gs: jax.Array, ridge_lambda0: float = 1.0,
     """A = lambda0 I + sum_i w_i g_i g_i^T ; return A^-1 via Cholesky solve.
 
     gs: (n, d) features of all buffered (context, action) pairs recomputed
-    with the freshly trained network. ``weights`` (n,) optionally masks
-    rows with binary validity weights (the protocol engine's padded /
-    unwritten buffer rows carry w=0 and vanish from the sum; w^2 = w for
-    binary weights, so scaling g by w is exact, not approximate).
+    with the freshly trained network. ``weights`` (n,) optionally weights
+    rows LINEARLY in A: rows are scaled by sqrt(w) so each contributes
+    w g g^T exactly — bit-identical to the old w-scaling for the binary
+    validity masks (sqrt of 0/1 is 0/1), and correct for the fractional
+    discounted-forgetting weights gamma^(t-s) (DESIGN.md §9.2), which the
+    old w-scaling would have squared.
     """
     if weights is not None:
-        gs = gs * weights[..., None]
+        gs = gs * jnp.sqrt(jnp.maximum(weights, 0.0))[..., None]
     d = gs.shape[-1]
     A = ridge_lambda0 * jnp.eye(d, dtype=jnp.float32) + gs.T @ gs
     cho = jax.scipy.linalg.cho_factor(A)

@@ -140,6 +140,11 @@ class NeuralUCBRouter:
 
     # ------------------------------------------------------------ TRAIN --
     def train(self, epochs: int = 5) -> Dict[str, float]:
+        # The short shuffle tail IS consumed: each distinct tail length
+        # retraces _train_step_jit once (<= batch_size - 1 shapes over a
+        # run's lifetime, small net), which we accept on this host
+        # reference path so every sample trains each epoch; jit-hot
+        # callers can pass drop_tail=True instead (repro.core.replay).
         last = {}
         for _ in range(epochs):
             for mb in self.buffer.minibatches(self.np_rng, self.batch_size):

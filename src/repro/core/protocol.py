@@ -78,14 +78,29 @@ def run_protocol(env: RouterBenchSim, policies: Dict[str, object], *,
 
 def summarize(results: Dict[str, Dict], skip_first: bool = True) -> Dict:
     """Paper-style summary: slice-1 is warm-start-affected and excluded
-    from formal comparison (paper §4.2)."""
+    from formal comparison (paper §4.2).
+
+    When a result carries the engine's per-slice ``oracle_avg_reward``
+    (the best AVAILABLE arm under that slice's effective tables —
+    DESIGN.md §9.3), the summary adds dynamic-regret accounting:
+    ``dynamic_regret`` is the summed per-slice average shortfall against
+    the dynamic oracle over the compared slices, so stationary and
+    drifting runs report directly comparable numbers. All values are
+    plain Python floats (JSON-serializable)."""
     out = {}
     for name, res in results.items():
         s = 1 if skip_first and len(res["avg_reward"]) > 1 else 0
-        out[name] = {
+        summ = {
             "avg_reward": float(np.mean(res["avg_reward"][s:])),
-            "final_cum_reward": res["cum_reward"][-1],
+            "final_cum_reward": float(res["cum_reward"][-1]),
             "avg_cost": float(np.mean(res["avg_cost"][s:])),
             "avg_quality": float(np.mean(res["avg_quality"][s:])),
         }
+        if "oracle_avg_reward" in res:
+            o = np.asarray(res["oracle_avg_reward"][s:], np.float64)
+            r = np.asarray(res["avg_reward"][s:], np.float64)
+            summ["oracle_avg_reward"] = float(o.mean())
+            summ["dynamic_regret"] = float(np.sum(o - r))
+            summ["dynamic_regret_per_slice"] = float(np.mean(o - r))
+        out[name] = summ
     return out

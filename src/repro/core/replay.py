@@ -46,20 +46,24 @@ class ReplayBuffer:
             }
         return self._cached
 
-    def minibatches(self, rng: np.random.Generator, batch_size: int
+    def minibatches(self, rng: np.random.Generator, batch_size: int, *,
+                    drop_tail: bool = False
                     ) -> Iterator[Dict[str, np.ndarray]]:
-        """Shuffled full minibatches; a buffer smaller than ``batch_size``
-        yields its whole content as one short batch instead of silently
-        skipping SGD (early protocol slices, small serving pools never
-        trained). Once full batches exist the sub-batch tail is dropped —
-        every distinct batch shape retraces the jitted train step, and the
-        shuffle already rotates the dropped samples across epochs."""
+        """Shuffled minibatches covering EVERY stored sample exactly once
+        per epoch: full batches plus the short shuffle tail (``n %
+        batch_size`` samples; the whole buffer when ``n < batch_size``).
+        Dropping the tail silently skipped SGD on early protocol slices
+        and small serving pools, and under-trained on up to
+        ``batch_size - 1`` samples per epoch forever after. Each distinct
+        tail size costs one extra trace of the jitted train step on this
+        host reference path — pass ``drop_tail=True`` to keep only full
+        batches (fixed shapes) when that matters; a buffer smaller than
+        one batch always yields its single short batch."""
         data = self.data()
         n = len(self)
         order = rng.permutation(n)
-        if n < batch_size:
-            yield {k: v[order] for k, v in data.items()}
-            return
-        for i in range(0, n - batch_size + 1, batch_size):
+        for i in range(0, n, batch_size):
             idx = order[i:i + batch_size]
+            if drop_tail and i > 0 and len(idx) < batch_size:
+                return
             yield {k: v[idx] for k, v in data.items()}

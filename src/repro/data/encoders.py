@@ -10,6 +10,7 @@ encoder-specific signal-to-noise ratio and a nuisance subspace, so that
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict
 
 import numpy as np
@@ -38,7 +39,12 @@ def encode(encoder: str, topic: np.ndarray, domain: np.ndarray,
            seed: int = 0) -> np.ndarray:
     """topic: (n, Z) latent; domain: (n,) ids -> (n, dim) embeddings."""
     spec = ENCODERS[encoder]
-    rng = np.random.default_rng(hash(encoder) % (2 ** 31) + seed)
+    # crc32, NOT hash(): str hash is randomized per process
+    # (PYTHONHASHSEED), which silently made every embedding table — and
+    # therefore every learned routing trajectory — irreproducible across
+    # processes. A fixed digest keeps the dataset a pure function of
+    # (encoder, seed).
+    rng = np.random.default_rng(zlib.crc32(encoder.encode()) + seed)
     z_dim = topic.shape[1]
     proj = rng.normal(size=(z_dim, spec.dim)) / np.sqrt(z_dim)
     dom_proj = rng.normal(size=(domain.max() + 1, spec.dim)) * spec.domain_leak

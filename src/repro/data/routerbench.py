@@ -130,6 +130,9 @@ def generate_routerbench(seed: int = 0, n_samples: int = N_SAMPLES
 
     return {
         "domain": domain,
+        # latent task family per sample (math, code, qa, ...) — the
+        # domain-mix-shift scenario re-slices the stream along this axis
+        "family": fam.astype(np.int32),
         "topic": topic.astype(np.float32),
         "difficulty": difficulty,
         "prompt_tokens": prompt_tokens.astype(np.float32),

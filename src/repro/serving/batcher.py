@@ -24,11 +24,14 @@ class Request:
 
 class RequestBatcher:
     def __init__(self, max_batch: int = 8, pad_to_multiple: int = 4,
-                 pad_token: int = 0):
+                 pad_token: int = 0, max_starve: int = 4):
         self.max_batch = max_batch
         self.pad_to_multiple = pad_to_multiple
         self.pad_token = pad_token
+        self.max_starve = max_starve
         self.queues: Dict[int, List[Request]] = defaultdict(list)
+        # rounds a non-empty queue has been passed over (aging)
+        self._age: Dict[int, int] = defaultdict(int)
 
     def submit(self, target: int, req: Request) -> None:
         self.queues[target].append(req)
@@ -37,15 +40,37 @@ class RequestBatcher:
         return sum(len(q) for q in self.queues.values())
 
     def next_batch(self):
-        """Pop up to max_batch requests for the fullest queue. Returns
-        (target, requests, padded_tokens (B, S)) or None."""
+        """Pop up to max_batch requests for the highest-priority queue.
+        Returns (target, requests, padded_tokens (B, S)) or None.
+
+        Pure fullest-first starved minority targets indefinitely: a
+        queue that refills above a small queue's length every round is
+        served forever while the small one waits. Round-robin aging
+        fixes this in two tiers — a queue passed over ``max_starve``
+        times is served unconditionally (oldest first, one starving
+        queue per round: with m queues starving simultaneously the worst
+        wait is ``max_starve + m - 1`` rounds), even when a majority
+        backlog GROWS every round; otherwise priority is queue length
+        plus age (throughput-first with drift toward fairness). Ties
+        break to the lowest target id (deterministic)."""
         if not self.pending():
             return None
-        target = max(self.queues, key=lambda t: len(self.queues[t]))
+        starving = [t for t in self.queues
+                    if self._age[t] >= self.max_starve]
+        if starving:
+            target = max(starving, key=lambda t: (self._age[t], -t))
+        else:
+            target = max(self.queues,
+                         key=lambda t: (len(self.queues[t]) + self._age[t],
+                                        -t))
         q = self.queues[target]
         reqs, self.queues[target] = q[:self.max_batch], q[self.max_batch:]
         if not self.queues[target]:
             del self.queues[target]
+        self._age.pop(target, None)
+        for t in self.queues:
+            if t != target:
+                self._age[t] += 1
         max_len = max(len(r.tokens) for r in reqs)
         max_len = -(-max_len // self.pad_to_multiple) * self.pad_to_multiple
         toks = np.full((len(reqs), max_len), self.pad_token, np.int32)

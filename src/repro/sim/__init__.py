@@ -13,12 +13,23 @@ dispatch (`run_neuralucb_sweep`, DESIGN.md §8.4).
 """
 from repro.sim.env import DeviceReplayEnv
 from repro.sim.policies import (
+    VANILLA_FORGETTING,
     DevicePolicy,
+    ForgettingConfig,
     NeuralUCBHypers,
     NeuralUCBState,
     fixed_policy,
     greedy_policy,
     random_policy,
+)
+from repro.sim.scenarios import (
+    SCENARIOS,
+    Scenario,
+    ScenarioTables,
+    identity_tables,
+    make_scenario,
+    register_scenario,
+    resolve_scenario,
 )
 from repro.sim.engine import (
     DeviceNeuralUCB,
@@ -34,8 +45,17 @@ from repro.sim.engine import (
 __all__ = [
     "DeviceReplayEnv",
     "DevicePolicy",
+    "ForgettingConfig",
+    "VANILLA_FORGETTING",
     "NeuralUCBHypers",
     "NeuralUCBState",
+    "SCENARIOS",
+    "Scenario",
+    "ScenarioTables",
+    "identity_tables",
+    "make_scenario",
+    "register_scenario",
+    "resolve_scenario",
     "fixed_policy",
     "greedy_policy",
     "random_policy",

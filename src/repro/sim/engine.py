@@ -15,6 +15,13 @@ Runners over a :class:`repro.sim.env.DeviceReplayEnv`:
 * :func:`run_neuralucb_sweep` — that scan ``vmap``-ed over PRNG keys and
   over a ``(beta, tau_g, cost_lambda)`` hyperparameter grid, sharded over
   local devices when more than one is present.
+
+Every runner accepts a ``scenario`` (DESIGN.md §9): the declarative
+non-stationary transforms from :mod:`repro.sim.scenarios` are applied
+per slice INSIDE the same scans (one device dispatch either way), and
+the NeuralUCB runners additionally take a
+:class:`repro.sim.policies.ForgettingConfig` selecting sliding-window /
+discounted A^-1 forgetting and recency-weighted replay sampling.
 * :class:`DeviceNeuralUCB` — the host-stepped runner (one fused jit call
   per slice phase), kept as the parity reference; its ``run()`` delegates
   to the scanned path when the schedule allows.
@@ -44,17 +51,30 @@ from repro.core.reward import normalize_cost
 from repro.distributed.sharding import shard_sweep_axis
 from repro.kernels.ucb_score.ops import ucb_score
 from repro.sim.env import DeviceReplayEnv
-from repro.sim.policies import DevicePolicy, NeuralUCBHypers, NeuralUCBState
+from repro.sim.policies import (
+    VANILLA_FORGETTING,
+    DevicePolicy,
+    ForgettingConfig,
+    NeuralUCBHypers,
+    NeuralUCBState,
+)
+from repro.sim.scenarios import ScenarioTables, resolve_scenario
 from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
 
 def _tables(env: DeviceReplayEnv) -> Dict[str, jnp.ndarray]:
     """Resident replay tables. ``cnorm`` is the Eq.-1 normalized cost,
     carried so sweep harnesses can re-derive the reward table for any
-    ``cost_lambda`` on device (baseline scans simply never read it)."""
+    ``cost_lambda`` on device (baseline scans simply never read it);
+    ``c_max`` / ``env_lambda`` / ``mean_cost`` feed the scenario
+    engine's per-slice reward recompute and availability fallback."""
     return {"x_emb": env.x_emb, "x_feat": env.x_feat, "domain": env.domain,
             "quality": env.quality, "cost": env.cost, "reward": env.reward,
-            "cnorm": normalize_cost(env.cost, env.cost.max())}
+            "cnorm": normalize_cost(env.cost, env.cost.max()),
+            "c_max": env.cost.max(),
+            "env_lambda": jnp.float32(env.cost_lambda),
+            "mean_cost": env.cost.mean(axis=0),
+            "oracle_max": env.reward.max(axis=1)}
 
 
 def _context(tables, idx):
@@ -62,17 +82,63 @@ def _context(tables, idx):
             "domain": tables["domain"][idx]}
 
 
-def _slice_metrics(tables, idx, mask, actions):
+def _effective_slice(tables, scn: Optional[ScenarioTables], t, idx, lam):
+    """Slice-t effective tables (DESIGN.md §9.1). With no scenario this
+    is None — the metrics/feedback paths then use the PR-2 (S,)-gather
+    fast path against the resident tables directly (materializing (S, K)
+    temporaries per slice measurably regressed the vmapped sweep). With
+    a scenario, the declarative per-slice transforms are applied to the
+    gathered (S, K) rows and the Eq.-1 reward is re-derived on device
+    with the env's stationary C_max (a shocked price may push the
+    normalized cost past 1 — that is the point of a shock)."""
+    if scn is None:
+        return None
+    q = jnp.clip(tables["quality"][idx] * scn.quality_mult[t]
+                 + scn.quality_add[t], 0.0, 1.0)
+    c = tables["cost"][idx] * scn.cost_mult[t]
+    r = q * jnp.exp(-lam * normalize_cost(c, tables["c_max"]))
+    return {"quality": q, "cost": c, "reward": r, "avail": scn.avail[t]}
+
+
+def _avail_fallback(a, avail, mean_cost):
+    """Engine-level failover for availability-unaware policies: a request
+    routed to an unavailable arm falls back to the cheapest available
+    arm (deterministic, like production failover to the budget tier)."""
+    fb = jnp.argmin(jnp.where(avail > 0, mean_cost, jnp.inf)).astype(
+        jnp.int32)
+    return jnp.where(avail[a] > 0, a, fb).astype(jnp.int32)
+
+
+def _pick(tables, eff, key, idx, actions):
+    """Chosen-action values (S,): resident-table gather on the
+    stationary fast path, effective-table gather under a scenario."""
+    if eff is None:
+        return tables[key][idx, actions]
+    rows = jnp.arange(actions.shape[0], dtype=jnp.int32)
+    return eff[key][rows, actions]
+
+
+def _slice_metrics(tables, eff, idx, mask, actions):
     denom = jnp.maximum(mask.sum(), 1.0)
-    r = tables["reward"][idx, actions] * mask
-    q = tables["quality"][idx, actions] * mask
-    c = tables["cost"][idx, actions] * mask
+    r = _pick(tables, eff, "reward", idx, actions) * mask
+    q = _pick(tables, eff, "quality", idx, actions) * mask
+    c = _pick(tables, eff, "cost", idx, actions) * mask
     K = tables["reward"].shape[1]
     hist = (jax.nn.one_hot(actions, K, dtype=jnp.float32)
             * mask[:, None]).sum(axis=0)
+    # dynamic oracle: best AVAILABLE arm per sample under the slice's
+    # effective tables (the regret reference, §9.3); precomputed per
+    # sample on the stationary path
+    if eff is None:
+        o = tables["oracle_max"][idx] * mask
+    else:
+        r_all = eff["reward"]
+        if eff["avail"] is not None:
+            r_all = jnp.where(eff["avail"] > 0, r_all, -1.0)
+        o = r_all.max(axis=1) * mask
     return {"sum_reward": r.sum(), "avg_reward": r.sum() / denom,
             "avg_cost": c.sum() / denom, "avg_quality": q.sum() / denom,
-            "action_hist": hist}
+            "action_hist": hist, "oracle_avg_reward": o.sum() / denom}
 
 
 def _metrics_to_results(ms: Dict[str, np.ndarray], wall_s: float) -> Dict:
@@ -85,23 +151,28 @@ def _metrics_to_results(ms: Dict[str, np.ndarray], wall_s: float) -> Dict:
         "cum_reward": [float(v) for v in cum],
         "avg_cost": [float(v) for v in ms["avg_cost"]],
         "avg_quality": [float(v) for v in ms["avg_quality"]],
+        "oracle_avg_reward": [float(v) for v in ms["oracle_avg_reward"]],
         "action_hist": np.asarray(ms["action_hist"]),
         "wall_s": [wall_s / T] * T,
     }
 
 
 # --------------------------------------------------------------- baselines --
-def _baseline_scan_impl(tables, xs, key, policy: DevicePolicy):
+def _baseline_scan_impl(tables, xs, key, policy: DevicePolicy, scn=None):
     state = policy.init(key)
 
     def step(carry, x):
         state, key = carry
         key, kd = jax.random.split(key)
-        idx, mask = x["idx"], x["mask"]
+        t, idx, mask = x["t"], x["idx"], x["mask"]
+        eff = _effective_slice(tables, scn, t, idx, tables["env_lambda"])
         batch = _context(tables, idx)
         a = policy.decide(state, kd, batch)
-        m = _slice_metrics(tables, idx, mask, a)
-        state = policy.update(state, batch, a, tables["reward"][idx, a], mask)
+        if eff is not None and eff["avail"] is not None:
+            a = _avail_fallback(a, eff["avail"], tables["mean_cost"])
+        m = _slice_metrics(tables, eff, idx, mask, a)
+        r = _pick(tables, eff, "reward", idx, a)
+        state = policy.update(state, batch, a, r, mask)
         return (state, key), m
 
     _, ms = jax.lax.scan(step, (state, key), xs)
@@ -112,33 +183,40 @@ _baseline_scan = jax.jit(_baseline_scan_impl, static_argnames=("policy",))
 
 
 @functools.partial(jax.jit, static_argnames=("policy",))
-def _baseline_sweep_scan(tables, xs, keys, policy: DevicePolicy):
+def _baseline_sweep_scan(tables, xs, keys, policy: DevicePolicy, scn=None):
     """The full T-slice scan vmapped over PRNG keys, compiled as one unit
-    so repeated sweeps are a single cached dispatch."""
+    so repeated sweeps are a single cached dispatch. Scenario transforms
+    are broadcast (not vmapped): all lanes replay the same drift."""
     return jax.vmap(
-        lambda k: _baseline_scan_impl(tables, xs, k, policy))(keys)
+        lambda k: _baseline_scan_impl(tables, xs, k, policy, scn))(keys)
 
 
 def run_baseline_device(env: DeviceReplayEnv, policy: DevicePolicy, *,
-                        seed: int = 0) -> Dict:
+                        seed: int = 0, scenario=None) -> Dict:
     """One policy, all T slices, one device dispatch. Returns the
-    ``run_protocol`` per-policy result dict (summarize-compatible)."""
+    ``run_protocol`` per-policy result dict (summarize-compatible).
+    ``scenario`` is a registered name or :class:`Scenario` (DESIGN.md
+    §9); the scan stays a single dispatch either way."""
+    env, scn, _ = resolve_scenario(env, scenario)
     t0 = time.perf_counter()
     ms = jax.block_until_ready(_baseline_scan(
-        _tables(env), env.slice_xs(), jax.random.PRNGKey(seed), policy))
+        _tables(env), env.slice_xs(), jax.random.PRNGKey(seed), policy,
+        scn))
     return _metrics_to_results(ms, time.perf_counter() - t0)
 
 
 def run_baseline_sweep(env: DeviceReplayEnv, policy: DevicePolicy,
-                       seeds) -> Dict[str, np.ndarray]:
+                       seeds, scenario=None) -> Dict[str, np.ndarray]:
     """Multi-seed sweep: vmap the whole T-slice scan over PRNG keys,
     sharded across local devices on the seed axis when several exist.
 
     Returns stacked raw metrics with a leading seed axis, e.g.
     ``out["avg_reward"]`` has shape (n_seeds, T)."""
+    env, scn, _ = resolve_scenario(env, scenario)
     keys = shard_sweep_axis(
         jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds]))
-    ms = _baseline_sweep_scan(_tables(env), env.slice_xs(), keys, policy)
+    ms = _baseline_sweep_scan(_tables(env), env.slice_xs(), keys, policy,
+                              scn)
     return {k: np.asarray(v) for k, v in ms.items()}
 
 
@@ -166,23 +244,38 @@ def _apply_cost_lambda(tables, cost_lambda):
     elementwise passes over the resident (n, K) tables)."""
     swept = tables["quality"] * jnp.exp(
         -jnp.abs(cost_lambda) * tables["cnorm"])
-    return dict(tables, reward=jnp.where(
-        cost_lambda >= 0, swept, tables["reward"]))
+    reward = jnp.where(cost_lambda >= 0, swept, tables["reward"])
+    # keep the per-sample dynamic-oracle reference consistent with the
+    # re-derived table (one (n, K) max per dispatch, outside the scan)
+    return dict(tables, reward=reward, oracle_max=reward.max(axis=1))
 
 
-def _decide_warm(params, batch, key, cfg: UN.UtilityNetConfig):
-    """Slice-1 warm start: uniform exploration; the safe-utility reference
-    is 0 and the gate loss is masked (gate scale 0)."""
+def _decide_warm(params, batch, key, cfg: UN.UtilityNetConfig, avail=None):
+    """Slice-1 warm start: uniform exploration (over AVAILABLE arms when
+    a scenario masks some); the safe-utility reference is 0 and the gate
+    loss is masked (gate scale 0). The masked draw is a randint over the
+    available COUNT mapped through the availability CDF, so with all
+    arms available it consumes the key identically to the plain draw
+    (an identity scenario reproduces the fast path bit-for-bit)."""
     B = batch["x_emb"].shape[0]
-    a = jax.random.randint(key, (B,), 0, cfg.num_actions, jnp.int32)
+    if avail is None:
+        a = jax.random.randint(key, (B,), 0, cfg.num_actions, jnp.int32)
+    else:
+        n_av = avail.astype(jnp.int32).sum()
+        r = jax.random.randint(key, (B,), 0, jnp.maximum(n_av, 1),
+                               jnp.int32)
+        rank = jnp.cumsum(avail.astype(jnp.int32)) - 1  # arm -> avail rank
+        a = jnp.searchsorted(rank, r, side="left").astype(jnp.int32)
     _, h, _ = UN.utilitynet_apply(
         params, batch["x_emb"], batch["x_feat"], batch["domain"], a)
     return a, NU.augment(h), jnp.zeros((B,), jnp.float32), jnp.float32(0.0)
 
 
 def _decide_ucb(params, ainv, batch, beta, tau_g,
-                cfg: UN.UtilityNetConfig, backend: str):
-    """Gated UCB decision over all actions (paper §3.3)."""
+                cfg: UN.UtilityNetConfig, backend: str, avail=None):
+    """Gated UCB decision over all actions (paper §3.3). Unavailable
+    arms (scenario avail mask) are excluded from BOTH the UCB argmax and
+    the safe mean-greedy argmax."""
     mu, h, gate_p = UN.utilitynet_all_actions(
         params, cfg, batch["x_emb"], batch["x_feat"], batch["domain"])
     g_all = NU.augment(h)                                  # (B, K, F)
@@ -191,8 +284,13 @@ def _decide_ucb(params, ainv, batch, beta, tau_g,
         scores = ucb_score(g_all, ainv, mu, beta, interpret=interpret)
     else:
         scores = mu + beta * NU.ucb_bonus(ainv, g_all)
+    mu_sel = mu
+    if avail is not None:
+        neg = jnp.where(avail > 0, 0.0, -jnp.inf)
+        scores = scores + neg
+        mu_sel = mu + neg
     a_ucb = jnp.argmax(scores, axis=-1)
-    a_safe = jnp.argmax(mu, axis=-1)
+    a_safe = jnp.argmax(mu_sel, axis=-1)
     a = jnp.where(gate_p >= tau_g, a_ucb, a_safe).astype(jnp.int32)
     g = jnp.take_along_axis(
         g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
@@ -200,11 +298,13 @@ def _decide_ucb(params, ainv, batch, beta, tau_g,
     return a, g, mu_safe, jnp.float32(1.0)
 
 
-def _post_decide(ainv, tables, bufs, t, idx, mask, a, g, mu_safe,
-                 gate_scale, gate_margin):
+def _post_decide(ainv, tables, eff, bufs, t, idx, mask, a, g, mu_safe,
+                 gate_scale, gate_margin, update_ainv: bool = True):
     """Feedback lookup -> buffer write -> rank-k Woodbury UPDATE, shared
-    by the static-warm step and the scanned traced-warm step."""
-    r = tables["reward"][idx, a]
+    by the static-warm step and the scanned traced-warm step.
+    ``update_ainv=False`` defers the online A^-1 update (delayed-feedback
+    scenarios apply the newly-VISIBLE slice instead, §9.1)."""
+    r = _pick(tables, eff, "reward", idx, a)
     gate_label = (r < mu_safe - gate_margin).astype(jnp.float32)
     bufs = {
         "action": bufs["action"].at[t].set(a),
@@ -213,9 +313,10 @@ def _post_decide(ainv, tables, bufs, t, idx, mask, a, g, mu_safe,
         "w": bufs["w"].at[t].set(mask),
         "gate_w": bufs["gate_w"].at[t].set(mask * gate_scale),
     }
-    # padded rows are zeroed -> contribute nothing to the rank-k update
-    ainv = NU.woodbury_update(ainv, g * mask[:, None])
-    return ainv, bufs, _slice_metrics(tables, idx, mask, a)
+    if update_ainv:
+        # padded rows are zeroed -> contribute nothing to the rank-k update
+        ainv = NU.woodbury_update(ainv, g * mask[:, None])
+    return ainv, bufs, _slice_metrics(tables, eff, idx, mask, a)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"))
@@ -223,15 +324,16 @@ def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
                      beta, tau_g, gate_margin,
                      cfg: UN.UtilityNetConfig, backend: str, warm: bool):
     """DECIDE -> feedback lookup -> buffer write -> rank-k UPDATE, fused.
-    Host-stepped entry point: ``warm`` is static (one trace per phase)."""
+    Host-stepped entry point: ``warm`` is static (one trace per phase).
+    Stationary tables only — scenarios are a scanned-runner feature."""
     batch = _context(tables, idx)
     if warm:
         a, g, mu_safe, gs = _decide_warm(params, batch, key, cfg)
     else:
         a, g, mu_safe, gs = _decide_ucb(params, ainv, batch, beta, tau_g,
                                         cfg, backend)
-    return _post_decide(ainv, tables, bufs, t, idx, mask, a, g, mu_safe,
-                        gs, gate_margin)
+    return _post_decide(ainv, tables, None, bufs, t, idx, mask, a, g,
+                        mu_safe, gs, gate_margin)
 
 
 # SGD steps per compiled training dispatch. Per-slice step budgets are
@@ -257,17 +359,54 @@ def _sample_valid(key, batch_size: int, cum0, count):
     return row, col
 
 
+def _sample_recency(key, batch_size: int, cum0, t_vis, rho: float):
+    """Recency-weighted replay draw (DESIGN.md §9.2): slice s <= t_vis is
+    drawn with probability proportional to size_s * rho^(t_vis - s), then
+    a column uniformly within the slice — so the UtilityNet's minibatches
+    lean toward post-drift feedback instead of averaging it away."""
+    sizes = (cum0[1:] - cum0[:-1]).astype(jnp.float32)          # (T,)
+    s = jnp.arange(sizes.shape[0], dtype=jnp.int32)
+    ok = (s <= jnp.maximum(t_vis, 0)) & (sizes > 0)
+    logw = jnp.where(
+        ok,
+        jnp.log(jnp.maximum(sizes, 1.0))
+        + (t_vis - s).astype(jnp.float32) * jnp.log(jnp.float32(rho)),
+        -jnp.inf)
+    k_row, k_col = jax.random.split(key)
+    row = jax.random.categorical(
+        k_row, logw, shape=(batch_size,)).astype(jnp.int32)
+    u = jax.random.uniform(k_col, (batch_size,))
+    col = jnp.minimum(jnp.floor(u * sizes[row]),
+                      jnp.maximum(sizes[row] - 1, 0)).astype(jnp.int32)
+    return row, col
+
+
 def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
-                 cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int):
-    """``num_steps`` SGD steps on uniformly-sampled replay minibatches,
-    all on device; ``count`` (traced) is the number of valid buffered
-    samples. Shared verbatim by the host-stepped and scanned runners so
-    identical keys give identical training trajectories."""
+                 cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int,
+                 t_vis=None, fcfg: ForgettingConfig = VANILLA_FORGETTING,
+                 delayed: bool = False):
+    """``num_steps`` SGD steps on sampled replay minibatches, all on
+    device; ``count`` (traced) is the number of VISIBLE buffered samples.
+    Shared verbatim by the host-stepped and scanned runners so identical
+    keys give identical training trajectories. ``fcfg`` (static) selects
+    uniform vs recency-weighted sampling; ``delayed`` (static) zeroes the
+    loss weights of rows past the visibility horizon ``t_vis`` (a
+    delayed-feedback slice's rows are written but not yet learnable)."""
 
     def step(carry, k):
         params, opt = carry
-        row, col = _sample_valid(k, batch_size, cum0, count)
+        if fcfg.replay_rho < 1.0:
+            row, col = _sample_recency(k, batch_size, cum0, t_vis,
+                                       fcfg.replay_rho)
+        else:
+            row, col = _sample_valid(k, batch_size, cum0, count)
         sid = env_idx[row, col]
+        w = bufs["w"][row, col]
+        gw = bufs["gate_w"][row, col]
+        if delayed:
+            vis = (row <= t_vis).astype(jnp.float32)
+            w = w * vis
+            gw = gw * vis
         batch = {
             "x_emb": tables["x_emb"][sid],
             "x_feat": tables["x_feat"][sid],
@@ -275,8 +414,8 @@ def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
             "action": bufs["action"][row, col],
             "reward": bufs["reward"][row, col],
             "gate_label": bufs["gate_label"][row, col],
-            "w": bufs["w"][row, col],
-            "gate_w": bufs["gate_w"][row, col],
+            "w": w,
+            "gate_w": gw,
         }
         (_, _), grads = jax.value_and_grad(
             _weighted_loss, has_aux=True)(params, cfg, batch)
@@ -290,15 +429,36 @@ def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
     return params, opt
 
 
-_nucb_train = jax.jit(_train_chunk,
-                      static_argnames=("cfg", "num_steps", "batch_size"))
+_nucb_train = jax.jit(
+    _train_chunk,
+    static_argnames=("cfg", "num_steps", "batch_size", "fcfg", "delayed"))
+
+
+def _slice_weights(T: int, t, delay: int, fcfg: ForgettingConfig):
+    """(T,) per-slice A^-1 rebuild weights: delayed visibility x
+    discounted/sliding-window forgetting (DESIGN.md §9.2). Only built
+    when delay > 0 or forgetting is active — the vanilla path passes
+    ``row_w=None`` and keeps the PR-2 rebuild bit-exact."""
+    s = jnp.arange(T, dtype=jnp.int32)
+    t_vis = t - delay
+    w = (s <= t_vis).astype(jnp.float32)
+    if fcfg.gamma < 1.0:
+        age = jnp.maximum(t_vis - s, 0).astype(jnp.float32)
+        w = w * jnp.float32(fcfg.gamma) ** age
+    if fcfg.window > 0:
+        w = w * (s > t_vis - fcfg.window).astype(jnp.float32)
+    return w
 
 
 def _rebuild_impl(params, tables, env_idx, action_buf, w_buf,
-                  cfg: UN.UtilityNetConfig, ridge_lambda0):
+                  cfg: UN.UtilityNetConfig, ridge_lambda0, row_w=None):
     """Recompute g for every buffered pair with the fresh net; one masked
     full-capacity pass (unwritten/padded rows have w=0 and vanish from
-    A = lambda0 I + sum w_i g_i g_i^T), then one Cholesky solve."""
+    A = lambda0 I + sum w_i g_i g_i^T), then one Cholesky solve.
+    ``row_w`` (T,) optionally reweights whole slices — the forgetting /
+    delayed-visibility hook (:func:`_slice_weights`)."""
+    if row_w is not None:
+        w_buf = w_buf * row_w[:, None]
     sid = env_idx.reshape(-1)
     a = action_buf.reshape(-1)
     w = w_buf.reshape(-1)
@@ -313,8 +473,7 @@ _nucb_rebuild = jax.jit(_rebuild_impl, static_argnames=("cfg",))
 
 # ------------------------------------------------ single-dispatch scan -----
 def _scan_xs(env: DeviceReplayEnv) -> Dict[str, jnp.ndarray]:
-    return {"t": jnp.arange(env.n_slices, dtype=jnp.int32),
-            "idx": env.idx, "mask": env.mask}
+    return env.slice_xs()
 
 
 def _cum_valid(env: DeviceReplayEnv) -> jnp.ndarray:
@@ -370,73 +529,109 @@ def _init_state(key, cfg: UN.UtilityNetConfig, T: int, S: int,
 
 def _nucb_slice_full(state: NeuralUCBState, x, tables, env_idx, cum0,
                      hyp: NeuralUCBHypers, cfg: UN.UtilityNetConfig,
-                     backend: str, train_chunks: int, batch_size: int):
+                     backend: str, train_chunks: int, batch_size: int,
+                     scn: Optional[ScenarioTables] = None, delay: int = 0,
+                     fcfg: ForgettingConfig = VANILLA_FORGETTING):
     """One whole slice of Algorithm 1 (DECIDE → UPDATE → TRAIN → REBUILD)
     as a pure scan body. Key discipline mirrors the host-stepped runner
     exactly (one split per slice step, one per training chunk) so both
-    paths consume identical PRNG streams."""
+    paths consume identical PRNG streams. ``scn`` applies the scenario
+    engine's per-slice transforms; ``delay`` (static) lags learning
+    visibility by d slices; ``fcfg`` (static) selects the forgetting
+    variant — all three default to the PR-2 stationary path, bit-exact.
+    """
     params, opt, ainv, bufs, key = state
     t, idx, mask = x["t"], x["idx"], x["mask"]
     key, k_slice = jax.random.split(key)
+    lam = jnp.where(hyp.cost_lambda >= 0, jnp.abs(hyp.cost_lambda),
+                    tables["env_lambda"])
+    eff = _effective_slice(tables, scn, t, idx, lam)
     batch = _context(tables, idx)
+    avail = None if eff is None else eff["avail"]
     a, g, mu_safe, gs = jax.lax.cond(
         t == 0,
-        lambda: _decide_warm(params, batch, k_slice, cfg),
+        lambda: _decide_warm(params, batch, k_slice, cfg, avail),
         lambda: _decide_ucb(params, ainv, batch, hyp.beta, hyp.tau_g,
-                            cfg, backend))
+                            cfg, backend, avail))
     ainv, bufs, metrics = _post_decide(
-        ainv, tables, bufs, t, idx, mask, a, g, mu_safe, gs,
-        hyp.gate_margin)
-    count = cum0[t + 1]
+        ainv, tables, eff, bufs, t, idx, mask, a, g, mu_safe, gs,
+        hyp.gate_margin, update_ainv=(delay == 0))
+    t_vis = t - delay
+    if delay > 0:
+        # the online rank-k update applies the slice that just became
+        # visible (t - delay), its features recomputed with current params
+        tv = jnp.maximum(t_vis, 0)
+        vid = env_idx[tv]
+        _, h, _ = UN.utilitynet_apply(
+            params, tables["x_emb"][vid], tables["x_feat"][vid],
+            tables["domain"][vid], bufs["action"][tv])
+        vw = bufs["w"][tv] * (t_vis >= 0).astype(jnp.float32)
+        ainv = NU.woodbury_update(ainv, NU.augment(h) * vw[:, None])
+    count = cum0[jnp.clip(t + 1 - delay, 0, cum0.shape[0] - 1)]
 
     def chunk(carry, _):
         params, opt, key = carry
         key, kc = jax.random.split(key)
         params, opt = _train_chunk(
             params, opt, tables, env_idx, bufs, kc, cum0, count, hyp.lr,
-            cfg, TRAIN_CHUNK, batch_size)
+            cfg, TRAIN_CHUNK, batch_size, t_vis, fcfg, delay > 0)
         return (params, opt, key), None
 
     (params, opt, key), _ = jax.lax.scan(
         chunk, (params, opt, key), None, length=train_chunks)
+    row_w = None
+    if delay > 0 or not fcfg.is_vanilla:
+        row_w = _slice_weights(env_idx.shape[0], t, delay, fcfg)
     ainv = _rebuild_impl(params, tables, env_idx, bufs["action"],
-                         bufs["w"], cfg, hyp.ridge_lambda0)
+                         bufs["w"], cfg, hyp.ridge_lambda0, row_w)
     return NeuralUCBState(params, opt, ainv, bufs, key), metrics
 
 
 def _nucb_scan_impl(tables, xs, env_idx, cum0, key, hyp: NeuralUCBHypers,
                     cfg: UN.UtilityNetConfig, backend: str,
-                    train_chunks: int, batch_size: int):
+                    train_chunks: int, batch_size: int,
+                    scn: Optional[ScenarioTables] = None, delay: int = 0,
+                    fcfg: ForgettingConfig = VANILLA_FORGETTING):
     T, S = env_idx.shape
-    tables = _apply_cost_lambda(tables, hyp.cost_lambda)
+    if scn is None:
+        # stationary: pre-derive the whole reward table once per run;
+        # scenario runs re-derive per slice inside _effective_slice
+        tables = _apply_cost_lambda(tables, hyp.cost_lambda)
     state = _init_state(key, cfg, T, S, hyp.ridge_lambda0)
 
     def step(carry, x):
         return _nucb_slice_full(carry, x, tables, env_idx, cum0, hyp,
-                                cfg, backend, train_chunks, batch_size)
+                                cfg, backend, train_chunks, batch_size,
+                                scn, delay, fcfg)
 
     return jax.lax.scan(step, state, xs)
 
 
 _nucb_scan = jax.jit(
     _nucb_scan_impl,
-    static_argnames=("cfg", "backend", "train_chunks", "batch_size"))
+    static_argnames=("cfg", "backend", "train_chunks", "batch_size",
+                     "delay", "fcfg"))
 
 
 @functools.partial(
     jax.jit, static_argnames=("cfg", "backend", "train_chunks",
-                              "batch_size"))
+                              "batch_size", "delay", "fcfg"))
 def _nucb_sweep_scan(tables, xs, env_idx, cum0, keys,
                      hyp: NeuralUCBHypers, cfg: UN.UtilityNetConfig,
-                     backend: str, train_chunks: int, batch_size: int):
+                     backend: str, train_chunks: int, batch_size: int,
+                     scn: Optional[ScenarioTables] = None, delay: int = 0,
+                     fcfg: ForgettingConfig = VANILLA_FORGETTING):
     """One flat vmap over (grid x seed) lanes — ``keys`` (L, 2) and every
     ``hyp`` leaf (L,) are pre-flattened by the caller, which reshapes the
     (L, T, ...) metrics back to (G, n_seeds, T, ...). A single batching
     axis compiles to markedly better CPU code than nested grid/seed
-    vmaps, and gives the device sharding one unambiguous axis."""
+    vmaps, and gives the device sharding one unambiguous axis. Scenario
+    transforms are broadcast, not vmapped: every lane replays the same
+    drift (one resident copy of the (T, K) transform tables)."""
     def one(k, h):
         return _nucb_scan_impl(tables, xs, env_idx, cum0, k, h, cfg,
-                               backend, train_chunks, batch_size)[1]
+                               backend, train_chunks, batch_size,
+                               scn, delay, fcfg)[1]
 
     return jax.vmap(one)(keys, hyp)
 
@@ -458,16 +653,22 @@ def run_neuralucb_device(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
                          gate_margin: float = 0.05, batch_size: int = 256,
                          cost_lambda: Optional[float] = None,
                          ucb_backend: Optional[str] = None,
+                         scenario=None,
+                         forgetting: ForgettingConfig = VANILLA_FORGETTING,
                          return_state: bool = False):
     """Algorithm 1 end to end as ONE device dispatch (DESIGN.md §8.4).
 
     ``train_steps`` is the fixed per-slice SGD budget (rounded up to a
     TRAIN_CHUNK multiple); when omitted it is derived from ``epochs`` via
     :func:`neuralucb_train_schedule` to match the stepped runner's total
-    budget. Returns the ``run_protocol`` per-policy result dict; with
-    ``return_state=True`` also the final :class:`NeuralUCBState`.
+    budget. ``scenario`` (name | Scenario | None) applies the DESIGN.md
+    §9 non-stationary transforms inside the same single scan;
+    ``forgetting`` selects the adaptivity variant (§9.2). Returns the
+    ``run_protocol`` per-policy result dict; with ``return_state=True``
+    also the final :class:`NeuralUCBState`.
     """
     backend = ucb_backend or default_ucb_backend()
+    env, scn, delay = resolve_scenario(env, scenario)
     if train_steps is None:
         train_steps = neuralucb_train_schedule(env, epochs, batch_size)
     chunks = -(-int(train_steps) // TRAIN_CHUNK)
@@ -475,7 +676,8 @@ def run_neuralucb_device(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
     t0 = time.perf_counter()
     state, ms = _nucb_scan(_tables(env), _scan_xs(env), env.idx,
                            _cum_valid(env), jax.random.PRNGKey(seed), hyp,
-                           cfg, backend, chunks, batch_size)
+                           cfg, backend, chunks, batch_size,
+                           scn, delay, forgetting)
     jax.block_until_ready(ms)
     res = _metrics_to_results({k: np.asarray(v) for k, v in ms.items()},
                               time.perf_counter() - t0)
@@ -488,7 +690,9 @@ def run_neuralucb_sweep(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
                         train_steps: Optional[int] = None,
                         ridge_lambda0: float = 1.0, lr: float = 1e-3,
                         gate_margin: float = 0.05, batch_size: int = 256,
-                        ucb_backend: str = "jnp") -> Dict[str, np.ndarray]:
+                        ucb_backend: str = "jnp", scenario=None,
+                        forgetting: ForgettingConfig = VANILLA_FORGETTING
+                        ) -> Dict[str, np.ndarray]:
     """Multi-seed, multi-hyper NeuralUCB sweep as one dispatch.
 
     The hyper grid is the cartesian product ``betas x tau_gs x
@@ -501,6 +705,7 @@ def run_neuralucb_sweep(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
     the sweep vmap.
     """
     seeds = list(seeds)
+    env, scn, delay = resolve_scenario(env, scenario)
     if train_steps is None:
         train_steps = neuralucb_train_schedule(env, epochs, batch_size)
     chunks = -(-int(train_steps) // TRAIN_CHUNK)
@@ -523,7 +728,7 @@ def run_neuralucb_sweep(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
     keys, hyp = shard_sweep_axis((keys, hyp), L)
     ms = _nucb_sweep_scan(_tables(env), _scan_xs(env), env.idx,
                           _cum_valid(env), keys, hyp, cfg, ucb_backend,
-                          chunks, batch_size)
+                          chunks, batch_size, scn, delay, forgetting)
     out = {k: np.asarray(v).reshape((G, n_seeds) + v.shape[1:])
            for k, v in ms.items()}
     out["beta"] = np.asarray([b for b, _, _ in grid], np.float32)
@@ -547,6 +752,8 @@ def sweep_point_results(sweep: Dict[str, np.ndarray], g: int,
         "cum_reward": [float(v) for v in cum],
         "avg_cost": [float(v) for v in sweep["avg_cost"][g, s]],
         "avg_quality": [float(v) for v in sweep["avg_quality"][g, s]],
+        "oracle_avg_reward": [float(v)
+                              for v in sweep["oracle_avg_reward"][g, s]],
         "action_hist": np.asarray(sweep["action_hist"][g, s]),
         "wall_s": [0.0] * T,
     }
@@ -570,7 +777,8 @@ class DeviceNeuralUCB:
                  seed: int = 0, beta: float = 1.0, tau_g: float = 0.5,
                  ridge_lambda0: float = 1.0, lr: float = 1e-3,
                  gate_margin: float = 0.05, batch_size: int = 256,
-                 ucb_backend: Optional[str] = None):
+                 ucb_backend: Optional[str] = None,
+                 forgetting: ForgettingConfig = VANILLA_FORGETTING):
         self.env = env
         self.cfg = cfg
         self.seed = seed
@@ -580,6 +788,7 @@ class DeviceNeuralUCB:
         self.lr = lr
         self.gate_margin = gate_margin
         self.batch_size = batch_size
+        self.forgetting = forgetting
         self.ucb_backend = ucb_backend or default_ucb_backend()
         T, S = env.idx.shape
         # same split discipline as the scanned _init_state: split[0] ->
@@ -628,7 +837,8 @@ class DeviceNeuralUCB:
             beta=self.beta, tau_g=self.tau_g,
             ridge_lambda0=self.ridge_lambda0, lr=self.lr,
             gate_margin=self.gate_margin, batch_size=self.batch_size,
-            ucb_backend=self.ucb_backend, return_state=True)
+            ucb_backend=self.ucb_backend, forgetting=self.forgetting,
+            return_state=True)
         self.params, self.opt = state.params, state.opt
         self.ainv, self.bufs, self.key = state.ainv, state.bufs, state.key
         self._stepped = True
@@ -672,10 +882,13 @@ class DeviceNeuralUCB:
                     self.params, self.opt, tables, env.idx, self.bufs,
                     self._next_key(), self._cum0, count,
                     jnp.float32(self.lr), self.cfg, TRAIN_CHUNK,
-                    self.batch_size)
+                    self.batch_size, jnp.int32(t), self.forgetting, False)
+            row_w = None if self.forgetting.is_vanilla else _slice_weights(
+                env.idx.shape[0], jnp.int32(t), 0, self.forgetting)
             self.ainv = _nucb_rebuild(
                 self.params, tables, env.idx, self.bufs["action"],
-                self.bufs["w"], self.cfg, jnp.float32(self.ridge_lambda0))
+                self.bufs["w"], self.cfg, jnp.float32(self.ridge_lambda0),
+                row_w)
             jax.block_until_ready(self.ainv)
             per_slice.append(m)
             wall.append(time.perf_counter() - t0)
@@ -693,15 +906,43 @@ def run_protocol_device(env: DeviceReplayEnv,
                         policies: Dict[str, DevicePolicy], *,
                         neuralucb: Optional[DeviceNeuralUCB] = None,
                         epochs: int = 5, seed: int = 0,
-                        verbose: bool = False) -> Dict[str, Dict]:
+                        verbose: bool = False,
+                        scenario=None) -> Dict[str, Dict]:
     """Drop-in device-resident counterpart of
     ``repro.core.protocol.run_protocol``: every policy replays the same
-    slice stream; results feed ``repro.core.protocol.summarize``."""
+    slice stream (and the same scenario drift, when one is named);
+    results feed ``repro.core.protocol.summarize``.
+
+    Scheduling caveat: with ``scenario=None`` the NeuralUCB leg is
+    ``neuralucb.run(epochs=...)`` — the stepped growing schedule (or its
+    scan delegation). With a scenario — INCLUDING the named
+    ``"stationary"`` — it is the scanned runner with the fixed
+    epochs-derived schedule (a scan cannot express a growing budget,
+    DESIGN.md §8.4), so the two calls are not sample-identical; the
+    byte-identical stationary contract holds at the
+    ``run_neuralucb_device`` / ``run_baseline_device`` level."""
     results = {}
     if neuralucb is not None:
-        results["neuralucb"] = neuralucb.run(epochs=epochs, verbose=verbose)
+        if scenario is not None:
+            results["neuralucb"] = run_neuralucb_device(
+                env, neuralucb.cfg, seed=neuralucb.seed,
+                epochs=epochs, beta=neuralucb.beta, tau_g=neuralucb.tau_g,
+                ridge_lambda0=neuralucb.ridge_lambda0, lr=neuralucb.lr,
+                gate_margin=neuralucb.gate_margin,
+                batch_size=neuralucb.batch_size,
+                ucb_backend=neuralucb.ucb_backend,
+                forgetting=neuralucb.forgetting, scenario=scenario)
+            if verbose:
+                r = results["neuralucb"]["avg_reward"]
+                name = getattr(scenario, "name", scenario)
+                print(f"[sim] neuralucb ({name}): avg_reward="
+                      f"{np.mean(r):.3f}", flush=True)
+        else:
+            results["neuralucb"] = neuralucb.run(epochs=epochs,
+                                                 verbose=verbose)
     for name, pol in policies.items():
-        results[name] = run_baseline_device(env, pol, seed=seed)
+        results[name] = run_baseline_device(env, pol, seed=seed,
+                                            scenario=scenario)
         if verbose:
             print(f"[sim] {name}: avg_reward="
                   f"{np.mean(results[name]['avg_reward']):.3f}", flush=True)

@@ -34,6 +34,10 @@ class DeviceReplayEnv:
     reward: jnp.ndarray     # (n, K) f32
     idx: jnp.ndarray        # (T, S) i32
     mask: jnp.ndarray       # (T, S) f32
+    # Eq.-1 parameters of the precomputed reward table, carried so the
+    # scenario engine can re-derive per-slice rewards for transformed
+    # quality/cost tables on device (repro.sim.scenarios).
+    cost_lambda: float = 1.0
 
     @property
     def n(self) -> int:
@@ -56,8 +60,11 @@ class DeviceReplayEnv:
         return np.asarray(self.mask.sum(axis=1)).astype(np.int64)
 
     def slice_xs(self) -> Dict[str, jnp.ndarray]:
-        """Per-slice scan inputs: the index rows and their masks."""
-        return {"idx": self.idx, "mask": self.mask}
+        """Per-slice scan inputs: slice number, index rows, masks. The
+        slice number feeds the scenario engine's per-slice transforms
+        (identity when no scenario is active)."""
+        return {"t": jnp.arange(self.n_slices, dtype=jnp.int32),
+                "idx": self.idx, "mask": self.mask}
 
     # arm statistics (match RouterBenchSim's convenience methods) ----------
     def min_cost_action(self) -> int:
@@ -85,4 +92,5 @@ class DeviceReplayEnv:
             reward=jnp.asarray(env.reward_table, jnp.float32),
             idx=jnp.asarray(idx),
             mask=jnp.asarray(mask),
+            cost_lambda=float(env.cost_lambda),
         )

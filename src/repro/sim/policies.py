@@ -58,6 +58,37 @@ class NeuralUCBHypers(NamedTuple):
     cost_lambda: jnp.ndarray    # reward trade-off; < 0 -> env's table
 
 
+class ForgettingConfig(NamedTuple):
+    """Non-stationarity adaptivity knobs (DESIGN.md §9.2). A plain
+    hashable NamedTuple of Python scalars so it rides through jit as a
+    STATIC argument: the vanilla config compiles to exactly the
+    stationary code path (bit-exact with PR-2), and each non-vanilla
+    combination is its own trace.
+
+    * ``gamma`` — per-slice discount on the A^-1 rebuild weights:
+      A_t = lambda0 I + sum_s gamma^(t-s) sum_{i in s} w_i g_i g_i^T.
+      1.0 = vanilla (infinite memory).
+    * ``window`` — sliding window in slices: only the last ``window``
+      slices enter the rebuild. 0 = off. Composes with ``gamma``.
+    * ``replay_rho`` — recency weight for replay sampling: slice s is
+      drawn with probability proportional to size_s * rho^(t-s) (then
+      uniform within the slice), so the UtilityNet relearns drifted
+      rewards instead of averaging over stale ones. 1.0 = uniform.
+    """
+
+    gamma: float = 1.0
+    window: int = 0
+    replay_rho: float = 1.0
+
+    @property
+    def is_vanilla(self) -> bool:
+        return (self.gamma >= 1.0 and self.window == 0
+                and self.replay_rho >= 1.0)
+
+
+VANILLA_FORGETTING = ForgettingConfig()
+
+
 def _no_update(state, batch, actions, rewards, mask):
     return state
 

@@ -1,0 +1,252 @@
+"""Declarative non-stationary scenario engine (DESIGN.md §9).
+
+A :class:`Scenario` is a pure description of how the replay environment
+drifts over the protocol run: per-slice, per-arm transforms of the cost
+and quality tables, per-slice arm availability, a re-sliced query stream
+(domain-mix shift), and a fixed feedback delay. Scenarios are *compiled*
+once on the host into a :class:`ScenarioTables` pytree of (T, K) arrays
+that the engine scans alongside the slice stream — every scenario run is
+still ONE device dispatch (`repro.sim.engine`), and because all scenarios
+share the same pytree shapes they also share one compiled trace (only a
+distinct ``feedback_delay`` retraces).
+
+Slice-t effective tables (engine's `_effective_slice`):
+
+    quality_t = clip(quality * quality_mult[t] + quality_add[t], 0, 1)
+    cost_t    = cost * cost_mult[t]
+    reward_t  = quality_t * exp(-lambda * log1p(cost_t) / log1p(C_max))
+
+with C_max and lambda frozen at the env's stationary values so reward
+scales stay comparable across slices (a shocked price can push the
+normalized cost past 1 — deliberately: that is what a price shock does to
+a fixed operating point). ``avail[t, a] = 0`` marks arm ``a`` as
+*announced* unavailable (deprecation / pre-launch): the router cannot
+select it and the dynamic oracle excludes it. Unannounced failures are
+modeled through quality instead (see ``arm_outage``).
+
+The registry maps names to builder functions taking the
+:class:`DeviceReplayEnv` (for arm statistics and stream shape); use
+:func:`register_scenario` to add more.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.env import DeviceReplayEnv
+
+
+class ScenarioTables(NamedTuple):
+    """Compiled per-slice transforms, all (T, K) float32 — the pytree the
+    protocol scan consumes (row t drives slice t)."""
+
+    cost_mult: jnp.ndarray
+    quality_mult: jnp.ndarray
+    quality_add: jnp.ndarray
+    avail: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A compiled scenario: table transforms (None = stationary fast
+    path), an optional re-sliced stream (domain-mix shift), and a fixed
+    feedback delay in slices (outcomes of slice t become learnable at
+    slice t + delay; metrics still accrue at t)."""
+
+    name: str
+    tables: Optional[ScenarioTables] = None
+    feedback_delay: int = 0
+    stream: Optional[Tuple[np.ndarray, np.ndarray]] = None  # (idx, mask)
+
+
+SCENARIOS: Dict[str, Callable[[DeviceReplayEnv], Scenario]] = {}
+
+
+def register_scenario(name: str):
+    def deco(fn: Callable[[DeviceReplayEnv], Scenario]):
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def make_scenario(env: DeviceReplayEnv,
+                  name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; registered: "
+                       f"{sorted(SCENARIOS)}")
+    return SCENARIOS[name](env)
+
+
+def resolve_scenario(env: DeviceReplayEnv,
+                     scenario: Union[None, str, Scenario]
+                     ) -> Tuple[DeviceReplayEnv, Optional[ScenarioTables],
+                                int]:
+    """Resolve a scenario argument (name | Scenario | None) into the
+    (possibly re-sliced) env, the transform pytree (None = stationary
+    fast path), and the static feedback delay."""
+    if scenario is None:
+        return env, None, 0
+    if isinstance(scenario, str):
+        scenario = make_scenario(env, scenario)
+    if scenario.tables is not None:
+        # every slice must keep >= 1 selectable arm: with none, the
+        # masked warm draw would emit the out-of-range action K and the
+        # slice's samples would silently vanish from the histograms
+        av = np.asarray(scenario.tables.avail)
+        if (av.max(axis=1) <= 0).any():
+            bad = int(np.argmax(av.max(axis=1) <= 0))
+            raise ValueError(
+                f"scenario {scenario.name!r}: slice {bad} has no "
+                f"available arm (avail row is all zero)")
+    if scenario.stream is not None:
+        idx, mask = scenario.stream
+        env = dataclasses.replace(env, idx=jnp.asarray(idx, jnp.int32),
+                                  mask=jnp.asarray(mask, jnp.float32))
+    return env, scenario.tables, int(scenario.feedback_delay)
+
+
+# ------------------------------------------------------------- builders --
+def identity_transforms(T: int, K: int) -> Dict[str, np.ndarray]:
+    """Host-side identity transform arrays for builders to edit in place."""
+    return {"cost_mult": np.ones((T, K), np.float32),
+            "quality_mult": np.ones((T, K), np.float32),
+            "quality_add": np.zeros((T, K), np.float32),
+            "avail": np.ones((T, K), np.float32)}
+
+
+def tables_from(tr: Dict[str, np.ndarray]) -> ScenarioTables:
+    return ScenarioTables(**{k: jnp.asarray(v) for k, v in tr.items()})
+
+
+def identity_tables(T: int, K: int) -> ScenarioTables:
+    """An explicit no-op ScenarioTables — exercises the scenario code
+    path while describing the stationary environment (tests use this to
+    pin the transform path against the fast path)."""
+    return tables_from(identity_transforms(T, K))
+
+
+def _strong_arm(env: DeviceReplayEnv) -> int:
+    """The arm a stationary learner converges to: best mean reward."""
+    return int(np.asarray(env.reward).mean(axis=0).argmax())
+
+
+def _ramp(T: int, t0: int, v0: float, v1: float) -> np.ndarray:
+    """(T,) schedule: v0 before t0, then geometric ramp to v1 at T-1."""
+    out = np.full((T,), v0, np.float64)
+    span = max(T - 1 - t0, 1)
+    for t in range(t0, T):
+        out[t] = v0 * (v1 / v0) ** ((t - t0) / span)
+    return out.astype(np.float32)
+
+
+@register_scenario("stationary")
+def _stationary(env: DeviceReplayEnv) -> Scenario:
+    """The paper's setting: no drift. Compiles to the fast path (no
+    transform pytree), so `run_neuralucb_device` / `run_baseline_device`
+    with scenario="stationary" are byte-identical to scenario-free
+    calls. (`run_protocol_device` is the one exception: naming ANY
+    scenario there selects the scanned fixed-schedule NeuralUCB runner —
+    see its docstring.)"""
+    return Scenario("stationary")
+
+
+@register_scenario("price_shock")
+def _price_shock(env: DeviceReplayEnv) -> Scenario:
+    """Rolling provider repricing: three waves of 60x price jumps, each
+    landing on the next tier of the pool's best arms — i.e. on the arms
+    a learner that adapted to the previous wave is now routing to. A
+    learner that keeps averaging over pre-shock feedback pays the
+    adaptation lag at every wave."""
+    T, K = env.n_slices, env.K
+    tr = identity_transforms(T, K)
+    order = np.asarray(env.reward).mean(axis=0).argsort()
+    waves = [order[-3:], order[-6:-3], order[-9:-6]]
+    starts = [max(1, T // 4), max(2, T // 2), max(3, (3 * T) // 4)]
+    for arms, s in zip(waves, starts):
+        if s < T and len(arms):
+            tr["cost_mult"][s:, arms] = 60.0
+    return Scenario("price_shock", tables_from(tr))
+
+
+@register_scenario("cost_drift")
+def _cost_drift(env: DeviceReplayEnv) -> Scenario:
+    """Smooth market rotation: the priciest third of the pool gets 60%
+    cheaper by the end of the run, the cheapest third 5x pricier —
+    the cost/quality frontier slowly inverts."""
+    T, K = env.n_slices, env.K
+    tr = identity_transforms(T, K)
+    rank = np.argsort(np.asarray(env.cost).mean(axis=0))
+    third = max(1, K // 3)      # K < 3: rank[-0:] would grab EVERY arm
+    lo, hi = rank[:third], rank[-third:]
+    for a in lo:
+        tr["cost_mult"][:, a] = _ramp(T, 1, 1.0, 5.0)
+    for a in hi:
+        tr["cost_mult"][:, a] = _ramp(T, 1, 1.0, 0.4)
+    return Scenario("cost_drift", tables_from(tr))
+
+
+@register_scenario("quality_decay")
+def _quality_decay(env: DeviceReplayEnv) -> Scenario:
+    """The strongest arm's quality decays to 15% over the run (model
+    staleness / silent degradation) — selectable throughout."""
+    T, K = env.n_slices, env.K
+    tr = identity_transforms(T, K)
+    tr["quality_mult"][:, _strong_arm(env)] = _ramp(T, 1, 1.0, 0.15)
+    return Scenario("quality_decay", tables_from(tr))
+
+
+@register_scenario("arm_outage")
+def _arm_outage(env: DeviceReplayEnv) -> Scenario:
+    """Cascading UNANNOUNCED outage: the top reward tier starts
+    returning garbage (quality 0) a third of the way in, and the tier
+    the router fails over to follows at two thirds. The arms stay
+    selectable — only feedback reveals the failure — so stale replay
+    keeps steering traffic into dead arms."""
+    T, K = env.n_slices, env.K
+    tr = identity_transforms(T, K)
+    order = np.asarray(env.reward).mean(axis=0).argsort()
+    tr["quality_mult"][max(1, T // 3):, order[-3:]] = 0.0
+    if len(order[-6:-3]):
+        tr["quality_mult"][max(2, (2 * T) // 3):, order[-6:-3]] = 0.0
+    return Scenario("arm_outage", tables_from(tr))
+
+
+@register_scenario("arm_arrival")
+def _arm_arrival(env: DeviceReplayEnv) -> Scenario:
+    """ANNOUNCED mid-stream launch: the strongest arm does not exist for
+    the first half of the run (avail 0 — not selectable, excluded from
+    the dynamic oracle), then ships."""
+    T, K = env.n_slices, env.K
+    tr = identity_transforms(T, K)
+    tr["avail"][:max(1, T // 2), _strong_arm(env)] = 0.0
+    return Scenario("arm_arrival", tables_from(tr))
+
+
+@register_scenario("domain_shift")
+def _domain_shift(env: DeviceReplayEnv) -> Scenario:
+    """Query-mix shift: the same samples, re-sliced in domain order, so
+    early slices are one task mix and late slices another (slice sizes
+    preserved; a pure stream transform, no table drift)."""
+    idx = np.asarray(env.idx)
+    mask = np.asarray(env.mask)
+    ids = idx[mask > 0]                          # stream order, row-major
+    dom = np.asarray(env.domain)[ids]
+    ids = ids[np.argsort(dom, kind="stable")]
+    new_idx = np.zeros_like(idx)
+    pos = 0
+    for t in range(idx.shape[0]):
+        n_t = int(mask[t].sum())
+        new_idx[t, :n_t] = ids[pos:pos + n_t]
+        pos += n_t
+    return Scenario("domain_shift", stream=(new_idx, mask))
+
+
+@register_scenario("delayed_feedback")
+def _delayed_feedback(env: DeviceReplayEnv) -> Scenario:
+    """Fixed-delay feedback: slice-t outcomes become learnable at slice
+    t+2 (grading latency). Rewards still accrue at t; only the
+    learner's visibility lags."""
+    return Scenario("delayed_feedback", feedback_delay=2)

@@ -1,0 +1,116 @@
+"""Golden regression: fixed-seed `run_neuralucb_device` on a tiny env
+against a committed metrics snapshot (tests/golden/neuralucb_tiny.json),
+so engine refactors can't silently shift the Figures 2-4 numbers.
+
+The run executes in a subprocess with PYTHONHASHSEED pinned: the whole
+pipeline (dataset, encoder, protocol scan) is then a deterministic
+function of (platform, jax version) — see the encoders crc32 fix.
+Tolerances are two-tier: when the snapshot was produced under the same
+jax version, per-slice curves must match tightly (2e-4); under a
+different jax version, XLA codegen changes can flip argmax decisions and
+chaotically perturb trajectories, so only the summary-level means are
+held (0.03) — still enough to catch schedule/PRNG/reward regressions,
+which shift means systematically.
+
+Regenerate (after an INTENTIONAL semantics change only):
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "neuralucb_tiny.json")
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+
+_RUN_SRC = """
+import json
+import jax
+import numpy as np
+from repro.core.protocol import summarize
+from repro.core.utilitynet import UtilityNetConfig
+from repro.data.routerbench import RouterBenchSim
+from repro.sim import DeviceReplayEnv, run_neuralucb_device
+
+henv = RouterBenchSim(seed=0, n_samples=600, n_slices=3)
+denv = DeviceReplayEnv.from_host(henv)
+cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+res = run_neuralucb_device(denv, cfg, seed=0, train_steps=32,
+                           batch_size=64, ucb_backend="jnp")
+summ = summarize({"neuralucb": res})["neuralucb"]
+out = {
+    "jax": jax.__version__,
+    "config": {"n_samples": 600, "n_slices": 3, "seed": 0,
+               "train_steps": 32, "batch_size": 64,
+               "ucb_backend": "jnp"},
+    "avg_reward": res["avg_reward"],
+    "cum_reward": res["cum_reward"],
+    "avg_cost": res["avg_cost"],
+    "avg_quality": res["avg_quality"],
+    "oracle_avg_reward": res["oracle_avg_reward"],
+    "action_hist": np.asarray(res["action_hist"]).tolist(),
+    "summary": summ,
+}
+print("GOLDEN=" + json.dumps(out))
+"""
+
+
+def _run_golden() -> dict:
+    env = dict(os.environ, PYTHONHASHSEED="0", JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p)
+    out = subprocess.run([sys.executable, "-c", _RUN_SRC], env=env,
+                         capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("GOLDEN=")][-1]
+    return json.loads(line.split("=", 1)[1])
+
+
+def test_neuralucb_tiny_matches_golden_snapshot():
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    got = _run_golden()
+    assert got["config"] == golden["config"]
+    same_jax = got["jax"] == golden["jax"]
+    curves = ("avg_reward", "cum_reward", "avg_cost", "avg_quality",
+              "oracle_avg_reward")
+    if same_jax:
+        for key in curves:
+            np.testing.assert_allclose(
+                got[key], golden[key], rtol=2e-4, atol=2e-4,
+                err_msg=f"{key} drifted from tests/golden/"
+                        f"neuralucb_tiny.json — if the change is an "
+                        f"INTENDED semantics change, regenerate via "
+                        f"`python tests/test_golden.py --regen`")
+        # decisions: histograms may differ by a handful of argmax flips
+        h0 = np.asarray(golden["action_hist"], np.float64)
+        h1 = np.asarray(got["action_hist"], np.float64)
+        assert np.abs(h0 - h1).sum() <= 0.02 * h0.sum()
+    else:
+        for key in ("avg_reward", "avg_cost", "avg_quality",
+                    "oracle_avg_reward"):
+            np.testing.assert_allclose(
+                np.mean(got[key][1:]), np.mean(golden[key][1:]),
+                atol=0.03, err_msg=f"{key} summary mean drifted "
+                                   f"(cross-jax-version tolerance)")
+    # structure is held unconditionally
+    assert np.asarray(got["action_hist"]).shape == \
+        np.asarray(golden["action_hist"]).shape
+    np.testing.assert_allclose(
+        np.asarray(got["action_hist"]).sum(axis=1),
+        np.asarray(golden["action_hist"]).sum(axis=1))
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv:
+        sys.exit("usage: python tests/test_golden.py --regen")
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    snap = _run_golden()
+    with open(GOLDEN, "w") as f:
+        json.dump(snap, f, indent=1)
+    print(f"wrote {GOLDEN} (jax {snap['jax']})")

@@ -83,18 +83,23 @@ def test_replay_short_buffer_yields_tail():
     assert len(mbs[0]["action"]) == 40
 
 
-def test_replay_full_batches_keep_static_shape():
-    """Once full batches exist the tail is dropped (a new batch shape
-    would retrace the jitted train step every slice); the short-batch
-    path is reserved for buffers smaller than one batch."""
+def test_replay_epoch_covers_tail():
+    """An epoch covers EVERY stored sample: full batches plus the short
+    shuffle tail (dropping it under-trained on up to batch_size-1
+    samples per epoch; tests/test_replay_buffer.py holds the full
+    coverage property). drop_tail=True remains for jit-hot callers that
+    need fixed shapes."""
     buf = ReplayBuffer(8, 4)
     _fill_buffer(buf, 100)
     mbs = list(buf.minibatches(np.random.default_rng(1), batch_size=64))
-    assert [len(m["action"]) for m in mbs] == [64]
+    assert [len(m["action"]) for m in mbs] == [64, 36]
     buf2 = ReplayBuffer(8, 4)
     _fill_buffer(buf2, 128)
     mbs2 = list(buf2.minibatches(np.random.default_rng(1), batch_size=64))
     assert [len(m["action"]) for m in mbs2] == [64, 64]
+    mbs3 = list(buf.minibatches(np.random.default_rng(1), batch_size=64,
+                                drop_tail=True))
+    assert [len(m["action"]) for m in mbs3] == [64]
 
 
 def test_router_trains_on_short_buffer(small_env):

@@ -1,0 +1,74 @@
+"""Property tests for the host ReplayBuffer (ISSUE satellite): the
+valid count never exceeds what was stored, and `minibatches` covers
+every stored sample exactly once per epoch — INCLUDING the short
+shuffle tail (previously dropped once full batches existed, silently
+under-training up to batch_size-1 samples per epoch)."""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — fall back to the local stub
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.replay import ReplayBuffer
+
+
+def _fill(buf: ReplayBuffer, n: int, seed: int = 0,
+          emb: int = 8, feat: int = 4):
+    rng = np.random.default_rng(seed)
+    # tag rewards with the global sample index so coverage is checkable
+    start = len(buf)
+    buf.add_batch(rng.normal(size=(n, emb)), rng.normal(size=(n, feat)),
+                  rng.integers(0, 3, n), rng.integers(0, 5, n),
+                  np.arange(start, start + n, dtype=np.float32),
+                  rng.integers(0, 2, n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(chunks=st.integers(1, 5), chunk_size=st.integers(1, 70),
+       batch_size=st.sampled_from([1, 16, 64]))
+def test_valid_count_matches_stored(chunks, chunk_size, batch_size):
+    """len(buffer) is exactly the number of samples added, however the
+    adds were chunked, and data() concatenates to the same count."""
+    buf = ReplayBuffer(8, 4)
+    for i in range(chunks):
+        _fill(buf, chunk_size, seed=i)
+    assert len(buf) == chunks * chunk_size
+    data = buf.data()
+    assert all(len(v) == len(buf) for v in data.values())
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 200), batch_size=st.sampled_from([16, 64, 128]),
+       seed=st.integers(0, 3))
+def test_minibatches_cover_every_sample_once_per_epoch(n, batch_size, seed):
+    """One epoch = a partition of the buffer: every stored sample appears
+    exactly once across the yielded batches (full batches + short tail),
+    and only the final batch may be short."""
+    buf = ReplayBuffer(8, 4)
+    _fill(buf, n)
+    mbs = list(buf.minibatches(np.random.default_rng(seed), batch_size))
+    sizes = [len(m["reward"]) for m in mbs]
+    assert sum(sizes) == n
+    assert all(s == batch_size for s in sizes[:-1])
+    assert 1 <= sizes[-1] <= batch_size
+    seen = np.sort(np.concatenate([m["reward"] for m in mbs]))
+    np.testing.assert_array_equal(seen, np.arange(n, dtype=np.float32))
+
+
+def test_minibatches_drop_tail_keeps_static_shapes():
+    """drop_tail=True restores fixed shapes for jit-hot callers — full
+    batches only — but still yields the whole buffer when it is smaller
+    than one batch (the PR-1 regression)."""
+    buf = ReplayBuffer(8, 4)
+    _fill(buf, 100)
+    sizes = [len(m["reward"])
+             for m in buf.minibatches(np.random.default_rng(0), 64,
+                                      drop_tail=True)]
+    assert sizes == [64]
+    small = ReplayBuffer(8, 4)
+    _fill(small, 40)
+    sizes = [len(m["reward"])
+             for m in small.minibatches(np.random.default_rng(0), 64,
+                                        drop_tail=True)]
+    assert sizes == [40]

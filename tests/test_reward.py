@@ -50,3 +50,47 @@ def test_reward_scale_invariance_of_ordering(q, c):
     r1a = float(utility_reward(q, c, cmax))
     r1b = float(utility_reward(q, 2 * c, cmax))
     assert r1a >= r1b
+
+
+@settings(max_examples=100, deadline=None)
+@given(q1=st.floats(0.0, 1.0), q2=st.floats(0.0, 1.0),
+       c=st.floats(0.0, 50.0), lam=st.floats(0.01, 5))
+def test_reward_monotone_increasing_in_quality(q1, q2, c, lam):
+    """At fixed cost, more quality never hurts: the cost factor is a
+    positive multiplier independent of q."""
+    lo, hi = sorted((q1, q2))
+    r_lo = float(utility_reward(lo, c, 50.0, lam))
+    r_hi = float(utility_reward(hi, c, 50.0, lam))
+    assert r_hi >= r_lo - 1e-7
+
+
+@settings(max_examples=100, deadline=None)
+@given(q=st.floats(0.01, 1.0), over=st.floats(1.0, 100.0),
+       lam=st.floats(0.01, 5))
+def test_cost_above_cmax_penalized_beyond_full_clamp(q, over, lam):
+    """Costs past C_max push the normalized cost past 1 (no hard clamp):
+    the reward is strictly below the full-penalty floor q*exp(-lam) —
+    the behavior a price-shocked arm relies on (DESIGN.md §9.1)."""
+    cmax = 10.0
+    r_at_cap = float(utility_reward(q, cmax, cmax, lam))
+    r_over = float(utility_reward(q, cmax * over, cmax, lam))
+    assert abs(r_at_cap - q * np.exp(-lam)) < 1e-5
+    assert r_over <= r_at_cap + 1e-7
+    if over > 1.0:
+        assert r_over < r_at_cap
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(1, 64), k=st.integers(1, 8), lam=st.floats(0.1, 3))
+def test_reward_table_bounds_elementwise(n, k, lam):
+    """Whole-table form (the env generator's path): every entry lies in
+    [0, q] and equals the scalar form."""
+    rng = np.random.default_rng(n * 100 + k)
+    q = rng.uniform(0, 1, (n, k)).astype(np.float32)
+    c = rng.uniform(0, 5, (n, k)).astype(np.float32)
+    table = np.asarray(utility_reward(jnp.asarray(q), jnp.asarray(c),
+                                      5.0, lam))
+    assert table.shape == (n, k)
+    assert (table >= -1e-7).all() and (table <= q + 1e-6).all()
+    one = float(utility_reward(float(q[0, 0]), float(c[0, 0]), 5.0, lam))
+    assert abs(one - table[0, 0]) < 1e-6

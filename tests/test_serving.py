@@ -1,4 +1,8 @@
-"""Serving substrate: batcher semantics, engine generate, routed pool."""
+"""Serving substrate: batcher semantics (incl. the round-robin-aging
+starvation fix), engine generate, routed pool, and serving-vs-protocol
+parity: `RoutedServingPool.submit` over a full replay stream must
+reproduce `core.protocol.run_protocol` rewards and action histograms
+when given the same quality table and cost vector."""
 import dataclasses
 
 import numpy as np
@@ -6,7 +10,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.policy import NeuralUCBRouter
+from repro.core.protocol import run_protocol
 from repro.core.utilitynet import UtilityNetConfig
+from repro.data.routerbench import RouterBenchSim
 from repro.serving import Request, RequestBatcher, RoutedServingPool, ServingEngine
 
 
@@ -25,6 +31,38 @@ def test_batcher_groups_and_pads():
     assert list(toks[0][:3]) == [1, 2, 3] and toks[0][3] == 0
     target2, reqs2, toks2 = b.next_batch()
     assert target2 == 1 and toks2.shape == (1, 4)
+    assert b.next_batch() is None
+
+
+def test_batcher_minority_queue_never_starves():
+    """Regression: next_batch popped the fullest queue, so a minority
+    target starved indefinitely whenever a majority queue refilled above
+    it every round. Round-robin aging bounds the wait."""
+    b = RequestBatcher(max_batch=2, pad_to_multiple=1)
+    b.submit(1, Request(tokens=np.array([7])))      # lone minority request
+    served = []
+    for _ in range(8):                              # steady majority load
+        for _ in range(3):
+            b.submit(0, Request(tokens=np.array([1, 2])))
+        target, _, _ = b.next_batch()
+        served.append(target)
+    assert 1 in served, f"minority target starved: {served}"
+    # the wait is bounded at max_starve rounds even under growing backlog
+    assert served.index(1) <= b.max_starve
+    # and the majority queue still gets the bulk of the batches
+    assert served.count(0) > served.count(1)
+
+
+def test_batcher_age_resets_after_service():
+    """A served queue's age resets — it cannot immediately leapfrog a
+    fuller queue again on pure age."""
+    b = RequestBatcher(max_batch=1, pad_to_multiple=1)
+    b.submit(0, Request(tokens=np.array([1])))
+    b.submit(0, Request(tokens=np.array([1])))
+    b.submit(1, Request(tokens=np.array([2])))
+    assert b.next_batch()[0] == 0       # fullest first
+    assert b.next_batch()[0] == 1       # aged minority wins the tie
+    assert b.next_batch()[0] == 0
     assert b.next_batch() is None
 
 
@@ -72,3 +110,66 @@ def test_routed_pool_round_trip():
         assert o["action"] in (0, 1)
         assert o["cost"] > 0
     assert len(router.buffer) == 5
+
+
+def test_serving_pool_matches_protocol_replay():
+    """Serving-parity (ISSUE): a RoutedServingPool driven slice-by-slice
+    over a full replay stream must reproduce `run_protocol`'s NeuralUCB
+    rewards and action histograms, given the same quality table and a
+    cost table derived from the pool's own per-token prices. The cost
+    bridge: `generate(max_new=8)` always emits 8 tokens, so request cost
+    is cost_per_token * (prompt_len + 8) — the env's cost table is built
+    from exactly that expression."""
+    K, n, T = 2, 48, 3
+    rng = np.random.default_rng(0)
+    plen = rng.integers(4, 9, size=n)
+    cpt = np.array([2e-4, 1e-5])
+    cost = (cpt[None] * (plen[:, None] + 8)).astype(np.float32)
+    quality = rng.uniform(0.2, 0.95, size=(n, K)).astype(np.float32)
+    data = {
+        "domain": rng.integers(0, 3, size=n).astype(np.int32),
+        "topic": rng.normal(size=(n, 32)).astype(np.float32),
+        "difficulty": np.zeros(n, np.float32),
+        "prompt_tokens": plen.astype(np.float32),
+        "quality": quality,
+        "cost": cost,
+        "x_feat": rng.normal(size=(n, 4)).astype(np.float32),
+        "model_names": np.array(["a", "b"]),
+    }
+    henv = RouterBenchSim(seed=0, n_slices=T, cost_lambda=1.0, data=data)
+    ucfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=K,
+                            num_domains=3)
+
+    # reference: the protocol host loop
+    host = run_protocol(henv, {"nucb": NeuralUCBRouter(
+        ucfg, seed=0, batch_size=16)}, epochs=2, verbose=False)["nucb"]
+
+    # system under test: the serving pool over the identical stream
+    cfgs = [dataclasses.replace(get_config(a).reduced(), dtype="float32")
+            for a in ("llama3_2_3b", "mamba2_130m")]
+    engines = [ServingEngine(c, seed=i, max_seq=32)
+               for i, c in enumerate(cfgs)]
+    pool = RoutedServingPool(
+        NeuralUCBRouter(ucfg, seed=0, batch_size=16), engines, cpt,
+        quality_table=quality, c_max=henv.c_max, cost_lambda=1.0,
+        max_batch=8)
+    tok_rng = np.random.default_rng(1)
+    for t in range(T):
+        b = henv.slice_batch(t)
+        reqs = [Request(tokens=tok_rng.integers(1, 50, size=int(plen[i])),
+                        x_emb=henv.x_emb[i], x_feat=data["x_feat"][i],
+                        domain=int(data["domain"][i]), sample_idx=int(i))
+                for i in b["idx"]]
+        recs = pool.submit(reqs)
+        pool.end_slice(epochs=2)
+        # per-slice parity: rewards and the action histogram
+        np.testing.assert_allclose(
+            np.mean([r["reward"] for r in recs]),
+            host["avg_reward"][t], rtol=1e-5, atol=1e-5,
+            err_msg=f"slice {t} avg reward")
+        hist = np.bincount([r["action"] for r in recs], minlength=K)
+        np.testing.assert_array_equal(hist, host["action_hist"][t],
+                                      err_msg=f"slice {t} action hist")
+        np.testing.assert_allclose(
+            np.mean([r["cost"] for r in recs]), host["avg_cost"][t],
+            rtol=1e-5, err_msg=f"slice {t} avg cost")

@@ -25,11 +25,16 @@ Five comparisons, recorded to ``BENCH_protocol.json`` at the repo root
   scenario_adaptivity      — what forgetting buys: vanilla vs the
       recency-forgetting variant (replay_rho=0.4) on the price_shock
       and arm_outage scenarios, seed-mean avg reward per config.
+  policy_zoo_sweep         — the unified runtime's policy axis
+      (DESIGN.md §10): a 5-policy × seed sweep as ONE sharded dispatch
+      vs per-policy sweeps and sequential per-seed runs, with
+      per-policy decisions/s.
 
   python -m benchmarks.bench_protocol [--n-samples N] [--n-slices T]
       [--seeds S] [--nucb-samples N] [--nucb-slices T] [--nucb-seeds S]
       [--nucb-train-steps K] [--nucb-batch B] [--scen-samples N]
-      [--scen-slices T] [--scen-seeds S] [--out PATH]
+      [--scen-slices T] [--scen-seeds S] [--zoo-samples N]
+      [--zoo-slices T] [--zoo-seeds S] [--out PATH]
 """
 from __future__ import annotations
 
@@ -59,16 +64,21 @@ from repro.sim import (
     DeviceNeuralUCB,
     DeviceReplayEnv,
     ForgettingConfig,
+    as_bandit_policy,
     fixed_policy,
     greedy_policy,
+    make_policy,
     random_policy,
     run_baseline_sweep,
     run_neuralucb_device,
     run_neuralucb_sweep,
+    run_policy_device,
+    run_policy_sweep,
 )
 from repro.sim.engine import (
-    _baseline_scan,
+    _cum_valid,
     _nucb_slice_step,
+    _policy_scan,
     _tables,
 )
 
@@ -215,6 +225,67 @@ def bench_scenarios(n_samples: int = 6000, n_slices: int = 12,
     }
 
 
+def bench_policy_zoo(n_samples: int = 1200, n_slices: int = 8,
+                     n_seeds: int = 4, train_steps: int = 32,
+                     batch_size: int = 32) -> Dict:
+    """The unified runtime's policy axis (DESIGN.md §10): a 5-policy
+    (neuralucb / linucb / neural_ts / eps_greedy / boltzmann) × seed
+    sweep as ONE sharded dispatch vs (a) each policy's own one-dispatch
+    sweep and (b) sequential per-seed single runs — per-policy
+    decisions/s and the sweep speedup recorded per policy."""
+    henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
+    denv = DeviceReplayEnv.from_host(henv)
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    names = ("neuralucb", "linucb", "neural_ts", "eps_greedy", "boltzmann")
+    policies = {n: make_policy(n, denv, cfg, ucb_backend="jnp")
+                for n in names}
+    kw = dict(train_steps=train_steps, batch_size=batch_size)
+
+    def zoo():
+        return run_policy_sweep(denv, policies, seeds=range(n_seeds), **kw)
+
+    zoo()                               # compile the one-dispatch program
+    zoo_s = _median_wall(zoo)
+
+    per_policy = {}
+    sum_sweep = 0.0
+    sum_seq = 0.0
+    decisions = n_seeds * henv.n
+    for name in names:
+        pol, hyp = policies[name]
+
+        def psweep(name=name, pol=pol, hyp=hyp):
+            return run_policy_sweep(denv, {name: (pol, hyp)},
+                                    seeds=range(n_seeds), **kw)
+
+        def pseq(pol=pol, hyp=hyp):
+            for s in range(n_seeds):
+                run_policy_device(denv, pol, hyp, seed=s, **kw)
+
+        psweep()                        # compile both reference paths
+        pseq()
+        ps = _median_wall(psweep)
+        sq = _median_wall(pseq, reps=1)
+        per_policy[name] = {
+            "sweep_s": ps, "sequential_s": sq, "speedup": sq / ps,
+            "decisions_per_s": decisions / ps,
+        }
+        sum_sweep += ps
+        sum_seq += sq
+
+    return {"policy_zoo_sweep": {
+        "n_samples": n_samples, "n_slices": n_slices,
+        "train_steps": train_steps, "batch_size": batch_size,
+        "n_seeds": n_seeds, "n_policies": len(names),
+        "n_devices": len(jax.local_devices()),
+        "zoo_dispatch_s": zoo_s,
+        "sum_single_policy_sweeps_s": sum_sweep,
+        "sequential_runs_s": sum_seq,
+        "speedup_vs_sequential": sum_seq / zoo_s,
+        "per_policy": per_policy,
+    }}
+
+
 def _bench_subprocess(args, n_seeds: int) -> Dict:
     """Run a bench section in a subprocess with the host's CPU cores
     exposed as XLA host-platform devices (sweeps shard their lane axis
@@ -263,17 +334,35 @@ def bench_scenarios_subprocess(n_samples: int, n_slices: int,
          "--nucb-batch", str(batch_size)], n_seeds)
 
 
+def bench_policy_zoo_subprocess(n_samples: int, n_slices: int,
+                                n_seeds: int, train_steps: int,
+                                batch_size: int) -> Dict:
+    return _bench_subprocess(
+        ["--zoo-only",
+         "--zoo-samples", str(n_samples), "--zoo-slices", str(n_slices),
+         "--zoo-seeds", str(n_seeds),
+         "--nucb-train-steps", str(train_steps),
+         "--nucb-batch", str(batch_size)], n_seeds)
+
+
 def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
                    n_seeds: int = 32, nucb_samples: int = 1200,
                    nucb_slices: int = 32, nucb_seeds: int = 4,
                    nucb_train_steps: int = 32,
                    nucb_batch: int = 32, scen_samples: int = 6000,
-                   scen_slices: int = 12, scen_seeds: int = 6) -> Dict:
+                   scen_slices: int = 12, scen_seeds: int = 6,
+                   zoo_samples: int = 1200, zoo_slices: int = 8,
+                   zoo_seeds: int = 4) -> Dict:
     henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
     denv = DeviceReplayEnv.from_host(henv)
     tables, xs = _tables(denv), denv.slice_xs()
-    dpols = _device_policies(denv)
+    cum0 = _cum_valid(denv)
+    dpols = [as_bandit_policy(p) for p in _device_policies(denv)]
     n_policies = len(dpols)
+
+    def _scan_run(p):
+        return jax.block_until_ready(_policy_scan(
+            tables, xs, denv.idx, cum0, jax.random.PRNGKey(0), (), p)[1])
 
     # --- single protocol run ---------------------------------------------
     run_protocol(henv, _host_policies(henv, 0), verbose=False)  # warm numpy
@@ -281,13 +370,11 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
     run_protocol(henv, _host_policies(henv, 0), verbose=False)
     host_single = time.perf_counter() - t0
 
-    for p in dpols:  # compile
-        jax.block_until_ready(_baseline_scan(
-            tables, xs, jax.random.PRNGKey(0), p))
+    for p in dpols:  # compile the unified scan per policy
+        _scan_run(p)
     t0 = time.perf_counter()
     for p in dpols:
-        jax.block_until_ready(_baseline_scan(
-            tables, xs, jax.random.PRNGKey(0), p))
+        _scan_run(p)
     dev_single = time.perf_counter() - t0
 
     # --- multi-seed sweep -------------------------------------------------
@@ -342,6 +429,8 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
     scen_runs = bench_scenarios_subprocess(
         scen_samples, scen_slices, scen_seeds, nucb_train_steps,
         nucb_batch)
+    zoo_runs = bench_policy_zoo_subprocess(
+        zoo_samples, zoo_slices, zoo_seeds, nucb_train_steps, nucb_batch)
 
     return {
         # headline: protocol-engine throughput on the paper-style workload
@@ -377,11 +466,12 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
         },
         **nucb_runs,
         **scen_runs,
+        **zoo_runs,
     }
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine_v3", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v4", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -402,6 +492,14 @@ def run(refresh: bool = False, **kw):
             rows.append((f"adaptivity/{scen}", round(row["vanilla"], 4),
                          round(row["forgetting"], 4),
                          f"+{row['delta']:.4f}"))
+    z = out["policy_zoo_sweep"]
+    rows.append(("policy_zoo(one dispatch)", round(z["sequential_runs_s"], 4),
+                 round(z["zoo_dispatch_s"], 4),
+                 round(z["speedup_vs_sequential"], 2)))
+    for name, p in z["per_policy"].items():
+        rows.append((f"zoo/{name}", round(p["sequential_s"], 4),
+                     round(p["sweep_s"], 4),
+                     f"{p['decisions_per_s']:.0f}/s"))
     rows.append(("sweep_device_decisions_per_s",
                  round(out["baseline_sweep"]["device_decisions_per_s"]),
                  "", ""))
@@ -421,12 +519,18 @@ def main() -> None:
     ap.add_argument("--scen-samples", type=int, default=6000)
     ap.add_argument("--scen-slices", type=int, default=12)
     ap.add_argument("--scen-seeds", type=int, default=6)
+    ap.add_argument("--zoo-samples", type=int, default=1200)
+    ap.add_argument("--zoo-slices", type=int, default=8)
+    ap.add_argument("--zoo-seeds", type=int, default=4)
     ap.add_argument("--nucb-only", action="store_true",
                     help="internal: run only the NeuralUCB sections and "
                          "print their JSON (the subprocess entry point)")
     ap.add_argument("--scen-only", action="store_true",
                     help="internal: run only the scenario sections and "
                          "print their JSON (the subprocess entry point)")
+    ap.add_argument("--zoo-only", action="store_true",
+                    help="internal: run only the policy-zoo sweep section "
+                         "and print its JSON (the subprocess entry point)")
     ap.add_argument("--out", default=ROOT_OUT)
     args = ap.parse_args()
     if args.nucb_only:
@@ -441,11 +545,19 @@ def main() -> None:
             args.nucb_train_steps, args.nucb_batch)
         print(json.dumps(out, default=float))
         return
+    if args.zoo_only:
+        out = bench_policy_zoo(
+            args.zoo_samples, args.zoo_slices, args.zoo_seeds,
+            args.nucb_train_steps, args.nucb_batch)
+        print(json.dumps(out, default=float))
+        return
     out = bench_protocol(args.n_samples, args.n_slices, args.seeds,
                          args.nucb_samples, args.nucb_slices,
                          args.nucb_seeds, args.nucb_train_steps,
                          args.nucb_batch, args.scen_samples,
-                         args.scen_slices, args.scen_seeds)
+                         args.scen_slices, args.scen_seeds,
+                         args.zoo_samples, args.zoo_slices,
+                         args.zoo_seeds)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(json.dumps(out, indent=1, default=float))

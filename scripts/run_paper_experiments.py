@@ -13,6 +13,9 @@ the device-resident protocol engine.
       --train-steps 32 --sweep-only                                   # CI
   PYTHONPATH=src python scripts/run_paper_experiments.py \
       --scenario price_shock arm_outage --replay-rho 0.4              # §9
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --policies neuralucb linucb neural_ts eps_greedy \
+      --sweep-seeds 3 --scenario stationary price_shock               # §10
 
 The sweep runs as ONE device dispatch (`repro.sim.run_neuralucb_sweep`:
 the whole T-slice Algorithm-1 scan vmapped over (grid x seed) lanes and
@@ -28,7 +31,7 @@ import sys
 
 import numpy as np
 
-from repro.core.protocol import summarize
+from repro.core.protocol import summarize, summarize_sweep
 from repro.core.utilitynet import UtilityNetConfig
 from repro.data.routerbench import RouterBenchSim
 from repro.sim import (
@@ -37,11 +40,13 @@ from repro.sim import (
     ForgettingConfig,
     fixed_policy,
     greedy_policy,
+    make_policy,
     random_policy,
     run_baseline_device,
     run_baseline_sweep,
     run_neuralucb_device,
     run_neuralucb_sweep,
+    run_policy_sweep,
     run_protocol_device,
     sweep_point_results,
 )
@@ -62,10 +67,11 @@ def run_summary_table(henv, denv, cfg, args):
                                   verbose=not args.quiet)
     summ = summarize(results, skip_first=True)
 
-    # multi-seed random sweep: mean +/- std of the per-slice average reward
+    # multi-seed random sweep: mean +/- std of the per-slice average
+    # reward (annotated schema: metric leaves are (G=1, n_seeds, T))
     sweep = run_baseline_sweep(denv, random_policy(denv.K),
                                range(args.random_seeds))
-    r = sweep["avg_reward"][:, 1:].mean(axis=1)
+    r = sweep["avg_reward"][0, :, 1:].mean(axis=1)
     summ["random"]["avg_reward_seed_mean"] = float(r.mean())
     summ["random"]["avg_reward_seed_std"] = float(r.std())
 
@@ -149,6 +155,43 @@ def run_figure_sweep(denv, cfg, args):
             "points": points}, ok
 
 
+def run_policy_comparison(denv, cfg, args):
+    """Exploration-strategy comparison (DESIGN.md §10): every requested
+    zoo policy × seeds, per scenario (stationary when none named), each
+    scenario ONE sharded device dispatch (``run_policy_sweep``'s policy
+    axis). The paper's closing question — action discrimination and
+    exploration — answered as a table."""
+    seeds = range(max(1, args.sweep_seeds))
+    policies = {name: make_policy(name, denv, cfg, ucb_backend="jnp")
+                for name in args.policies}
+    scenarios = args.scenario or [None]
+    out = {}
+    ok = True
+    for scen in scenarios:
+        sw = run_policy_sweep(denv, policies, seeds=seeds, scenario=scen,
+                              train_steps=args.train_steps,
+                              epochs=args.epochs)
+        rows = {name: summarize_sweep(sw[name])[0] for name in sw}
+        label = scen or "stationary"
+        header = (f"{'policy':<14}{'avg_reward':>16}{'oracle':>9}"
+                  f"{'dyn_regret':>11}{'avg_cost':>10}")
+        print(f"\npolicy zoo ({label}, {len(list(seeds))} seeds, "
+              f"one dispatch)")
+        print(header)
+        print("-" * len(header))
+        for name, p in sorted(rows.items(),
+                              key=lambda kv: -kv[1]["avg_reward_mean"]):
+            print(f"{name:<14}{p['avg_reward_mean']:>9.4f}"
+                  f"±{p['avg_reward_std']:.4f}"
+                  f"{p['oracle_avg_reward_mean']:>9.4f}"
+                  f"{p['dynamic_regret_mean']:>11.4f}"
+                  f"{p['avg_cost_mean']:>10.4f}")
+        out[label] = rows
+        ok = ok and all(np.isfinite(p["avg_reward_mean"])
+                        for p in rows.values())
+    return out, ok
+
+
 def run_scenario_suite(denv, cfg, args):
     """Non-stationary scenario runs (DESIGN.md §9): per scenario, the
     scanned NeuralUCB (vanilla AND the forgetting variant) plus greedy /
@@ -220,6 +263,13 @@ def main(argv=None) -> int:
                          "baselines over the drifting stream")
     ap.add_argument("--scenario-only", action="store_true",
                     help="run only the --scenario suite (CI smoke)")
+    ap.add_argument("--policies", nargs="+", default=None,
+                    help="registered policy-zoo names (DESIGN.md §10) for "
+                         "the exploration-strategy comparison, e.g. "
+                         "neuralucb linucb neural_ts eps_greedy; runs "
+                         "(policy x seed) per scenario as one dispatch")
+    ap.add_argument("--policies-only", action="store_true",
+                    help="run only the --policies comparison (CI smoke)")
     ap.add_argument("--gamma", type=float, default=1.0,
                     help="A^-1 rebuild discount for the forgetting "
                          "variant (1.0 = off)")
@@ -240,11 +290,12 @@ def main(argv=None) -> int:
 
     out = {"config": vars(args)}
     ok = True
-    if not args.sweep_only and not args.scenario_only:
+    if not args.sweep_only and not args.scenario_only \
+            and not args.policies_only:
         table, ok_t = run_summary_table(henv, denv, cfg, args)
         out.update(table)
         ok = ok and ok_t
-    if args.sweep_seeds > 0:
+    if args.sweep_seeds > 0 and not args.policies_only:
         sweep_out, ok_s = run_figure_sweep(denv, cfg, args)
         out["sweep"] = sweep_out
         ok = ok and ok_s
@@ -252,12 +303,20 @@ def main(argv=None) -> int:
         print("--sweep-only given but --sweep-seeds is 0; nothing to do",
               file=sys.stderr)
         ok = False
-    if args.scenario:
+    if args.scenario and not args.policies_only:
         scen_out, ok_n = run_scenario_suite(denv, cfg, args)
         out["scenarios"] = scen_out
         ok = ok and ok_n
     elif args.scenario_only:
         print("--scenario-only given but no --scenario names",
+              file=sys.stderr)
+        ok = False
+    if args.policies:
+        zoo_out, ok_z = run_policy_comparison(denv, cfg, args)
+        out["policy_zoo"] = zoo_out
+        ok = ok and ok_z
+    elif args.policies_only:
+        print("--policies-only given but no --policies names",
               file=sys.stderr)
         ok = False
 

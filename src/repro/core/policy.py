@@ -56,6 +56,25 @@ def _decide_jit(params, cfg: UN.UtilityNetConfig, ainv, beta, tau_g,
     return actions, g_taken, mu_safe, gate_p, scores
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def _score_jit(params, cfg: UN.UtilityNetConfig, ainv, x_emb, x_feat,
+               domain, backend: str = "jnp"):
+    """Raw scoring pieces for the non-UCB exploration rules: per-arm mean
+    utility, posterior bonus sqrt(g^T A^-1 g), gate prob, and the full
+    augmented feature tensor (B, K, F) so the chosen arm's g can be
+    gathered host-side after the exploration draw."""
+    mu, h, gate_p = UN.utilitynet_all_actions(params, cfg, x_emb, x_feat,
+                                              domain)
+    g = NU.augment(h)
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        bonus = ucb_score(g, ainv, jnp.zeros_like(mu), 1.0,
+                          interpret=interpret)
+    else:
+        bonus = NU.ucb_bonus(ainv, g)
+    return mu, bonus, gate_p, g
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _train_step_jit(params, opt, cfg: UN.UtilityNetConfig, batch, lr):
     (loss, metrics), grads = jax.value_and_grad(
@@ -74,7 +93,15 @@ def _features_jit(params, cfg: UN.UtilityNetConfig, x_emb, x_feat, domain,
 
 
 class NeuralUCBRouter:
-    """Stateful router implementing the paper's policy.
+    """Stateful router implementing the paper's policy — and, via
+    ``exploration``, the serving-side face of the policy zoo (DESIGN.md
+    §10): the same UtilityNet / replay / A^-1 stack with the decision
+    rule swapped.
+
+    * ``"ucb"`` (default) — the paper's gated UCB (§3.3).
+    * ``"ts"`` — NeuralTS: scores mu + scale * bonus * z, z ~ N(0, 1).
+    * ``"eps"`` — ε-greedy: argmax mu, uniform arm with prob ``scale``.
+    * ``"boltzmann"`` — softmax(mu / scale) sampling.
 
     Hyperparameters follow §4.1: lr 1e-3, beta 1, ridge lambda0 1; tau_g and
     the gate-label margin are under-specified in the paper — see DESIGN.md §6.
@@ -84,9 +111,14 @@ class NeuralUCBRouter:
                  beta: float = 1.0, tau_g: float = 0.5,
                  ridge_lambda0: float = 1.0, lr: float = 1e-3,
                  gate_margin: float = 0.05, batch_size: int = 256,
-                 ucb_backend: Optional[str] = None):
+                 ucb_backend: Optional[str] = None,
+                 exploration: str = "ucb", explore_scale: float = 1.0):
+        if exploration not in ("ucb", "ts", "eps", "boltzmann"):
+            raise ValueError(f"unknown exploration rule {exploration!r}")
         self.cfg = cfg
         self.ucb_backend = ucb_backend or default_ucb_backend()
+        self.exploration = exploration
+        self.explore_scale = explore_scale
         self.beta = beta
         self.tau_g = tau_g
         self.ridge_lambda0 = ridge_lambda0
@@ -112,7 +144,7 @@ class NeuralUCBRouter:
                 jnp.asarray(domain), jnp.asarray(actions, jnp.int32)))
             mu_safe = np.zeros(B, np.float32)
             gate_p = np.ones(B, np.float32)
-        else:
+        elif self.exploration == "ucb":
             a, g, mu_safe, gate_p, _ = _decide_jit(
                 self.params, self.cfg, self.ainv,
                 jnp.float32(self.beta), jnp.float32(self.tau_g),
@@ -120,8 +152,42 @@ class NeuralUCBRouter:
                 backend=self.ucb_backend)
             actions = np.asarray(a)
             g, mu_safe, gate_p = map(np.asarray, (g, mu_safe, gate_p))
+        else:
+            actions, g, mu_safe, gate_p = self._decide_explore(
+                x_emb, x_feat, domain)
         return {"action": actions.astype(np.int32), "g": g,
                 "mu_safe": mu_safe, "gate_p": gate_p}
+
+    def _decide_explore(self, x_emb, x_feat, domain):
+        """The zoo's non-UCB decision rules (class docstring), sharing
+        the jitted scorer; exploration draws come from the host RNG that
+        already owns the warm-slice stream."""
+        mu, bonus, gate_p, g_all = map(np.asarray, _score_jit(
+            self.params, self.cfg, self.ainv, jnp.asarray(x_emb),
+            jnp.asarray(x_feat), jnp.asarray(domain),
+            backend=self.ucb_backend))
+        B, K = mu.shape
+        a_safe = mu.argmax(axis=-1)
+        s = self.explore_scale
+        if self.exploration == "ts":
+            actions = (mu + s * bonus
+                       * self.np_rng.standard_normal(mu.shape)
+                       ).argmax(axis=-1)
+        elif self.exploration == "eps":
+            flip = self.np_rng.random(B) < s
+            actions = np.where(flip, self.np_rng.integers(0, K, size=B),
+                               a_safe)
+        else:                                   # boltzmann
+            z = mu / max(s, 1e-6)
+            p = np.exp(z - z.max(axis=-1, keepdims=True))
+            p = p / p.sum(axis=-1, keepdims=True)
+            # vectorized inverse-CDF draw (one RNG call for the batch)
+            u = self.np_rng.random(B)
+            actions = (p.cumsum(axis=-1) > u[:, None]).argmax(axis=-1)
+        actions = actions.astype(np.int32)
+        g = g_all[np.arange(B), actions]
+        mu_safe = mu[np.arange(B), a_safe].astype(np.float32)
+        return actions, g, mu_safe, gate_p
 
     # ----------------------------------------------------------- UPDATE --
     def update(self, x_emb, x_feat, domain, decision: Dict, reward) -> None:

@@ -104,3 +104,37 @@ def summarize(results: Dict[str, Dict], skip_first: bool = True) -> Dict:
             summ["dynamic_regret_per_slice"] = float(np.mean(o - r))
         out[name] = summ
     return out
+
+
+def summarize_sweep(sweep: Dict, skip_first: bool = True) -> List[Dict]:
+    """Summarize ONE policy's grid-annotated sweep (the unified
+    ``repro.sim.run_policy_sweep`` schema: metric leaves shaped
+    (G, n_seeds, T, ...) plus a ``grid`` dict of (G,) hyper arrays).
+
+    Returns a list of G per-grid-point summaries, each with the point's
+    hyper values and the seed-aggregated mean ± std of the standard
+    paper metrics (slice 1 excluded per §4.2, as in :func:`summarize`).
+    Works for every registered policy — baselines have G=1 and an empty
+    grid dict. Values are plain Python floats (JSON-serializable)."""
+    r = np.asarray(sweep["avg_reward"], np.float64)       # (G, n_seeds, T)
+    G, _, T = r.shape
+    s0 = 1 if skip_first and T > 1 else 0
+    grid = sweep.get("grid", {})
+    points = []
+    for g in range(G):
+        p = {f: float(np.asarray(v).reshape(-1)[g]) for f, v in grid.items()}
+        for key in ("avg_reward", "avg_cost", "avg_quality",
+                    "oracle_avg_reward"):
+            if key in sweep:
+                per_seed = np.asarray(sweep[key], np.float64)[g, :, s0:]
+                p[f"{key}_mean"] = float(per_seed.mean(axis=1).mean())
+                p[f"{key}_std"] = float(per_seed.mean(axis=1).std())
+        if "oracle_avg_reward" in sweep:
+            o = np.asarray(sweep["oracle_avg_reward"], np.float64)[g, :, s0:]
+            p["dynamic_regret_mean"] = float((o - r[g, :, s0:]).sum(axis=1)
+                                             .mean())
+        if "sum_reward" in sweep:
+            cum = np.asarray(sweep["sum_reward"], np.float64)[g].sum(axis=1)
+            p["final_cum_reward_mean"] = float(cum.mean())
+        points.append(p)
+    return points

@@ -91,29 +91,39 @@ def activation_rules(cfg: ModelConfig, shape: InputShape, mesh,
 # ---------------------------------------------------------------------------
 
 
+def sweep_lane_sharding(n_items: int):
+    """NamedSharding for an ``n_items``-wide sweep lane axis, or None
+    when sharding buys nothing (single device, or no device count > 1
+    divides the axis). Picks the largest local-device count that divides
+    the axis so no grid shape is rejected. Factored out of
+    :func:`shard_sweep_axis` so the policy-zoo sweep (DESIGN.md §10) can
+    lay out EVERY policy's lane tree with one consistent rule even when
+    their grid sizes differ."""
+    devs = jax.local_devices()
+    nd = len(devs)
+    while nd > 1 and n_items % nd:
+        nd -= 1
+    if nd <= 1:
+        return None
+    mesh = jax.sharding.Mesh(np.asarray(devs[:nd]), ("sweep",))
+    return jax.sharding.NamedSharding(mesh, P("sweep"))
+
+
 def shard_sweep_axis(tree, n_items: Optional[int] = None):
     """Shard the leading (sweep) axis of every leaf across local devices.
 
-    Used by the protocol engine's seed/beta sweep harnesses (DESIGN.md
-    §8.4): the vmapped grid axis is data-parallel across whatever local
-    devices exist. Picks the largest device count that divides the axis so
-    no grid shape is rejected; identity on a single device (CPU CI) so
-    callers need no gating.
+    Used by the protocol engine's sweep harnesses (DESIGN.md §8.4/§10):
+    the vmapped (grid x seed) lane axis is data-parallel across whatever
+    local devices exist. Identity on a single device (CPU CI) so callers
+    need no gating.
     """
-    devs = jax.local_devices()
-    if len(devs) <= 1:
-        return tree
     leaves = jax.tree.leaves(tree)
     if not leaves:
         return tree
     n = n_items if n_items is not None else int(leaves[0].shape[0])
-    nd = len(devs)
-    while nd > 1 and n % nd:
-        nd -= 1
-    if nd <= 1:
+    sharding = sweep_lane_sharding(n)
+    if sharding is None:
         return tree
-    mesh = jax.sharding.Mesh(np.asarray(devs[:nd]), ("sweep",))
-    sharding = jax.sharding.NamedSharding(mesh, P("sweep"))
     return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
 
 

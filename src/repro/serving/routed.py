@@ -20,14 +20,28 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.policy import NeuralUCBRouter
 from repro.core.reward import utility_reward
 from repro.serving.batcher import Request, RequestBatcher
 from repro.serving.engine import ServingEngine
 
 
 class RoutedServingPool:
-    def __init__(self, router: NeuralUCBRouter,
+    """Router-fronted serving pool. ``router`` is any bandit router
+    implementing the ``decide(x_emb, x_feat, domain) -> {"action", ...}``
+    / ``update(x_emb, x_feat, domain, decision, rewards)`` /
+    ``end_slice(epochs)`` interface — the paper's
+    :class:`repro.core.policy.NeuralUCBRouter` (including its ``ts`` /
+    ``eps`` / ``boltzmann`` exploration variants, the serving face of the
+    DESIGN.md §10 policy zoo) or any compatible policy object.
+
+    The default ``c_max`` (the Eq.-1 reward normalizer) is derived from
+    the pool's ACTUAL maximum sequence length: the engines cap sequences
+    at ``engine.max_seq``, so normalizing by a fixed 4096-token horizon
+    (the old default) compressed every realizable cost toward 0 and
+    collapsed the reward's cost discrimination between arms.
+    """
+
+    def __init__(self, router,
                  engines: Sequence[ServingEngine],
                  cost_per_token: Sequence[float],
                  quality_table: Optional[np.ndarray] = None,
@@ -39,8 +53,10 @@ class RoutedServingPool:
         self.engines = list(engines)
         self.cost_per_token = np.asarray(cost_per_token, np.float64)
         self.quality_table = quality_table
-        self.c_max = c_max if c_max is not None else float(
-            self.cost_per_token.max() * 4096)
+        if c_max is None:
+            max_seq = max(getattr(e, "max_seq", 4096) for e in engines)
+            c_max = float(self.cost_per_token.max() * max_seq)
+        self.c_max = c_max
         self.cost_lambda = cost_lambda
         self.batcher = RequestBatcher(max_batch=max_batch)
         self.log: List[Dict] = []

@@ -1,26 +1,42 @@
-"""Device-resident online routing protocol engine (DESIGN.md §8).
+"""Device-resident online routing protocol engine (DESIGN.md §8–§10).
 
 The seed implementation (`repro.core.protocol.run_protocol`) drives the
 paper's Algorithm 1 as a host Python loop with a device round-trip per
 slice per policy and per-minibatch host transfers; this package keeps the
 whole replay environment (quality / cost / reward tables) resident on the
-accelerator and runs each slice's DECIDE → feedback-lookup → UPDATE as a
-single fused jit call. Baselines become stateless jnp policies swept over
-seeds with vmap, a full T-slice baseline run is one lax.scan, and the
-whole NeuralUCB Algorithm-1 run is one scanned dispatch
-(`run_neuralucb_device`) with seed/β sweeps as one vmapped, device-sharded
-dispatch (`run_neuralucb_sweep`, DESIGN.md §8.4).
+accelerator and runs every policy — NeuralUCB, LinUCB, NeuralTS,
+ε-greedy, Boltzmann, and the stateless baselines — through ONE generic
+protocol scan over a :class:`BanditPolicy` pytree-of-callables
+(`run_policy_device`), with (policy × hypers × seed) studies flattened
+into sharded lane vmaps executed as a single dispatch
+(`run_policy_sweep`). Scenarios (DESIGN.md §9), `ForgettingConfig`
+adaptivity, delayed feedback, and availability fallback thread through
+every policy automatically.
 """
 from repro.sim.env import DeviceReplayEnv
 from repro.sim.policies import (
+    POLICIES,
     VANILLA_FORGETTING,
+    BanditPolicy,
     DevicePolicy,
     ForgettingConfig,
+    LinUCBHypers,
+    NeuralPolicyHypers,
     NeuralUCBHypers,
     NeuralUCBState,
+    PolicyCtx,
+    as_bandit_policy,
+    boltzmann_policy,
+    dyn_min_cost_policy,
+    eps_greedy_policy,
     fixed_policy,
     greedy_policy,
+    linucb_policy,
+    make_policy,
+    neural_ts_policy,
+    neuralucb_policy,
     random_policy,
+    register_policy,
 )
 from repro.sim.scenarios import (
     SCENARIOS,
@@ -38,15 +54,22 @@ from repro.sim.engine import (
     run_baseline_sweep,
     run_neuralucb_device,
     run_neuralucb_sweep,
+    run_policy_device,
+    run_policy_sweep,
     run_protocol_device,
     sweep_point_results,
 )
 
 __all__ = [
     "DeviceReplayEnv",
+    "BanditPolicy",
     "DevicePolicy",
+    "PolicyCtx",
+    "POLICIES",
     "ForgettingConfig",
     "VANILLA_FORGETTING",
+    "LinUCBHypers",
+    "NeuralPolicyHypers",
     "NeuralUCBHypers",
     "NeuralUCBState",
     "SCENARIOS",
@@ -56,15 +79,26 @@ __all__ = [
     "make_scenario",
     "register_scenario",
     "resolve_scenario",
+    "as_bandit_policy",
+    "boltzmann_policy",
+    "dyn_min_cost_policy",
+    "eps_greedy_policy",
     "fixed_policy",
     "greedy_policy",
+    "linucb_policy",
+    "make_policy",
+    "neural_ts_policy",
+    "neuralucb_policy",
     "random_policy",
+    "register_policy",
     "DeviceNeuralUCB",
     "neuralucb_train_schedule",
     "run_baseline_device",
     "run_baseline_sweep",
     "run_neuralucb_device",
     "run_neuralucb_sweep",
+    "run_policy_device",
+    "run_policy_sweep",
     "run_protocol_device",
     "sweep_point_results",
 ]

@@ -1,30 +1,31 @@
-"""Vectorized online protocol engine (DESIGN.md §8).
+"""Vectorized online protocol engine (DESIGN.md §8, §10).
 
-Runners over a :class:`repro.sim.env.DeviceReplayEnv`:
+ONE scan drives every policy: :func:`_policy_scan_impl` runs a full
+T-slice protocol — DECIDE → feedback lookup → UPDATE → TRAIN → REBUILD —
+for any :class:`repro.sim.policies.BanditPolicy` as a single jitted
+``lax.scan`` (one device dispatch for the whole run), with scenarios
+(DESIGN.md §9), ``ForgettingConfig`` adaptivity, delayed feedback, and
+availability fallback threaded through the shared :class:`PolicyCtx`.
 
-* :func:`run_baseline_device` — a full T-slice protocol run of one
-  stateless baseline as a single jitted ``lax.scan`` (one device dispatch
-  for the whole run, vs. the seed host loop's T × policies round-trips).
-* :func:`run_baseline_sweep` — the same scan ``vmap``-ed over PRNG keys
-  for multi-seed sweeps.
-* :func:`run_neuralucb_device` — Algorithm 1 end to end as ONE device
-  dispatch (DESIGN.md §8.4): the whole T-slice run — DECIDE → feedback →
-  rank-k Woodbury UPDATE → replay-train scan → Cholesky REBUILD — is a
-  single ``lax.scan`` over a pure :class:`NeuralUCBState` pytree with a
-  fixed per-slice training schedule.
-* :func:`run_neuralucb_sweep` — that scan ``vmap``-ed over PRNG keys and
-  over a ``(beta, tau_g, cost_lambda)`` hyperparameter grid, sharded over
-  local devices when more than one is present.
+Public runners:
 
-Every runner accepts a ``scenario`` (DESIGN.md §9): the declarative
-non-stationary transforms from :mod:`repro.sim.scenarios` are applied
-per slice INSIDE the same scans (one device dispatch either way), and
-the NeuralUCB runners additionally take a
-:class:`repro.sim.policies.ForgettingConfig` selecting sliding-window /
-discounted A^-1 forgetting and recency-weighted replay sampling.
+* :func:`run_policy_device` — one policy, all T slices, one dispatch.
+* :func:`run_policy_sweep` — a POLICY AXIS of (grid × seed) lane vmaps:
+  every policy's lanes are sharded across local devices
+  (``shard_sweep_axis``) and ALL policies execute inside one jitted
+  dispatch, so a (policy × hypers × seed × scenario) study is one
+  compiled program per scenario.
+* :func:`run_baseline_device` / :func:`run_baseline_sweep` — thin
+  wrappers lifting legacy :class:`DevicePolicy` triples; the sweep now
+  emits the same grid-annotated ``(G, n_seeds, T, ...)`` schema as
+  every other policy.
+* :func:`run_neuralucb_device` / :func:`run_neuralucb_sweep` — the
+  paper's Algorithm 1 through the same runner (NeuralUCB is just the
+  richest registered policy); bit-exact with the pre-unification scans
+  (tests/test_golden.py).
 * :class:`DeviceNeuralUCB` — the host-stepped runner (one fused jit call
-  per slice phase), kept as the parity reference; its ``run()`` delegates
-  to the scanned path when the schedule allows.
+  per slice phase), kept as the bit-exact parity reference; its
+  ``run()`` delegates to the scanned path when the schedule allows.
 
 Differences vs. the seed host loop (``repro.core.protocol.run_protocol``),
 see DESIGN.md §8.3/§8.4: the random baseline and warm-slice exploration
@@ -38,7 +39,7 @@ from __future__ import annotations
 import functools
 import itertools
 import time
-from typing import Dict, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,17 +50,28 @@ from repro.core import utilitynet as UN
 from repro.core.policy import default_ucb_backend
 from repro.core.reward import normalize_cost
 from repro.distributed.sharding import shard_sweep_axis
-from repro.kernels.ucb_score.ops import ucb_score
 from repro.sim.env import DeviceReplayEnv
 from repro.sim.policies import (
+    TRAIN_CHUNK,
     VANILLA_FORGETTING,
+    BanditPolicy,
     DevicePolicy,
     ForgettingConfig,
     NeuralUCBHypers,
     NeuralUCBState,
+    PolicyCtx,
+    _decide_ucb,
+    _decide_warm,
+    _no_train,
+    _rebuild_impl,
+    _sample_valid,  # noqa: F401  (re-export: tests/benchmarks import here)
+    _slice_weights,
+    _train_chunk,
+    as_bandit_policy,
+    neural_init_state,
+    neuralucb_policy,
 )
 from repro.sim.scenarios import ScenarioTables, resolve_scenario
-from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
 
 def _tables(env: DeviceReplayEnv) -> Dict[str, jnp.ndarray]:
@@ -157,329 +169,99 @@ def _metrics_to_results(ms: Dict[str, np.ndarray], wall_s: float) -> Dict:
     }
 
 
-# --------------------------------------------------------------- baselines --
-def _baseline_scan_impl(tables, xs, key, policy: DevicePolicy, scn=None):
-    state = policy.init(key)
+def _resolve_lam(tables, hyp):
+    """The Eq.-1 lambda driving a scenario's per-slice reward re-derive:
+    policies that sweep ``cost_lambda`` (the neural hypers pytrees) use
+    it when non-negative; everything else replays the env's own."""
+    cl = getattr(hyp, "cost_lambda", None)
+    if cl is None:
+        return tables["env_lambda"]
+    return jnp.where(cl >= 0, jnp.abs(cl), tables["env_lambda"])
+
+
+# ----------------------------------------------- THE protocol scan (§10) --
+def _policy_scan_impl(tables, xs, env_idx, cum0, key, hyp,
+                      policy: BanditPolicy,
+                      scn: Optional[ScenarioTables] = None, delay: int = 0,
+                      fcfg: ForgettingConfig = VANILLA_FORGETTING,
+                      train_chunks: int = 1, batch_size: int = 256):
+    """The single protocol scan driving every registered policy: one
+    whole T-slice run as a pure ``lax.scan`` over (state, key). Key
+    discipline is fixed by the runner — one split per slice feeds
+    ``decide``; ``train`` splits further from the carried stream — so
+    every policy (and the host-stepped NeuralUCB reference) consumes an
+    identical PRNG stream for identical schedules."""
+    if scn is None:
+        # stationary: pre-derive the whole reward table once per run;
+        # scenario runs re-derive per slice inside _effective_slice
+        tables = policy.prepare(tables, hyp)
+    lam = _resolve_lam(tables, hyp)
+    ctx0 = PolicyCtx(tables=tables, env_idx=env_idx, cum0=cum0, hyp=hyp,
+                     eff=None, t=None, idx=None, mask=None, avail=None,
+                     delay=delay, fcfg=fcfg, train_chunks=train_chunks,
+                     batch_size=batch_size)
+    state, key = policy.init(key, ctx0)
 
     def step(carry, x):
         state, key = carry
-        key, kd = jax.random.split(key)
+        key, k_slice = jax.random.split(key)
         t, idx, mask = x["t"], x["idx"], x["mask"]
-        eff = _effective_slice(tables, scn, t, idx, tables["env_lambda"])
+        eff = _effective_slice(tables, scn, t, idx, lam)
         batch = _context(tables, idx)
-        a = policy.decide(state, kd, batch)
-        if eff is not None and eff["avail"] is not None:
-            a = _avail_fallback(a, eff["avail"], tables["mean_cost"])
+        avail = None if eff is None else eff["avail"]
+        ctx = ctx0._replace(eff=eff, t=t, idx=idx, mask=mask, avail=avail)
+        a, aux = policy.decide(state, k_slice, batch, ctx)
+        if not policy.availability_aware and avail is not None:
+            a = _avail_fallback(a, avail, tables["mean_cost"])
         m = _slice_metrics(tables, eff, idx, mask, a)
         r = _pick(tables, eff, "reward", idx, a)
-        state = policy.update(state, batch, a, r, mask)
+        state = policy.update(state, batch, a, r, ctx, aux)
+        state, key = policy.train(state, key, ctx)
+        state = policy.rebuild(state, ctx)
         return (state, key), m
 
-    _, ms = jax.lax.scan(step, (state, key), xs)
-    return ms
+    return jax.lax.scan(step, (state, key), xs)
 
 
-_baseline_scan = jax.jit(_baseline_scan_impl, static_argnames=("policy",))
+_STATIC = ("policy", "delay", "fcfg", "train_chunks", "batch_size")
+
+_policy_scan = jax.jit(_policy_scan_impl, static_argnames=_STATIC)
 
 
-@functools.partial(jax.jit, static_argnames=("policy",))
-def _baseline_sweep_scan(tables, xs, keys, policy: DevicePolicy, scn=None):
-    """The full T-slice scan vmapped over PRNG keys, compiled as one unit
-    so repeated sweeps are a single cached dispatch. Scenario transforms
-    are broadcast (not vmapped): all lanes replay the same drift."""
-    return jax.vmap(
-        lambda k: _baseline_scan_impl(tables, xs, k, policy, scn))(keys)
-
-
-def run_baseline_device(env: DeviceReplayEnv, policy: DevicePolicy, *,
-                        seed: int = 0, scenario=None) -> Dict:
-    """One policy, all T slices, one device dispatch. Returns the
-    ``run_protocol`` per-policy result dict (summarize-compatible).
-    ``scenario`` is a registered name or :class:`Scenario` (DESIGN.md
-    §9); the scan stays a single dispatch either way."""
-    env, scn, _ = resolve_scenario(env, scenario)
-    t0 = time.perf_counter()
-    ms = jax.block_until_ready(_baseline_scan(
-        _tables(env), env.slice_xs(), jax.random.PRNGKey(seed), policy,
-        scn))
-    return _metrics_to_results(ms, time.perf_counter() - t0)
-
-
-def run_baseline_sweep(env: DeviceReplayEnv, policy: DevicePolicy,
-                       seeds, scenario=None) -> Dict[str, np.ndarray]:
-    """Multi-seed sweep: vmap the whole T-slice scan over PRNG keys,
-    sharded across local devices on the seed axis when several exist.
-
-    Returns stacked raw metrics with a leading seed axis, e.g.
-    ``out["avg_reward"]`` has shape (n_seeds, T)."""
-    env, scn, _ = resolve_scenario(env, scenario)
-    keys = shard_sweep_axis(
-        jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds]))
-    ms = _baseline_sweep_scan(_tables(env), env.slice_xs(), keys, policy,
-                              scn)
-    return {k: np.asarray(v) for k, v in ms.items()}
-
-
-# --------------------------------------------------------------- neuralucb --
-def _weighted_loss(params, cfg: UN.UtilityNetConfig, batch):
-    """Replay loss with per-row validity weights (padded rows carry w=0)."""
-    mu, _, gate_p = UN.utilitynet_apply(
-        params, batch["x_emb"], batch["x_feat"], batch["domain"],
-        batch["action"])
-    w = batch["w"]
-    l_u = (UN.huber(mu, batch["reward"], cfg.huber_delta) * w
-           ).sum() / jnp.maximum(w.sum(), 1.0)
-    p = jnp.clip(gate_p, 1e-6, 1 - 1e-6)
-    y = batch["gate_label"]
-    bce = -(y * jnp.log(p) + (1 - y) * jnp.log(1 - p))
-    gw = batch["gate_w"]
-    l_g = (bce * gw).sum() / jnp.maximum(gw.sum(), 1.0)
-    return l_u + 0.5 * l_g, {"loss_u": l_u, "loss_gate": l_g}
-
-
-def _apply_cost_lambda(tables, cost_lambda):
-    """Re-derive the reward table for a swept ``cost_lambda`` (Eq. 1):
-    r = q * exp(-lambda * c_tilde). Negative lambda is the sentinel for
-    "keep the env's precomputed table" (both sides of the where are cheap
-    elementwise passes over the resident (n, K) tables)."""
-    swept = tables["quality"] * jnp.exp(
-        -jnp.abs(cost_lambda) * tables["cnorm"])
-    reward = jnp.where(cost_lambda >= 0, swept, tables["reward"])
-    # keep the per-sample dynamic-oracle reference consistent with the
-    # re-derived table (one (n, K) max per dispatch, outside the scan)
-    return dict(tables, reward=reward, oracle_max=reward.max(axis=1))
-
-
-def _decide_warm(params, batch, key, cfg: UN.UtilityNetConfig, avail=None):
-    """Slice-1 warm start: uniform exploration (over AVAILABLE arms when
-    a scenario masks some); the safe-utility reference is 0 and the gate
-    loss is masked (gate scale 0). The masked draw is a randint over the
-    available COUNT mapped through the availability CDF, so with all
-    arms available it consumes the key identically to the plain draw
-    (an identity scenario reproduces the fast path bit-for-bit)."""
-    B = batch["x_emb"].shape[0]
-    if avail is None:
-        a = jax.random.randint(key, (B,), 0, cfg.num_actions, jnp.int32)
-    else:
-        n_av = avail.astype(jnp.int32).sum()
-        r = jax.random.randint(key, (B,), 0, jnp.maximum(n_av, 1),
-                               jnp.int32)
-        rank = jnp.cumsum(avail.astype(jnp.int32)) - 1  # arm -> avail rank
-        a = jnp.searchsorted(rank, r, side="left").astype(jnp.int32)
-    _, h, _ = UN.utilitynet_apply(
-        params, batch["x_emb"], batch["x_feat"], batch["domain"], a)
-    return a, NU.augment(h), jnp.zeros((B,), jnp.float32), jnp.float32(0.0)
-
-
-def _decide_ucb(params, ainv, batch, beta, tau_g,
-                cfg: UN.UtilityNetConfig, backend: str, avail=None):
-    """Gated UCB decision over all actions (paper §3.3). Unavailable
-    arms (scenario avail mask) are excluded from BOTH the UCB argmax and
-    the safe mean-greedy argmax."""
-    mu, h, gate_p = UN.utilitynet_all_actions(
-        params, cfg, batch["x_emb"], batch["x_feat"], batch["domain"])
-    g_all = NU.augment(h)                                  # (B, K, F)
-    if backend == "pallas":
-        interpret = jax.default_backend() != "tpu"
-        scores = ucb_score(g_all, ainv, mu, beta, interpret=interpret)
-    else:
-        scores = mu + beta * NU.ucb_bonus(ainv, g_all)
-    mu_sel = mu
-    if avail is not None:
-        neg = jnp.where(avail > 0, 0.0, -jnp.inf)
-        scores = scores + neg
-        mu_sel = mu + neg
-    a_ucb = jnp.argmax(scores, axis=-1)
-    a_safe = jnp.argmax(mu_sel, axis=-1)
-    a = jnp.where(gate_p >= tau_g, a_ucb, a_safe).astype(jnp.int32)
-    g = jnp.take_along_axis(
-        g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-    mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
-    return a, g, mu_safe, jnp.float32(1.0)
-
-
-def _post_decide(ainv, tables, eff, bufs, t, idx, mask, a, g, mu_safe,
-                 gate_scale, gate_margin, update_ainv: bool = True):
-    """Feedback lookup -> buffer write -> rank-k Woodbury UPDATE, shared
-    by the static-warm step and the scanned traced-warm step.
-    ``update_ainv=False`` defers the online A^-1 update (delayed-feedback
-    scenarios apply the newly-VISIBLE slice instead, §9.1)."""
-    r = _pick(tables, eff, "reward", idx, a)
-    gate_label = (r < mu_safe - gate_margin).astype(jnp.float32)
-    bufs = {
-        "action": bufs["action"].at[t].set(a),
-        "reward": bufs["reward"].at[t].set(r),
-        "gate_label": bufs["gate_label"].at[t].set(gate_label),
-        "w": bufs["w"].at[t].set(mask),
-        "gate_w": bufs["gate_w"].at[t].set(mask * gate_scale),
-    }
-    if update_ainv:
-        # padded rows are zeroed -> contribute nothing to the rank-k update
-        ainv = NU.woodbury_update(ainv, g * mask[:, None])
-    return ainv, bufs, _slice_metrics(tables, eff, idx, mask, a)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"))
-def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
-                     beta, tau_g, gate_margin,
-                     cfg: UN.UtilityNetConfig, backend: str, warm: bool):
-    """DECIDE -> feedback lookup -> buffer write -> rank-k UPDATE, fused.
-    Host-stepped entry point: ``warm`` is static (one trace per phase).
-    Stationary tables only — scenarios are a scanned-runner feature."""
-    batch = _context(tables, idx)
-    if warm:
-        a, g, mu_safe, gs = _decide_warm(params, batch, key, cfg)
-    else:
-        a, g, mu_safe, gs = _decide_ucb(params, ainv, batch, beta, tau_g,
-                                        cfg, backend)
-    return _post_decide(ainv, tables, None, bufs, t, idx, mask, a, g,
-                        mu_safe, gs, gate_margin)
-
-
-# SGD steps per compiled training dispatch. Per-slice step budgets are
-# rounded UP to a multiple of this, so the training scan compiles exactly
-# once for the whole run instead of once per distinct step count.
-TRAIN_CHUNK = 32
-
-
-def _sample_valid(key, batch_size: int, cum0, count):
-    """Uniform flat draw over the first ``count`` VALID buffer entries.
-
-    Valid entries are the per-row prefixes of the (T, S) buffers (the
-    padded tail of each row carries mask 0 — DeviceReplayEnv layout), so
-    with cum0 = [0, cumsum(slice_sizes)] a flat u in [0, count) maps to
-    row = searchsorted(cum0, u, 'right') - 1 and col = u - cum0[row].
-    Sampling the raw (t+1)*S padded range instead (the PR-1 bug) shrank
-    the effective minibatch by the padding fraction: padded rows carry
-    w=0, so they neutralize their loss term but still occupy batch slots.
-    """
-    flat = jax.random.randint(key, (batch_size,), 0, jnp.maximum(count, 1))
-    row = jnp.searchsorted(cum0, flat, side="right").astype(jnp.int32) - 1
-    col = flat - cum0[row]
-    return row, col
-
-
-def _sample_recency(key, batch_size: int, cum0, t_vis, rho: float):
-    """Recency-weighted replay draw (DESIGN.md §9.2): slice s <= t_vis is
-    drawn with probability proportional to size_s * rho^(t_vis - s), then
-    a column uniformly within the slice — so the UtilityNet's minibatches
-    lean toward post-drift feedback instead of averaging it away."""
-    sizes = (cum0[1:] - cum0[:-1]).astype(jnp.float32)          # (T,)
-    s = jnp.arange(sizes.shape[0], dtype=jnp.int32)
-    ok = (s <= jnp.maximum(t_vis, 0)) & (sizes > 0)
-    logw = jnp.where(
-        ok,
-        jnp.log(jnp.maximum(sizes, 1.0))
-        + (t_vis - s).astype(jnp.float32) * jnp.log(jnp.float32(rho)),
-        -jnp.inf)
-    k_row, k_col = jax.random.split(key)
-    row = jax.random.categorical(
-        k_row, logw, shape=(batch_size,)).astype(jnp.int32)
-    u = jax.random.uniform(k_col, (batch_size,))
-    col = jnp.minimum(jnp.floor(u * sizes[row]),
-                      jnp.maximum(sizes[row] - 1, 0)).astype(jnp.int32)
-    return row, col
-
-
-def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
-                 cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int,
-                 t_vis=None, fcfg: ForgettingConfig = VANILLA_FORGETTING,
-                 delayed: bool = False):
-    """``num_steps`` SGD steps on sampled replay minibatches, all on
-    device; ``count`` (traced) is the number of VISIBLE buffered samples.
-    Shared verbatim by the host-stepped and scanned runners so identical
-    keys give identical training trajectories. ``fcfg`` (static) selects
-    uniform vs recency-weighted sampling; ``delayed`` (static) zeroes the
-    loss weights of rows past the visibility horizon ``t_vis`` (a
-    delayed-feedback slice's rows are written but not yet learnable)."""
-
-    def step(carry, k):
-        params, opt = carry
-        if fcfg.replay_rho < 1.0:
-            row, col = _sample_recency(k, batch_size, cum0, t_vis,
-                                       fcfg.replay_rho)
-        else:
-            row, col = _sample_valid(k, batch_size, cum0, count)
-        sid = env_idx[row, col]
-        w = bufs["w"][row, col]
-        gw = bufs["gate_w"][row, col]
-        if delayed:
-            vis = (row <= t_vis).astype(jnp.float32)
-            w = w * vis
-            gw = gw * vis
-        batch = {
-            "x_emb": tables["x_emb"][sid],
-            "x_feat": tables["x_feat"][sid],
-            "domain": tables["domain"][sid],
-            "action": bufs["action"][row, col],
-            "reward": bufs["reward"][row, col],
-            "gate_label": bufs["gate_label"][row, col],
-            "w": w,
-            "gate_w": gw,
-        }
-        (_, _), grads = jax.value_and_grad(
-            _weighted_loss, has_aux=True)(params, cfg, batch)
-        grads, _ = clip_by_global_norm(grads, 1.0)
-        params, opt = adamw_update(grads, opt, params, lr=lr,
-                                   weight_decay=1e-4)
-        return (params, opt), None
-
-    (params, opt), _ = jax.lax.scan(
-        step, (params, opt), jax.random.split(key, num_steps))
-    return params, opt
-
-
-_nucb_train = jax.jit(
-    _train_chunk,
-    static_argnames=("cfg", "num_steps", "batch_size", "fcfg", "delayed"))
-
-
-def _slice_weights(T: int, t, delay: int, fcfg: ForgettingConfig):
-    """(T,) per-slice A^-1 rebuild weights: delayed visibility x
-    discounted/sliding-window forgetting (DESIGN.md §9.2). Only built
-    when delay > 0 or forgetting is active — the vanilla path passes
-    ``row_w=None`` and keeps the PR-2 rebuild bit-exact."""
-    s = jnp.arange(T, dtype=jnp.int32)
-    t_vis = t - delay
-    w = (s <= t_vis).astype(jnp.float32)
-    if fcfg.gamma < 1.0:
-        age = jnp.maximum(t_vis - s, 0).astype(jnp.float32)
-        w = w * jnp.float32(fcfg.gamma) ** age
-    if fcfg.window > 0:
-        w = w * (s > t_vis - fcfg.window).astype(jnp.float32)
-    return w
-
-
-def _rebuild_impl(params, tables, env_idx, action_buf, w_buf,
-                  cfg: UN.UtilityNetConfig, ridge_lambda0, row_w=None):
-    """Recompute g for every buffered pair with the fresh net; one masked
-    full-capacity pass (unwritten/padded rows have w=0 and vanish from
-    A = lambda0 I + sum w_i g_i g_i^T), then one Cholesky solve.
-    ``row_w`` (T,) optionally reweights whole slices — the forgetting /
-    delayed-visibility hook (:func:`_slice_weights`)."""
-    if row_w is not None:
-        w_buf = w_buf * row_w[:, None]
-    sid = env_idx.reshape(-1)
-    a = action_buf.reshape(-1)
-    w = w_buf.reshape(-1)
-    _, h, _ = UN.utilitynet_apply(
-        params, tables["x_emb"][sid], tables["x_feat"][sid],
-        tables["domain"][sid], a)
-    return NU.rebuild_ainv(NU.augment(h), ridge_lambda0, weights=w)
-
-
-_nucb_rebuild = jax.jit(_rebuild_impl, static_argnames=("cfg",))
-
-
-# ------------------------------------------------ single-dispatch scan -----
-def _scan_xs(env: DeviceReplayEnv) -> Dict[str, jnp.ndarray]:
-    return env.slice_xs()
+@functools.partial(
+    jax.jit, static_argnames=("policies", "delay", "fcfg", "train_chunks",
+                              "batch_size"))
+def _policy_zoo_scan(tables, xs, env_idx, cum0, keys_tup, hyp_tup,
+                     policies: Tuple[BanditPolicy, ...], scn=None,
+                     delay: int = 0,
+                     fcfg: ForgettingConfig = VANILLA_FORGETTING,
+                     train_chunks: int = 1, batch_size: int = 256):
+    """The POLICY AXIS: every policy's (grid x seed) lane vmap, compiled
+    and executed as ONE jitted dispatch. Per policy, ``keys`` (L, 2) and
+    every hyp leaf (L,) are pre-flattened by the caller into one lane
+    axis (lane l = (g, s), g = l // n_seeds) — a single batching axis
+    compiles to markedly better CPU code than nested grid/seed vmaps and
+    gives the device sharding one unambiguous axis. Policies carry
+    heterogeneous state/hypers pytrees, so the policy axis is a static
+    tuple (each member its own vmapped scan inside the one program)
+    rather than one more vmap dimension — what stays uniform is the lane
+    schema, the sharding, and the (G, n_seeds, T, ...) result layout.
+    Scenario transforms are broadcast, not vmapped: every lane replays
+    the same drift (one resident copy of the transform tables)."""
+    out = []
+    for i, p in enumerate(policies):
+        def one(k, h, p=p):
+            return _policy_scan_impl(tables, xs, env_idx, cum0, k, h, p,
+                                     scn, delay, fcfg, train_chunks,
+                                     batch_size)[1]
+        out.append(jax.vmap(one)(keys_tup[i], hyp_tup[i]))
+    return tuple(out)
 
 
 def _cum_valid(env: DeviceReplayEnv) -> jnp.ndarray:
     """(T+1,) int32 cumulative VALID sample counts: cum0[t+1] = number of
     real (unpadded) samples in slices 0..t — the searchsorted table for
-    :func:`_sample_valid` and the training-budget base."""
+    ``policies._sample_valid`` and the training-budget base."""
     sizes = np.asarray(env.slice_sizes, np.int64)
     return jnp.asarray(np.concatenate([[0], np.cumsum(sizes)]), jnp.int32)
 
@@ -505,137 +287,152 @@ def neuralucb_train_schedule(env: DeviceReplayEnv, epochs: int = 5,
     return per_slice * TRAIN_CHUNK
 
 
-def _init_state(key, cfg: UN.UtilityNetConfig, T: int, S: int,
-                ridge_lambda0) -> NeuralUCBState:
-    """One key split feeds BOTH the network init and the run stream —
-    split[0] -> init, split[1] -> exploration/training draws. (The PR-1
-    runner fed PRNGKey(seed) to both, correlating warm-slice exploration
-    with the weight init; the host router uses seed and seed+1.)"""
-    k_init, key = jax.random.split(key)
-    params = UN.init_utilitynet(k_init, cfg)
-    return NeuralUCBState(
-        params=params,
-        opt=adamw_init(params),
-        ainv=NU.init_ainv(cfg.ucb_feature_dim, ridge_lambda0),
-        bufs={
-            "action": jnp.zeros((T, S), jnp.int32),
-            "reward": jnp.zeros((T, S), jnp.float32),
-            "gate_label": jnp.zeros((T, S), jnp.float32),
-            "w": jnp.zeros((T, S), jnp.float32),
-            "gate_w": jnp.zeros((T, S), jnp.float32),
-        },
-        key=key)
+def _chunks_for(env: DeviceReplayEnv, policy: BanditPolicy,
+                train_steps: Optional[int], epochs: int,
+                batch_size: int) -> int:
+    """TRAIN_CHUNK dispatches per slice. Policies without a train hook
+    get the canonical 1 (the value is a static jit arg — pinning it
+    avoids gratuitous retraces across differently-scheduled calls)."""
+    if policy.train is _no_train:
+        return 1
+    if train_steps is None:
+        train_steps = neuralucb_train_schedule(env, epochs, batch_size)
+    return -(-int(train_steps) // TRAIN_CHUNK)
 
 
-def _nucb_slice_full(state: NeuralUCBState, x, tables, env_idx, cum0,
-                     hyp: NeuralUCBHypers, cfg: UN.UtilityNetConfig,
-                     backend: str, train_chunks: int, batch_size: int,
-                     scn: Optional[ScenarioTables] = None, delay: int = 0,
-                     fcfg: ForgettingConfig = VANILLA_FORGETTING):
-    """One whole slice of Algorithm 1 (DECIDE → UPDATE → TRAIN → REBUILD)
-    as a pure scan body. Key discipline mirrors the host-stepped runner
-    exactly (one split per slice step, one per training chunk) so both
-    paths consume identical PRNG streams. ``scn`` applies the scenario
-    engine's per-slice transforms; ``delay`` (static) lags learning
-    visibility by d slices; ``fcfg`` (static) selects the forgetting
-    variant — all three default to the PR-2 stationary path, bit-exact.
-    """
-    params, opt, ainv, bufs, key = state
-    t, idx, mask = x["t"], x["idx"], x["mask"]
-    key, k_slice = jax.random.split(key)
-    lam = jnp.where(hyp.cost_lambda >= 0, jnp.abs(hyp.cost_lambda),
-                    tables["env_lambda"])
-    eff = _effective_slice(tables, scn, t, idx, lam)
-    batch = _context(tables, idx)
-    avail = None if eff is None else eff["avail"]
-    a, g, mu_safe, gs = jax.lax.cond(
-        t == 0,
-        lambda: _decide_warm(params, batch, k_slice, cfg, avail),
-        lambda: _decide_ucb(params, ainv, batch, hyp.beta, hyp.tau_g,
-                            cfg, backend, avail))
-    ainv, bufs, metrics = _post_decide(
-        ainv, tables, eff, bufs, t, idx, mask, a, g, mu_safe, gs,
-        hyp.gate_margin, update_ainv=(delay == 0))
-    t_vis = t - delay
-    if delay > 0:
-        # the online rank-k update applies the slice that just became
-        # visible (t - delay), its features recomputed with current params
-        tv = jnp.maximum(t_vis, 0)
-        vid = env_idx[tv]
-        _, h, _ = UN.utilitynet_apply(
-            params, tables["x_emb"][vid], tables["x_feat"][vid],
-            tables["domain"][vid], bufs["action"][tv])
-        vw = bufs["w"][tv] * (t_vis >= 0).astype(jnp.float32)
-        ainv = NU.woodbury_update(ainv, NU.augment(h) * vw[:, None])
-    count = cum0[jnp.clip(t + 1 - delay, 0, cum0.shape[0] - 1)]
+def run_policy_device(env: DeviceReplayEnv, policy: BanditPolicy,
+                      hypers: Any = (), *, seed: int = 0, scenario=None,
+                      forgetting: ForgettingConfig = VANILLA_FORGETTING,
+                      train_steps: Optional[int] = None, epochs: int = 5,
+                      batch_size: int = 256, return_state: bool = False):
+    """Any registered policy, all T slices, ONE device dispatch.
 
-    def chunk(carry, _):
-        params, opt, key = carry
-        key, kc = jax.random.split(key)
-        params, opt = _train_chunk(
-            params, opt, tables, env_idx, bufs, kc, cum0, count, hyp.lr,
-            cfg, TRAIN_CHUNK, batch_size, t_vis, fcfg, delay > 0)
-        return (params, opt, key), None
-
-    (params, opt, key), _ = jax.lax.scan(
-        chunk, (params, opt, key), None, length=train_chunks)
-    row_w = None
-    if delay > 0 or not fcfg.is_vanilla:
-        row_w = _slice_weights(env_idx.shape[0], t, delay, fcfg)
-    ainv = _rebuild_impl(params, tables, env_idx, bufs["action"],
-                         bufs["w"], cfg, hyp.ridge_lambda0, row_w)
-    return NeuralUCBState(params, opt, ainv, bufs, key), metrics
+    ``hypers`` is the policy's scalar hypers pytree (see
+    ``repro.sim.policies.make_policy``); ``scenario`` (name | Scenario |
+    None) applies the DESIGN.md §9 non-stationary transforms inside the
+    same single scan; ``forgetting`` selects the §9.2 adaptivity variant;
+    ``train_steps`` / ``epochs`` set the per-slice replay-SGD budget for
+    policies with a train hook. Returns the ``run_protocol`` per-policy
+    result dict; with ``return_state=True`` also ``(state, key)``."""
+    env, scn, delay = resolve_scenario(env, scenario)
+    chunks = _chunks_for(env, policy, train_steps, epochs, batch_size)
+    t0 = time.perf_counter()
+    (state, key), ms = _policy_scan(
+        _tables(env), env.slice_xs(), env.idx, _cum_valid(env),
+        jax.random.PRNGKey(seed), hypers, policy, scn, delay, forgetting,
+        chunks, batch_size)
+    jax.block_until_ready(ms)
+    res = _metrics_to_results({k: np.asarray(v) for k, v in ms.items()},
+                              time.perf_counter() - t0)
+    return (res, state, key) if return_state else res
 
 
-def _nucb_scan_impl(tables, xs, env_idx, cum0, key, hyp: NeuralUCBHypers,
-                    cfg: UN.UtilityNetConfig, backend: str,
-                    train_chunks: int, batch_size: int,
-                    scn: Optional[ScenarioTables] = None, delay: int = 0,
-                    fcfg: ForgettingConfig = VANILLA_FORGETTING):
-    T, S = env_idx.shape
-    if scn is None:
-        # stationary: pre-derive the whole reward table once per run;
-        # scenario runs re-derive per slice inside _effective_slice
-        tables = _apply_cost_lambda(tables, hyp.cost_lambda)
-    state = _init_state(key, cfg, T, S, hyp.ridge_lambda0)
-
-    def step(carry, x):
-        return _nucb_slice_full(carry, x, tables, env_idx, cum0, hyp,
-                                cfg, backend, train_chunks, batch_size,
-                                scn, delay, fcfg)
-
-    return jax.lax.scan(step, state, xs)
+def _grid_size(hypers: Any) -> int:
+    leaves = jax.tree.leaves(hypers)
+    sizes = [int(l.shape[0]) for l in map(jnp.asarray, leaves)
+             if jnp.ndim(l) >= 1]
+    if sizes and len(set(sizes)) > 1:
+        raise ValueError(f"ragged hypers grid: leaf sizes {sorted(set(sizes))}")
+    return sizes[0] if sizes else 1
 
 
-_nucb_scan = jax.jit(
-    _nucb_scan_impl,
-    static_argnames=("cfg", "backend", "train_chunks", "batch_size",
-                     "delay", "fcfg"))
+def _flatten_lanes(hypers: Any, G: int, n_seeds: int):
+    """Broadcast scalar leaves to (G,), then repeat each grid point per
+    seed — lane l = (g, s) with g = l // n_seeds, s = l % n_seeds."""
+    def lane(l):
+        l = jnp.asarray(l)
+        if jnp.ndim(l) == 0:
+            l = jnp.broadcast_to(l, (G,))
+        return jnp.repeat(l, n_seeds, axis=0)
+    return jax.tree.map(lane, hypers)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "backend", "train_chunks",
-                              "batch_size", "delay", "fcfg"))
-def _nucb_sweep_scan(tables, xs, env_idx, cum0, keys,
-                     hyp: NeuralUCBHypers, cfg: UN.UtilityNetConfig,
-                     backend: str, train_chunks: int, batch_size: int,
-                     scn: Optional[ScenarioTables] = None, delay: int = 0,
-                     fcfg: ForgettingConfig = VANILLA_FORGETTING):
-    """One flat vmap over (grid x seed) lanes — ``keys`` (L, 2) and every
-    ``hyp`` leaf (L,) are pre-flattened by the caller, which reshapes the
-    (L, T, ...) metrics back to (G, n_seeds, T, ...). A single batching
-    axis compiles to markedly better CPU code than nested grid/seed
-    vmaps, and gives the device sharding one unambiguous axis. Scenario
-    transforms are broadcast, not vmapped: every lane replays the same
-    drift (one resident copy of the (T, K) transform tables)."""
-    def one(k, h):
-        return _nucb_scan_impl(tables, xs, env_idx, cum0, k, h, cfg,
-                               backend, train_chunks, batch_size,
-                               scn, delay, fcfg)[1]
+def run_policy_sweep(env: DeviceReplayEnv,
+                     policies: Dict[str, Tuple[BanditPolicy, Any]], *,
+                     seeds: Sequence[int], scenario=None,
+                     forgetting: ForgettingConfig = VANILLA_FORGETTING,
+                     train_steps: Optional[int] = None, epochs: int = 5,
+                     batch_size: int = 256) -> Dict[str, Dict]:
+    """(policy × hypers × seed) study as ONE sharded device dispatch.
 
-    return jax.vmap(one)(keys, hyp)
+    ``policies`` maps name -> (BanditPolicy, hypers_grid) where each
+    hypers_grid leaf is a scalar (broadcast) or a (G,) array of grid
+    points (G may differ per policy). Every policy's (G x n_seeds) lane
+    axis is sharded across local devices, and all policies run inside
+    one jitted program (``_policy_zoo_scan``).
+
+    Returns {name: sweep} in the unified annotated schema: metric leaves
+    (G, n_seeds, T, ...), plus ``seeds``, ``train_steps``, and ``grid``
+    (each hypers field as a (G,) array) — every cell feeds
+    ``core.protocol.summarize`` via :func:`sweep_point_results`, and the
+    whole sweep feeds ``core.protocol.summarize_sweep``."""
+    seeds = list(seeds)
+    n_seeds = len(seeds)
+    env, scn, delay = resolve_scenario(env, scenario)
+    any_train = any(p.train is not _no_train for p, _ in policies.values())
+    if train_steps is None and any_train:
+        train_steps = neuralucb_train_schedule(env, epochs, batch_size)
+    chunks = -(-int(train_steps) // TRAIN_CHUNK) if any_train else 1
+    base_keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    names, pols, keys_t, hyp_t, grids, gsizes = [], [], [], [], [], []
+    for name, (pol, grid) in policies.items():
+        G = _grid_size(grid)
+        hyp = _flatten_lanes(grid, G, n_seeds)
+        keys = jnp.tile(base_keys, (G, 1))
+        keys, hyp = shard_sweep_axis((keys, hyp), G * n_seeds)
+        names.append(name)
+        pols.append(pol)
+        keys_t.append(keys)
+        hyp_t.append(hyp)
+        grids.append(grid)
+        gsizes.append(G)
+    ms_t = _policy_zoo_scan(_tables(env), env.slice_xs(), env.idx,
+                            _cum_valid(env), tuple(keys_t), tuple(hyp_t),
+                            tuple(pols), scn, delay, forgetting, chunks,
+                            batch_size)
+    out = {}
+    for name, pol, G, grid, ms in zip(names, pols, gsizes, grids, ms_t):
+        d = {k: np.asarray(v).reshape((G, n_seeds) + v.shape[1:])
+             for k, v in ms.items()}
+        d["seeds"] = np.asarray(seeds)
+        # annotate the steps that actually RAN: a sweep of train-less
+        # policies executes zero SGD steps whatever the caller requested
+        d["train_steps"] = np.asarray(
+            chunks * TRAIN_CHUNK if pol.train is not _no_train else 0)
+        d["grid"] = {
+            f: np.asarray(jnp.broadcast_to(jnp.asarray(v), (G,)))
+            for f, v in (zip(grid._fields, grid)
+                         if hasattr(grid, "_fields") else ())}
+        out[name] = d
+    return out
 
 
+# --------------------------------------------------------------- baselines --
+def run_baseline_device(env: DeviceReplayEnv, policy, *, seed: int = 0,
+                        scenario=None) -> Dict:
+    """One baseline, all T slices, one device dispatch, via the unified
+    runner (``policy`` may be a legacy :class:`DevicePolicy` triple or a
+    :class:`BanditPolicy`). Returns the ``run_protocol`` per-policy
+    result dict (summarize-compatible)."""
+    if isinstance(policy, DevicePolicy):
+        policy = as_bandit_policy(policy)
+    return run_policy_device(env, policy, (), seed=seed, scenario=scenario)
+
+
+def run_baseline_sweep(env: DeviceReplayEnv, policy, seeds,
+                       scenario=None) -> Dict[str, np.ndarray]:
+    """Multi-seed baseline sweep through the unified sweep runner.
+
+    Returns the same grid-annotated schema as every policy sweep: metric
+    leaves have shape (G=1, n_seeds, T, ...) plus ``seeds`` — a cell
+    feeds ``summarize`` via :func:`sweep_point_results`."""
+    if isinstance(policy, DevicePolicy):
+        policy = as_bandit_policy(policy)
+    return run_policy_sweep(env, {policy.name: (policy, ())},
+                            seeds=seeds, scenario=scenario)[policy.name]
+
+
+# --------------------------------------------------------------- neuralucb --
 def _hypers(beta, tau_g, gate_margin, lr, ridge_lambda0,
             cost_lambda) -> NeuralUCBHypers:
     f = jnp.float32
@@ -656,7 +453,8 @@ def run_neuralucb_device(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
                          scenario=None,
                          forgetting: ForgettingConfig = VANILLA_FORGETTING,
                          return_state: bool = False):
-    """Algorithm 1 end to end as ONE device dispatch (DESIGN.md §8.4).
+    """Algorithm 1 end to end as ONE device dispatch (DESIGN.md §8.4) —
+    the registered ``neuralucb`` policy on the unified runner.
 
     ``train_steps`` is the fixed per-slice SGD budget (rounded up to a
     TRAIN_CHUNK multiple); when omitted it is derived from ``epochs`` via
@@ -668,20 +466,18 @@ def run_neuralucb_device(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
     also the final :class:`NeuralUCBState`.
     """
     backend = ucb_backend or default_ucb_backend()
-    env, scn, delay = resolve_scenario(env, scenario)
-    if train_steps is None:
-        train_steps = neuralucb_train_schedule(env, epochs, batch_size)
-    chunks = -(-int(train_steps) // TRAIN_CHUNK)
+    policy = neuralucb_policy(cfg, backend)
     hyp = _hypers(beta, tau_g, gate_margin, lr, ridge_lambda0, cost_lambda)
-    t0 = time.perf_counter()
-    state, ms = _nucb_scan(_tables(env), _scan_xs(env), env.idx,
-                           _cum_valid(env), jax.random.PRNGKey(seed), hyp,
-                           cfg, backend, chunks, batch_size,
-                           scn, delay, forgetting)
-    jax.block_until_ready(ms)
-    res = _metrics_to_results({k: np.asarray(v) for k, v in ms.items()},
-                              time.perf_counter() - t0)
-    return (res, state) if return_state else res
+    out = run_policy_device(env, policy, hyp, seed=seed, scenario=scenario,
+                            forgetting=forgetting, train_steps=train_steps,
+                            epochs=epochs, batch_size=batch_size,
+                            return_state=return_state)
+    if not return_state:
+        return out
+    res, state, key = out
+    return res, NeuralUCBState(params=state["params"], opt=state["opt"],
+                               ainv=state["ainv"], bufs=state["bufs"],
+                               key=key)
 
 
 def run_neuralucb_sweep(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
@@ -704,47 +500,34 @@ def run_neuralucb_sweep(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
     Pallas kernel is the single-run serving path and is not batched under
     the sweep vmap.
     """
-    seeds = list(seeds)
-    env, scn, delay = resolve_scenario(env, scenario)
-    if train_steps is None:
-        train_steps = neuralucb_train_schedule(env, epochs, batch_size)
-    chunks = -(-int(train_steps) // TRAIN_CHUNK)
     grid = list(itertools.product(betas, tau_gs, cost_lambdas))
-    G, n_seeds = len(grid), len(seeds)
+    G = len(grid)
     f = functools.partial(jnp.asarray, dtype=jnp.float32)
-    # flatten (grid x seed) into one lane axis: lane l = (g, s) with
-    # g = l // n_seeds, s = l % n_seeds — one vmap, one shardable axis
-    L = G * n_seeds
-    rep = functools.partial(jnp.repeat, repeats=n_seeds)
-    hyp = NeuralUCBHypers(
-        beta=rep(f([b for b, _, _ in grid])),
-        tau_g=rep(f([t for _, t, _ in grid])),
-        gate_margin=jnp.full((L,), gate_margin, jnp.float32),
-        lr=jnp.full((L,), lr, jnp.float32),
-        ridge_lambda0=jnp.full((L,), ridge_lambda0, jnp.float32),
-        cost_lambda=rep(f([-1.0 if l is None else l for _, _, l in grid])))
-    keys = jnp.tile(
-        jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds]), (G, 1))
-    keys, hyp = shard_sweep_axis((keys, hyp), L)
-    ms = _nucb_sweep_scan(_tables(env), _scan_xs(env), env.idx,
-                          _cum_valid(env), keys, hyp, cfg, ucb_backend,
-                          chunks, batch_size, scn, delay, forgetting)
-    out = {k: np.asarray(v).reshape((G, n_seeds) + v.shape[1:])
-           for k, v in ms.items()}
+    hyp_grid = NeuralUCBHypers(
+        beta=f([b for b, _, _ in grid]),
+        tau_g=f([t for _, t, _ in grid]),
+        gate_margin=jnp.full((G,), gate_margin, jnp.float32),
+        lr=jnp.full((G,), lr, jnp.float32),
+        ridge_lambda0=jnp.full((G,), ridge_lambda0, jnp.float32),
+        cost_lambda=f([-1.0 if l is None else l for _, _, l in grid]))
+    out = run_policy_sweep(
+        env, {"neuralucb": (neuralucb_policy(cfg, ucb_backend), hyp_grid)},
+        seeds=seeds, scenario=scenario, forgetting=forgetting,
+        train_steps=train_steps, epochs=epochs,
+        batch_size=batch_size)["neuralucb"]
+    # legacy flat annotations (the grid subdict carries the same data)
     out["beta"] = np.asarray([b for b, _, _ in grid], np.float32)
     out["tau_g"] = np.asarray([t for _, t, _ in grid], np.float32)
     out["cost_lambda"] = np.asarray(
         [np.nan if l is None else l for _, _, l in grid], np.float32)
-    out["seeds"] = np.asarray(list(seeds))
-    out["train_steps"] = np.asarray(chunks * TRAIN_CHUNK)
     return out
 
 
 def sweep_point_results(sweep: Dict[str, np.ndarray], g: int,
                         s: int) -> Dict:
-    """Extract one (grid point, seed) run from a sweep as a
-    ``run_protocol`` per-policy result dict, so sweep cells feed
-    ``repro.core.protocol.summarize`` unchanged."""
+    """Extract one (grid point, seed) run from ANY policy's annotated
+    sweep as a ``run_protocol`` per-policy result dict, so sweep cells
+    feed ``repro.core.protocol.summarize`` unchanged."""
     cum = np.cumsum(np.asarray(sweep["sum_reward"][g, s], np.float64))
     T = len(cum)
     return {
@@ -757,6 +540,41 @@ def sweep_point_results(sweep: Dict[str, np.ndarray], g: int,
         "action_hist": np.asarray(sweep["action_hist"][g, s]),
         "wall_s": [0.0] * T,
     }
+
+
+# -------------------------------------------- host-stepped parity runner --
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"))
+def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
+                     beta, tau_g, gate_margin,
+                     cfg: UN.UtilityNetConfig, backend: str, warm: bool):
+    """DECIDE -> feedback lookup -> buffer write -> rank-k UPDATE, fused.
+    Host-stepped entry point: ``warm`` is static (one trace per phase).
+    Stationary tables only — scenarios are a scanned-runner feature."""
+    batch = _context(tables, idx)
+    if warm:
+        a, g, mu_safe, gs = _decide_warm(params, batch, key, cfg)
+    else:
+        a, g, mu_safe, gs = _decide_ucb(params, ainv, batch, beta, tau_g,
+                                        cfg, backend)
+    r = _pick(tables, None, "reward", idx, a)
+    gate_label = (r < mu_safe - gate_margin).astype(jnp.float32)
+    bufs = {
+        "action": bufs["action"].at[t].set(a),
+        "reward": bufs["reward"].at[t].set(r),
+        "gate_label": bufs["gate_label"].at[t].set(gate_label),
+        "w": bufs["w"].at[t].set(mask),
+        "gate_w": bufs["gate_w"].at[t].set(mask * gs),
+    }
+    # padded rows are zeroed -> contribute nothing to the rank-k update
+    ainv = NU.woodbury_update(ainv, g * mask[:, None])
+    return ainv, bufs, _slice_metrics(tables, None, idx, mask, a)
+
+
+_nucb_train = jax.jit(
+    _train_chunk,
+    static_argnames=("cfg", "num_steps", "batch_size", "fcfg", "delayed"))
+
+_nucb_rebuild = jax.jit(_rebuild_impl, static_argnames=("cfg",))
 
 
 class DeviceNeuralUCB:
@@ -791,14 +609,14 @@ class DeviceNeuralUCB:
         self.forgetting = forgetting
         self.ucb_backend = ucb_backend or default_ucb_backend()
         T, S = env.idx.shape
-        # same split discipline as the scanned _init_state: split[0] ->
-        # network init, split[1] -> run stream (the PR-1 runner fed
-        # PRNGKey(seed) to both, correlating warm-slice exploration with
-        # the weight init)
-        state = _init_state(jax.random.PRNGKey(seed), cfg, T, S,
-                            ridge_lambda0)
-        self.params, self.opt = state.params, state.opt
-        self.ainv, self.bufs, self.key = state.ainv, state.bufs, state.key
+        # same split discipline as the unified runner's neural init:
+        # split[0] -> network init, split[1] -> run stream (the PR-1
+        # runner fed PRNGKey(seed) to both, correlating warm-slice
+        # exploration with the weight init)
+        state, key = neural_init_state(jax.random.PRNGKey(seed), cfg, T, S,
+                                       ridge_lambda0)
+        self.params, self.opt = state["params"], state["opt"]
+        self.ainv, self.bufs, self.key = state["ainv"], state["bufs"], key
         self._cum0 = _cum_valid(env)
         self._stepped = False   # True once run() has mutated state host-side
 
@@ -903,15 +721,17 @@ class DeviceNeuralUCB:
 
 
 def run_protocol_device(env: DeviceReplayEnv,
-                        policies: Dict[str, DevicePolicy], *,
+                        policies: Dict[str, Any], *,
                         neuralucb: Optional[DeviceNeuralUCB] = None,
                         epochs: int = 5, seed: int = 0,
                         verbose: bool = False,
                         scenario=None) -> Dict[str, Dict]:
     """Drop-in device-resident counterpart of
-    ``repro.core.protocol.run_protocol``: every policy replays the same
-    slice stream (and the same scenario drift, when one is named);
-    results feed ``repro.core.protocol.summarize``.
+    ``repro.core.protocol.run_protocol``: every policy (legacy
+    :class:`DevicePolicy` triples and unified :class:`BanditPolicy`
+    members alike) replays the same slice stream (and the same scenario
+    drift, when one is named); results feed
+    ``repro.core.protocol.summarize``.
 
     Scheduling caveat: with ``scenario=None`` the NeuralUCB leg is
     ``neuralucb.run(epochs=...)`` — the stepped growing schedule (or its

@@ -1,29 +1,70 @@
-"""Stateless device baseline policies (DESIGN.md §8.2).
+"""The unified bandit-policy runtime and the policy zoo (DESIGN.md §10).
 
-Each baseline is a triple of pure functions over an explicit state pytree,
-so a full protocol run is one ``lax.scan`` and a multi-seed sweep is one
-``vmap`` over PRNG keys — no Python objects, no host RNG:
+Every online learner — NeuralUCB included — is a :class:`BanditPolicy`:
+a pytree-of-callables protocol over an explicit state pytree plus a
+lane-vmappable hypers pytree, scanned end-to-end by the ONE generic
+runner in :mod:`repro.sim.engine` (``run_policy_device`` /
+``run_policy_sweep``). The protocol:
 
-    init(key)                          -> state
-    decide(state, key, batch)          -> actions (S,) i32
-    update(state, batch, a, r, mask)   -> state
+    init(key, ctx)                      -> (state, run_key)
+    decide(state, key, batch, ctx)      -> (actions (S,) i32, aux)
+    update(state, batch, a, r, ctx, aux)-> state      # in-slice feedback
+    train(state, key, ctx)              -> (state, key)  # end-of-slice SGD
+    rebuild(state, ctx)                 -> state      # end-of-slice refresh
+    prepare(tables, hyp)                -> tables     # stationary pre-derive
 
-``batch`` is the per-slice gather from :class:`DeviceReplayEnv` (x_emb,
-x_feat, domain — context only; feedback stays in the engine). Semantics
-mirror the host classes in ``repro.core.baselines``: greedy here is
-bit-compatible with ``EmpiricalGreedy`` (decide from pre-slice statistics,
-ties to the lowest index); random draws from the jax PRNG instead of
-numpy's, so it matches the host loop in distribution, not samples.
+``ctx`` is a :class:`PolicyCtx` carrying the resident replay tables, the
+slice cursor, the scenario's effective tables / availability mask, and
+the (static) delay / forgetting / training-schedule knobs — so every
+policy composes with scenarios, ``ForgettingConfig``, delayed feedback,
+and the sharded sweep vmap for free. Key discipline is owned by the
+runner (one split per slice feeds ``decide``; ``train`` splits further
+from the carried stream), which keeps the NeuralUCB trajectories
+bit-exact with the pre-unification scans (tests/test_golden.py).
+
+Registered zoo (``POLICIES`` / :func:`make_policy`) — the paper's
+closing question ("remaining challenges in action discrimination and
+exploration") made comparable across exploration mechanisms:
+
+    random / min_cost / max_quality / greedy — the paper's §4.1 baselines
+    dyn_min_cost — scenario-aware: cheapest AVAILABLE arm under the
+        slice's effective cost tables (the honest min-cost under drift)
+    linucb       — disjoint LinUCB on raw text embeddings (per-arm
+        blocked Sherman–Morrison/Woodbury, no network)
+    neuralucb    — the paper's policy (gated UCB over shared A^-1)
+    neural_ts    — NeuralTS: Thompson sampling via posterior-perturbed
+        scores mu + nu * sigma * z, sigma from the same A^-1 bonus
+        (Pallas ``ucb_score`` kernel on TPU)
+    eps_greedy   — ε-uniform over the UtilityNet's mean estimates
+    boltzmann    — softmax(mu / temperature) sampling
+
+The neural variants share the UtilityNet replay-training path verbatim
+(`_train_chunk`), so a zoo comparison isolates the exploration rule.
+
+Legacy: :class:`DevicePolicy` (stateless init/decide/update triples) is
+kept as the lightweight baseline authoring surface; :func:`as_bandit_policy`
+lifts one into the unified protocol bit-compatibly.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import neuralucb as NU
+from repro.core import utilitynet as UN
+from repro.core.reward import normalize_cost
+from repro.kernels.ucb_score.ops import ucb_score
+from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
+
+# ------------------------------------------------------------ legacy API --
 class DevicePolicy(NamedTuple):
+    """Stateless baseline triple (DESIGN.md §8.2); lift with
+    :func:`as_bandit_policy` to run on the unified runtime."""
+
     name: str
     init: Callable
     decide: Callable
@@ -32,8 +73,10 @@ class DevicePolicy(NamedTuple):
 
 class NeuralUCBState(NamedTuple):
     """Everything Algorithm 1 mutates across slices, as one explicit pytree
-    (DESIGN.md §8.4) — the carry of the single-dispatch protocol scan, and
-    the state snapshot the host-stepped runner threads between jit calls.
+    (DESIGN.md §8.4) — the state snapshot the host-stepped runner threads
+    between jit calls, and the ``return_state`` schema of
+    ``run_neuralucb_device`` (the unified runner carries the same leaves
+    as a plain dict plus the runner-owned key).
     """
 
     params: Dict[str, Any]      # UtilityNet weights
@@ -56,6 +99,26 @@ class NeuralUCBHypers(NamedTuple):
     lr: jnp.ndarray             # AdamW learning rate
     ridge_lambda0: jnp.ndarray  # A = lambda0 I + ... ridge
     cost_lambda: jnp.ndarray    # reward trade-off; < 0 -> env's table
+
+
+class NeuralPolicyHypers(NamedTuple):
+    """Hypers for the non-UCB neural zoo members (NeuralTS / ε-greedy /
+    Boltzmann). ``explore`` is the policy's single exploration knob —
+    nu (TS posterior scale), ε (uniform-mix rate), or the softmax
+    temperature; 0 reproduces net-greedy for TS and ε-greedy."""
+
+    explore: jnp.ndarray
+    gate_margin: jnp.ndarray    # gate-label margin (shared train path)
+    lr: jnp.ndarray
+    ridge_lambda0: jnp.ndarray  # TS A^-1 ridge (unused by eps/boltzmann)
+    cost_lambda: jnp.ndarray    # < 0 -> env's reward table
+
+
+class LinUCBHypers(NamedTuple):
+    """Disjoint-LinUCB hypers: exploration scale and per-arm ridge."""
+
+    alpha: jnp.ndarray
+    ridge: jnp.ndarray
 
 
 class ForgettingConfig(NamedTuple):
@@ -89,10 +152,88 @@ class ForgettingConfig(NamedTuple):
 VANILLA_FORGETTING = ForgettingConfig()
 
 
-def _no_update(state, batch, actions, rewards, mask):
+# ------------------------------------------------------ unified protocol --
+class PolicyCtx(NamedTuple):
+    """Everything a policy callback may need beyond its own state, built
+    once per run and ``_replace``-d per slice by the generic runner.
+    Array fields are traced; ``delay`` / ``fcfg`` / ``train_chunks`` /
+    ``batch_size`` are static Python values baked into the trace."""
+
+    tables: Any                 # resident replay tables (engine._tables)
+    env_idx: Any                # (T, S) slice-index matrix
+    cum0: Any                   # (T+1,) cumulative valid sample counts
+    hyp: Any                    # this lane's hypers pytree
+    eff: Any                    # slice effective tables (None = stationary)
+    t: Any                      # slice cursor (traced scalar)
+    idx: Any                    # (S,) sample ids of the slice
+    mask: Any                   # (S,) validity mask
+    avail: Any                  # (K,) availability or None
+    delay: int                  # static: feedback delay in slices
+    fcfg: ForgettingConfig      # static: forgetting variant
+    train_chunks: int           # static: TRAIN_CHUNK dispatches per slice
+    batch_size: int             # static: replay minibatch size
+
+
+def _no_train(state, key, ctx):
+    return state, key
+
+
+def _no_rebuild(state, ctx):
     return state
 
 
+def _no_prepare(tables, hyp):
+    return tables
+
+
+class BanditPolicy(NamedTuple):
+    """The unified policy protocol (module docstring). A NamedTuple of
+    callables is hashable, so a policy instance rides through jit as a
+    STATIC argument — factories are ``lru_cache``-d so repeated runs with
+    the same configuration share one compiled scan.
+
+    ``availability_aware`` policies exclude scenario-masked arms inside
+    ``decide``; for unaware policies the runner applies the engine-level
+    cheapest-available fallback after the fact."""
+
+    name: str
+    init: Callable
+    decide: Callable
+    update: Callable
+    train: Callable = _no_train
+    rebuild: Callable = _no_rebuild
+    prepare: Callable = _no_prepare
+    availability_aware: bool = False
+
+
+def as_bandit_policy(pol: DevicePolicy) -> BanditPolicy:
+    """Lift a legacy stateless triple into the unified protocol. Key
+    discipline matches the pre-unification `_baseline_scan` exactly:
+    ``init`` sees the unsplit seed key and passes it through as the run
+    stream, and ``decide`` consumes the runner's one split per slice."""
+    return _as_bandit_policy_cached(pol)
+
+
+@functools.lru_cache(maxsize=None)
+def _as_bandit_policy_cached(pol: DevicePolicy) -> BanditPolicy:
+    def init(key, ctx):
+        return pol.init(key), key
+
+    def decide(state, key, batch, ctx):
+        return pol.decide(state, key, batch), None
+
+    def update(state, batch, a, r, ctx, aux):
+        return pol.update(state, batch, a, r, ctx.mask)
+
+    return BanditPolicy(pol.name, init, decide, update)
+
+
+# --------------------------------------------------------- §8.2 baselines --
+def _dev_no_update(state, batch, actions, rewards, mask):
+    return state
+
+
+@functools.lru_cache(maxsize=None)
 def random_policy(num_actions: int) -> DevicePolicy:
     """Uniform over the pool, one fold of the scan key per slice."""
 
@@ -103,9 +244,10 @@ def random_policy(num_actions: int) -> DevicePolicy:
         B = batch["x_emb"].shape[0]
         return jax.random.randint(key, (B,), 0, num_actions, jnp.int32)
 
-    return DevicePolicy("random", init, decide, _no_update)
+    return DevicePolicy("random", init, decide, _dev_no_update)
 
 
+@functools.lru_cache(maxsize=None)
 def fixed_policy(action: int, name: str = "fixed") -> DevicePolicy:
     """min-cost / max-quality: a fixed arm chosen from dataset statistics."""
 
@@ -116,9 +258,10 @@ def fixed_policy(action: int, name: str = "fixed") -> DevicePolicy:
         B = batch["x_emb"].shape[0]
         return jnp.full((B,), action, jnp.int32)
 
-    return DevicePolicy(name, init, decide, _no_update)
+    return DevicePolicy(name, init, decide, _dev_no_update)
 
 
+@functools.lru_cache(maxsize=None)
 def greedy_policy(num_actions: int) -> DevicePolicy:
     """Context-free empirical-mean greedy (= core.baselines.EmpiricalGreedy).
 
@@ -144,3 +287,663 @@ def greedy_policy(num_actions: int) -> DevicePolicy:
         return (sum_r + onehot.T @ rewards, cnt + onehot.sum(axis=0))
 
     return DevicePolicy("greedy", init, decide, update)
+
+
+@functools.lru_cache(maxsize=None)
+def dyn_min_cost_policy() -> BanditPolicy:
+    """Scenario-aware dynamic min-cost: the cheapest AVAILABLE arm under
+    the CURRENT slice's effective cost tables — the honest budget-tier
+    baseline under price drift/shocks (the static ``min_cost`` arm keeps
+    routing to a repriced provider forever)."""
+
+    def init(key, ctx):
+        return (), key
+
+    def decide(state, key, batch, ctx):
+        if ctx.eff is None:
+            c = ctx.tables["mean_cost"]
+        else:
+            denom = jnp.maximum(ctx.mask.sum(), 1.0)
+            c = (ctx.eff["cost"] * ctx.mask[:, None]).sum(axis=0) / denom
+        if ctx.avail is not None:
+            c = jnp.where(ctx.avail > 0, c, jnp.inf)
+        a = jnp.argmin(c).astype(jnp.int32)
+        B = batch["x_emb"].shape[0]
+        return jnp.full((B,), a, jnp.int32), None
+
+    def update(state, batch, a, r, ctx, aux):
+        return state
+
+    return BanditPolicy("dyn-min-cost", init, decide, update,
+                        availability_aware=True)
+
+
+# ----------------------------------------------------------------- LinUCB --
+def _lin_features(x_emb) -> jnp.ndarray:
+    """Raw-feature LinUCB context: L2-normalized embedding + bias 1 —
+    same featurization as the host ``core.baselines.LinUCB``."""
+    x = x_emb / jnp.maximum(
+        jnp.linalg.norm(x_emb, axis=-1, keepdims=True), 1e-6)
+    return jnp.concatenate(
+        [x, jnp.ones(x.shape[:-1] + (1,), x.dtype)], axis=-1)
+
+
+@functools.lru_cache(maxsize=None)
+def linucb_policy() -> BanditPolicy:
+    """Disjoint LinUCB (Li et al. 2010) on raw text embeddings: one ridge
+    model per arm, no network. A slice's update is K masked blocked
+    Woodbury steps (vmapped over arms; zero-weight rows are no-ops) —
+    algebraically the per-sample Sherman–Morrison recursion, but MXU
+    GEMMs instead of S sequential rank-1 updates."""
+
+    def init(key, ctx):
+        K = ctx.tables["reward"].shape[1]
+        D = ctx.tables["x_emb"].shape[1] + 1
+        eye = jnp.eye(D, dtype=jnp.float32) / ctx.hyp.ridge
+        return {"ainv": jnp.repeat(eye[None], K, axis=0),
+                "b": jnp.zeros((K, D), jnp.float32)}, key
+
+    def decide(state, key, batch, ctx):
+        g = _lin_features(batch["x_emb"])                       # (B, D)
+        theta = jnp.einsum("kij,kj->ki", state["ainv"], state["b"])
+        mu = g @ theta.T                                        # (B, K)
+        quad = jnp.einsum("bi,kij,bj->bk", g, state["ainv"], g)
+        scores = mu + ctx.hyp.alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
+        if ctx.avail is not None:
+            scores = scores + jnp.where(ctx.avail > 0, 0.0, -jnp.inf)
+        return jnp.argmax(scores, axis=-1).astype(jnp.int32), g
+
+    def update(state, batch, a, r, ctx, aux):
+        g = aux
+        K = state["ainv"].shape[0]
+        w = jax.nn.one_hot(a, K, dtype=jnp.float32) * ctx.mask[:, None]
+        ainv = jax.vmap(
+            lambda ak, wk: NU.woodbury_update(ak, g * wk[:, None]))(
+                state["ainv"], w.T)
+        b = state["b"] + jnp.einsum("bk,bd->kd", w, g * r[:, None])
+        return {"ainv": ainv, "b": b}
+
+    return BanditPolicy("linucb", init, decide, update,
+                        availability_aware=True)
+
+
+# --------------------------------------------- shared neural scaffolding --
+# SGD steps per compiled training dispatch. Per-slice step budgets are
+# rounded UP to a multiple of this, so the training scan compiles exactly
+# once for the whole run instead of once per distinct step count.
+TRAIN_CHUNK = 32
+
+
+def _weighted_loss(params, cfg: UN.UtilityNetConfig, batch):
+    """Replay loss with per-row validity weights (padded rows carry w=0)."""
+    mu, _, gate_p = UN.utilitynet_apply(
+        params, batch["x_emb"], batch["x_feat"], batch["domain"],
+        batch["action"])
+    w = batch["w"]
+    l_u = (UN.huber(mu, batch["reward"], cfg.huber_delta) * w
+           ).sum() / jnp.maximum(w.sum(), 1.0)
+    p = jnp.clip(gate_p, 1e-6, 1 - 1e-6)
+    y = batch["gate_label"]
+    bce = -(y * jnp.log(p) + (1 - y) * jnp.log(1 - p))
+    gw = batch["gate_w"]
+    l_g = (bce * gw).sum() / jnp.maximum(gw.sum(), 1.0)
+    return l_u + 0.5 * l_g, {"loss_u": l_u, "loss_gate": l_g}
+
+
+def _apply_cost_lambda(tables, cost_lambda):
+    """Re-derive the reward table for a swept ``cost_lambda`` (Eq. 1):
+    r = q * exp(-lambda * c_tilde). Negative lambda is the sentinel for
+    "keep the env's precomputed table" (both sides of the where are cheap
+    elementwise passes over the resident (n, K) tables)."""
+    swept = tables["quality"] * jnp.exp(
+        -jnp.abs(cost_lambda) * tables["cnorm"])
+    reward = jnp.where(cost_lambda >= 0, swept, tables["reward"])
+    # keep the per-sample dynamic-oracle reference consistent with the
+    # re-derived table (one (n, K) max per dispatch, outside the scan)
+    return dict(tables, reward=reward, oracle_max=reward.max(axis=1))
+
+
+def _masked_uniform(key, B: int, num_actions: int, avail=None):
+    """Uniform draw over arms — over AVAILABLE arms when a scenario masks
+    some. The masked draw is a randint over the available COUNT mapped
+    through the availability CDF, so with all arms available it consumes
+    the key identically to the plain draw (an identity scenario
+    reproduces the fast path bit-for-bit)."""
+    if avail is None:
+        return jax.random.randint(key, (B,), 0, num_actions, jnp.int32)
+    n_av = avail.astype(jnp.int32).sum()
+    r = jax.random.randint(key, (B,), 0, jnp.maximum(n_av, 1), jnp.int32)
+    rank = jnp.cumsum(avail.astype(jnp.int32)) - 1  # arm -> avail rank
+    return jnp.searchsorted(rank, r, side="left").astype(jnp.int32)
+
+
+def _decide_warm(params, batch, key, cfg: UN.UtilityNetConfig, avail=None):
+    """Slice-1 warm start for every neural policy: uniform exploration
+    (over AVAILABLE arms when a scenario masks some); the safe-utility
+    reference is 0 and the gate loss is masked (gate scale 0)."""
+    B = batch["x_emb"].shape[0]
+    a = _masked_uniform(key, B, cfg.num_actions, avail)
+    _, h, _ = UN.utilitynet_apply(
+        params, batch["x_emb"], batch["x_feat"], batch["domain"], a)
+    return a, NU.augment(h), jnp.zeros((B,), jnp.float32), jnp.float32(0.0)
+
+
+def _decide_ucb(params, ainv, batch, beta, tau_g,
+                cfg: UN.UtilityNetConfig, backend: str, avail=None):
+    """Gated UCB decision over all actions (paper §3.3). Unavailable
+    arms (scenario avail mask) are excluded from BOTH the UCB argmax and
+    the safe mean-greedy argmax."""
+    mu, h, gate_p = UN.utilitynet_all_actions(
+        params, cfg, batch["x_emb"], batch["x_feat"], batch["domain"])
+    g_all = NU.augment(h)                                  # (B, K, F)
+    if backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        scores = ucb_score(g_all, ainv, mu, beta, interpret=interpret)
+    else:
+        scores = mu + beta * NU.ucb_bonus(ainv, g_all)
+    mu_sel = mu
+    if avail is not None:
+        neg = jnp.where(avail > 0, 0.0, -jnp.inf)
+        scores = scores + neg
+        mu_sel = mu + neg
+    a_ucb = jnp.argmax(scores, axis=-1)
+    a_safe = jnp.argmax(mu_sel, axis=-1)
+    a = jnp.where(gate_p >= tau_g, a_ucb, a_safe).astype(jnp.int32)
+    g = jnp.take_along_axis(
+        g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
+    return a, g, mu_safe, jnp.float32(1.0)
+
+
+def _sample_valid(key, batch_size: int, cum0, count):
+    """Uniform flat draw over the first ``count`` VALID buffer entries.
+
+    Valid entries are the per-row prefixes of the (T, S) buffers (the
+    padded tail of each row carries mask 0 — DeviceReplayEnv layout), so
+    with cum0 = [0, cumsum(slice_sizes)] a flat u in [0, count) maps to
+    row = searchsorted(cum0, u, 'right') - 1 and col = u - cum0[row].
+    Sampling the raw (t+1)*S padded range instead (the PR-1 bug) shrank
+    the effective minibatch by the padding fraction: padded rows carry
+    w=0, so they neutralize their loss term but still occupy batch slots.
+    """
+    flat = jax.random.randint(key, (batch_size,), 0, jnp.maximum(count, 1))
+    row = jnp.searchsorted(cum0, flat, side="right").astype(jnp.int32) - 1
+    col = flat - cum0[row]
+    return row, col
+
+
+def _sample_recency(key, batch_size: int, cum0, t_vis, rho: float):
+    """Recency-weighted replay draw (DESIGN.md §9.2): slice s <= t_vis is
+    drawn with probability proportional to size_s * rho^(t_vis - s), then
+    a column uniformly within the slice — so the UtilityNet's minibatches
+    lean toward post-drift feedback instead of averaging it away."""
+    sizes = (cum0[1:] - cum0[:-1]).astype(jnp.float32)          # (T,)
+    s = jnp.arange(sizes.shape[0], dtype=jnp.int32)
+    ok = (s <= jnp.maximum(t_vis, 0)) & (sizes > 0)
+    logw = jnp.where(
+        ok,
+        jnp.log(jnp.maximum(sizes, 1.0))
+        + (t_vis - s).astype(jnp.float32) * jnp.log(jnp.float32(rho)),
+        -jnp.inf)
+    k_row, k_col = jax.random.split(key)
+    row = jax.random.categorical(
+        k_row, logw, shape=(batch_size,)).astype(jnp.int32)
+    u = jax.random.uniform(k_col, (batch_size,))
+    col = jnp.minimum(jnp.floor(u * sizes[row]),
+                      jnp.maximum(sizes[row] - 1, 0)).astype(jnp.int32)
+    return row, col
+
+
+def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
+                 cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int,
+                 t_vis=None, fcfg: ForgettingConfig = VANILLA_FORGETTING,
+                 delayed: bool = False):
+    """``num_steps`` SGD steps on sampled replay minibatches, all on
+    device; ``count`` (traced) is the number of VISIBLE buffered samples.
+    Shared verbatim by the host-stepped and scanned runners so identical
+    keys give identical training trajectories. ``fcfg`` (static) selects
+    uniform vs recency-weighted sampling; ``delayed`` (static) zeroes the
+    loss weights of rows past the visibility horizon ``t_vis`` (a
+    delayed-feedback slice's rows are written but not yet learnable)."""
+
+    def step(carry, k):
+        params, opt = carry
+        if fcfg.replay_rho < 1.0:
+            row, col = _sample_recency(k, batch_size, cum0, t_vis,
+                                       fcfg.replay_rho)
+        else:
+            row, col = _sample_valid(k, batch_size, cum0, count)
+        sid = env_idx[row, col]
+        w = bufs["w"][row, col]
+        gw = bufs["gate_w"][row, col]
+        if delayed:
+            vis = (row <= t_vis).astype(jnp.float32)
+            w = w * vis
+            gw = gw * vis
+        batch = {
+            "x_emb": tables["x_emb"][sid],
+            "x_feat": tables["x_feat"][sid],
+            "domain": tables["domain"][sid],
+            "action": bufs["action"][row, col],
+            "reward": bufs["reward"][row, col],
+            "gate_label": bufs["gate_label"][row, col],
+            "w": w,
+            "gate_w": gw,
+        }
+        (_, _), grads = jax.value_and_grad(
+            _weighted_loss, has_aux=True)(params, cfg, batch)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(grads, opt, params, lr=lr,
+                                   weight_decay=1e-4)
+        return (params, opt), None
+
+    (params, opt), _ = jax.lax.scan(
+        step, (params, opt), jax.random.split(key, num_steps))
+    return params, opt
+
+
+def _slice_weights(T: int, t, delay: int, fcfg: ForgettingConfig):
+    """(T,) per-slice A^-1 rebuild weights: delayed visibility x
+    discounted/sliding-window forgetting (DESIGN.md §9.2). Only built
+    when delay > 0 or forgetting is active — the vanilla path passes
+    ``row_w=None`` and keeps the PR-2 rebuild bit-exact."""
+    s = jnp.arange(T, dtype=jnp.int32)
+    t_vis = t - delay
+    w = (s <= t_vis).astype(jnp.float32)
+    if fcfg.gamma < 1.0:
+        age = jnp.maximum(t_vis - s, 0).astype(jnp.float32)
+        w = w * jnp.float32(fcfg.gamma) ** age
+    if fcfg.window > 0:
+        w = w * (s > t_vis - fcfg.window).astype(jnp.float32)
+    return w
+
+
+def _rebuild_impl(params, tables, env_idx, action_buf, w_buf,
+                  cfg: UN.UtilityNetConfig, ridge_lambda0, row_w=None):
+    """Recompute g for every buffered pair with the fresh net; one masked
+    full-capacity pass (unwritten/padded rows have w=0 and vanish from
+    A = lambda0 I + sum w_i g_i g_i^T), then one Cholesky solve.
+    ``row_w`` (T,) optionally reweights whole slices — the forgetting /
+    delayed-visibility hook (:func:`_slice_weights`)."""
+    if row_w is not None:
+        w_buf = w_buf * row_w[:, None]
+    sid = env_idx.reshape(-1)
+    a = action_buf.reshape(-1)
+    w = w_buf.reshape(-1)
+    _, h, _ = UN.utilitynet_apply(
+        params, tables["x_emb"][sid], tables["x_feat"][sid],
+        tables["domain"][sid], a)
+    return NU.rebuild_ainv(NU.augment(h), ridge_lambda0, weights=w)
+
+
+def neural_init_state(key, cfg: UN.UtilityNetConfig, T: int, S: int,
+                      ridge_lambda0, with_ainv: bool = True
+                      ) -> Tuple[Dict[str, Any], jnp.ndarray]:
+    """Shared neural-policy state init. One key split feeds BOTH the
+    network init and the run stream — split[0] -> init, split[1] ->
+    exploration/training draws (the PR-1 runner fed PRNGKey(seed) to
+    both, correlating warm-slice exploration with the weight init)."""
+    k_init, key = jax.random.split(key)
+    params = UN.init_utilitynet(k_init, cfg)
+    state = {
+        "params": params,
+        "opt": adamw_init(params),
+        "bufs": {
+            "action": jnp.zeros((T, S), jnp.int32),
+            "reward": jnp.zeros((T, S), jnp.float32),
+            "gate_label": jnp.zeros((T, S), jnp.float32),
+            "w": jnp.zeros((T, S), jnp.float32),
+            "gate_w": jnp.zeros((T, S), jnp.float32),
+        },
+    }
+    if with_ainv:
+        state["ainv"] = NU.init_ainv(cfg.ucb_feature_dim, ridge_lambda0)
+    return state, key
+
+
+def _neural_init(cfg: UN.UtilityNetConfig, with_ainv: bool):
+    def init(key, ctx):
+        T, S = ctx.env_idx.shape
+        return neural_init_state(key, cfg, T, S, ctx.hyp.ridge_lambda0,
+                                 with_ainv)
+    return init
+
+
+def _neural_update(cfg: UN.UtilityNetConfig, with_ainv: bool):
+    """Feedback write + A^-1 maintenance shared by the neural zoo: the
+    slice's outcomes land in the (T, S) buffers, then the online rank-k
+    Woodbury update applies — the current slice when feedback is
+    immediate, the newly-VISIBLE slice (t - delay, features recomputed
+    with current params) under a delayed-feedback scenario."""
+
+    def update(state, batch, a, r, ctx, aux):
+        g, mu_safe, gate_scale = aux
+        t, mask = ctx.t, ctx.mask
+        gate_label = (r < mu_safe - ctx.hyp.gate_margin).astype(jnp.float32)
+        bufs = state["bufs"]
+        bufs = {
+            "action": bufs["action"].at[t].set(a),
+            "reward": bufs["reward"].at[t].set(r),
+            "gate_label": bufs["gate_label"].at[t].set(gate_label),
+            "w": bufs["w"].at[t].set(mask),
+            "gate_w": bufs["gate_w"].at[t].set(mask * gate_scale),
+        }
+        state = dict(state, bufs=bufs)
+        if not with_ainv:
+            return state
+        if ctx.delay == 0:
+            # padded rows are zeroed -> contribute nothing to the update
+            ainv = NU.woodbury_update(state["ainv"], g * mask[:, None])
+        else:
+            t_vis = t - ctx.delay
+            tv = jnp.maximum(t_vis, 0)
+            vid = ctx.env_idx[tv]
+            _, h, _ = UN.utilitynet_apply(
+                state["params"], ctx.tables["x_emb"][vid],
+                ctx.tables["x_feat"][vid], ctx.tables["domain"][vid],
+                bufs["action"][tv])
+            vw = bufs["w"][tv] * (t_vis >= 0).astype(jnp.float32)
+            ainv = NU.woodbury_update(state["ainv"],
+                                      NU.augment(h) * vw[:, None])
+        return dict(state, ainv=ainv)
+
+    return update
+
+
+def _neural_train(cfg: UN.UtilityNetConfig):
+    """Chunked replay SGD (shared UtilityNet train path). Key discipline:
+    one split per chunk from the runner-carried stream — identical to
+    the pre-unification scan and the host-stepped parity reference."""
+
+    def train(state, key, ctx):
+        t_vis = ctx.t - ctx.delay
+        count = ctx.cum0[jnp.clip(ctx.t + 1 - ctx.delay, 0,
+                                  ctx.cum0.shape[0] - 1)]
+        bufs = state["bufs"]
+
+        def chunk(carry, _):
+            params, opt, key = carry
+            key, kc = jax.random.split(key)
+            params, opt = _train_chunk(
+                params, opt, ctx.tables, ctx.env_idx, bufs, kc, ctx.cum0,
+                count, ctx.hyp.lr, cfg, TRAIN_CHUNK, ctx.batch_size,
+                t_vis, ctx.fcfg, ctx.delay > 0)
+            return (params, opt, key), None
+
+        (params, opt, key), _ = jax.lax.scan(
+            chunk, (state["params"], state["opt"], key), None,
+            length=ctx.train_chunks)
+        return dict(state, params=params, opt=opt), key
+
+    return train
+
+
+def _neural_rebuild(cfg: UN.UtilityNetConfig):
+    def rebuild(state, ctx):
+        row_w = None
+        if ctx.delay > 0 or not ctx.fcfg.is_vanilla:
+            row_w = _slice_weights(ctx.env_idx.shape[0], ctx.t, ctx.delay,
+                                   ctx.fcfg)
+        ainv = _rebuild_impl(state["params"], ctx.tables, ctx.env_idx,
+                             state["bufs"]["action"], state["bufs"]["w"],
+                             cfg, ctx.hyp.ridge_lambda0, row_w)
+        return dict(state, ainv=ainv)
+    return rebuild
+
+
+def _neural_prepare(tables, hyp):
+    return _apply_cost_lambda(tables, hyp.cost_lambda)
+
+
+def _avail_neg(avail):
+    return 0.0 if avail is None else jnp.where(avail > 0, 0.0, -jnp.inf)
+
+
+# ------------------------------------------------------------ neural zoo --
+@functools.lru_cache(maxsize=None)
+def neuralucb_policy(cfg: UN.UtilityNetConfig,
+                     backend: str = "jnp") -> BanditPolicy:
+    """The paper's policy (§3.3 + Algorithm 1) as a registered
+    BanditPolicy — the richest member of the zoo: gated UCB decide,
+    buffer + Woodbury update, chunked replay train, Cholesky rebuild."""
+
+    def decide(state, key, batch, ctx):
+        hyp = ctx.hyp
+        return jax.lax.cond(
+            ctx.t == 0,
+            lambda: _split_aux(_decide_warm(state["params"], batch, key,
+                                            cfg, ctx.avail)),
+            lambda: _split_aux(_decide_ucb(state["params"], state["ainv"],
+                                           batch, hyp.beta, hyp.tau_g,
+                                           cfg, backend, ctx.avail)))
+
+    return BanditPolicy(
+        "neuralucb", _neural_init(cfg, True), decide,
+        _neural_update(cfg, True), _neural_train(cfg), _neural_rebuild(cfg),
+        _neural_prepare, availability_aware=True)
+
+
+def _split_aux(dec):
+    a, g, mu_safe, gs = dec
+    return a, (g, mu_safe, gs)
+
+
+@functools.lru_cache(maxsize=None)
+def neural_ts_policy(cfg: UN.UtilityNetConfig,
+                     backend: str = "jnp") -> BanditPolicy:
+    """NeuralTS: Thompson sampling by posterior perturbation — score
+    mu + nu * sigma * z with z ~ N(0, 1) per (sample, arm) and sigma the
+    same sqrt(g^T A^-1 g) bonus NeuralUCB uses (the Pallas ``ucb_score``
+    kernel with mu=0, beta=1 on TPU). nu = 0 reproduces net-greedy.
+    Shares the UtilityNet train path and A^-1 maintenance verbatim, so a
+    NeuralUCB-vs-NeuralTS comparison isolates the exploration rule."""
+
+    def decide(state, key, batch, ctx):
+        hyp = ctx.hyp
+
+        def explore():
+            mu, h, _ = UN.utilitynet_all_actions(
+                state["params"], cfg, batch["x_emb"], batch["x_feat"],
+                batch["domain"])
+            g_all = NU.augment(h)
+            if backend == "pallas":
+                interpret = jax.default_backend() != "tpu"
+                sigma = ucb_score(g_all, state["ainv"],
+                                  jnp.zeros_like(mu), 1.0,
+                                  interpret=interpret)
+            else:
+                sigma = NU.ucb_bonus(state["ainv"], g_all)
+            z = jax.random.normal(key, mu.shape)
+            neg = _avail_neg(ctx.avail)
+            a = jnp.argmax(mu + hyp.explore * sigma * z + neg,
+                           axis=-1).astype(jnp.int32)
+            a_safe = jnp.argmax(mu + neg, axis=-1)
+            g = jnp.take_along_axis(
+                g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+            mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
+            return a, (g, mu_safe, jnp.float32(1.0))
+
+        return jax.lax.cond(
+            ctx.t == 0,
+            lambda: _split_aux(_decide_warm(state["params"], batch, key,
+                                            cfg, ctx.avail)),
+            explore)
+
+    return BanditPolicy(
+        "neural-ts", _neural_init(cfg, True), decide,
+        _neural_update(cfg, True), _neural_train(cfg), _neural_rebuild(cfg),
+        _neural_prepare, availability_aware=True)
+
+
+def _mean_greedy_decide(state, key, batch, ctx, cfg, pick):
+    """Shared post-warm scaffold for the mean-based neural policies:
+    compute mu over all arms, let ``pick(mu, neg, key, B)`` choose, and
+    return the chosen features + safe-mean reference for the gate label."""
+    mu, h, _ = UN.utilitynet_all_actions(
+        state["params"], cfg, batch["x_emb"], batch["x_feat"],
+        batch["domain"])
+    g_all = NU.augment(h)
+    neg = _avail_neg(ctx.avail)
+    B = batch["x_emb"].shape[0]
+    a = pick(mu, neg, key, B).astype(jnp.int32)
+    a_safe = jnp.argmax(mu + neg, axis=-1)
+    g = jnp.take_along_axis(
+        g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
+    return a, (g, mu_safe, jnp.float32(1.0))
+
+
+@functools.lru_cache(maxsize=None)
+def eps_greedy_policy(cfg: UN.UtilityNetConfig) -> BanditPolicy:
+    """Neural ε-greedy: argmax of the UtilityNet mean with probability
+    1-ε, a uniform (availability-masked) arm otherwise. ε = 0 reproduces
+    net-greedy. No A^-1 — the cheapest neural explorer (no per-slice
+    Cholesky rebuild), sharing the UtilityNet train path verbatim."""
+
+    def decide(state, key, batch, ctx):
+        def pick(mu, neg, key, B):
+            k_r, k_b = jax.random.split(key)
+            a_rand = _masked_uniform(k_r, B, cfg.num_actions, ctx.avail)
+            flip = jax.random.uniform(k_b, (B,)) < ctx.hyp.explore
+            return jnp.where(flip, a_rand, jnp.argmax(mu + neg, axis=-1))
+
+        return jax.lax.cond(
+            ctx.t == 0,
+            lambda: _split_aux(_decide_warm(state["params"], batch, key,
+                                            cfg, ctx.avail)),
+            lambda: _mean_greedy_decide(state, key, batch, ctx, cfg, pick))
+
+    return BanditPolicy(
+        "eps-greedy", _neural_init(cfg, False), decide,
+        _neural_update(cfg, False), _neural_train(cfg),
+        prepare=_neural_prepare, availability_aware=True)
+
+
+@functools.lru_cache(maxsize=None)
+def boltzmann_policy(cfg: UN.UtilityNetConfig) -> BanditPolicy:
+    """Neural Boltzmann / softmax-temperature exploration: sample arm a
+    with probability softmax(mu / temperature). Temperature -> 0
+    approaches net-greedy. No A^-1; shares the UtilityNet train path."""
+
+    def decide(state, key, batch, ctx):
+        def pick(mu, neg, key, B):
+            logits = mu / jnp.maximum(ctx.hyp.explore, 1e-6) + neg
+            return jax.random.categorical(key, logits, axis=-1)
+
+        return jax.lax.cond(
+            ctx.t == 0,
+            lambda: _split_aux(_decide_warm(state["params"], batch, key,
+                                            cfg, ctx.avail)),
+            lambda: _mean_greedy_decide(state, key, batch, ctx, cfg, pick))
+
+    return BanditPolicy(
+        "boltzmann", _neural_init(cfg, False), decide,
+        _neural_update(cfg, False), _neural_train(cfg),
+        prepare=_neural_prepare, availability_aware=True)
+
+
+# --------------------------------------------------------------- registry --
+POLICIES: Dict[str, Callable] = {}
+
+
+def register_policy(name: str):
+    """Register ``builder(env, cfg, **kw) -> (BanditPolicy, hypers)``
+    under ``name`` (see :func:`make_policy`)."""
+    def deco(fn):
+        POLICIES[name] = fn
+        return fn
+    return deco
+
+
+def _f(v) -> jnp.ndarray:
+    return jnp.float32(v)
+
+
+def make_policy(name: str, env=None, cfg: Optional[UN.UtilityNetConfig]
+                = None, **kw) -> Tuple[BanditPolicy, Any]:
+    """Build a registered policy plus its default scalar hypers pytree.
+
+    ``env`` (a DeviceReplayEnv) supplies arm statistics for the fixed-arm
+    baselines; ``cfg`` is required by the neural policies. Keyword
+    overrides reach the builder (e.g. ``explore=0.2``, ``beta=0.5``,
+    ``ucb_backend="pallas"``). The hypers pytree is what
+    ``run_policy_sweep`` broadcasts over (G,) grid leaves."""
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; registered: "
+                       f"{sorted(POLICIES)}")
+    return POLICIES[name](env, cfg, **kw)
+
+
+# Builders accept the cross-cutting ``ucb_backend`` even when they don't
+# score with A^-1 (so one override dict can serve a whole zoo), but no
+# blanket **kw: a misspelled hyper override must raise, not silently run
+# with defaults.
+@register_policy("random")
+def _b_random(env, cfg, ucb_backend: str = "jnp"):
+    return as_bandit_policy(random_policy(env.K)), ()
+
+
+@register_policy("min_cost")
+def _b_min_cost(env, cfg, ucb_backend: str = "jnp"):
+    return as_bandit_policy(
+        fixed_policy(env.min_cost_action(), "min-cost")), ()
+
+
+@register_policy("max_quality")
+def _b_max_quality(env, cfg, ucb_backend: str = "jnp"):
+    return as_bandit_policy(
+        fixed_policy(env.max_quality_action(), "max-quality")), ()
+
+
+@register_policy("greedy")
+def _b_greedy(env, cfg, ucb_backend: str = "jnp"):
+    return as_bandit_policy(greedy_policy(env.K)), ()
+
+
+@register_policy("dyn_min_cost")
+def _b_dyn_min_cost(env, cfg, ucb_backend: str = "jnp"):
+    return dyn_min_cost_policy(), ()
+
+
+@register_policy("linucb")
+def _b_linucb(env, cfg, alpha: float = 1.0, ridge: float = 1.0,
+              ucb_backend: str = "jnp"):
+    return linucb_policy(), LinUCBHypers(alpha=_f(alpha), ridge=_f(ridge))
+
+
+def _neural_hypers(explore, gate_margin=0.05, lr=1e-3, ridge_lambda0=1.0,
+                   cost_lambda=None) -> NeuralPolicyHypers:
+    return NeuralPolicyHypers(
+        explore=_f(explore), gate_margin=_f(gate_margin), lr=_f(lr),
+        ridge_lambda0=_f(ridge_lambda0),
+        cost_lambda=_f(-1.0 if cost_lambda is None else cost_lambda))
+
+
+@register_policy("neuralucb")
+def _b_neuralucb(env, cfg, beta: float = 1.0, tau_g: float = 0.5,
+                 gate_margin: float = 0.05, lr: float = 1e-3,
+                 ridge_lambda0: float = 1.0, cost_lambda=None,
+                 ucb_backend: str = "jnp"):
+    hyp = NeuralUCBHypers(
+        beta=_f(beta), tau_g=_f(tau_g), gate_margin=_f(gate_margin),
+        lr=_f(lr), ridge_lambda0=_f(ridge_lambda0),
+        cost_lambda=_f(-1.0 if cost_lambda is None else cost_lambda))
+    return neuralucb_policy(cfg, ucb_backend), hyp
+
+
+@register_policy("neural_ts")
+def _b_neural_ts(env, cfg, explore: float = 1.0,
+                 ucb_backend: str = "jnp", **kw):
+    return neural_ts_policy(cfg, ucb_backend), _neural_hypers(explore, **kw)
+
+
+@register_policy("eps_greedy")
+def _b_eps_greedy(env, cfg, explore: float = 0.1,
+                  ucb_backend: str = "jnp", **kw):
+    return eps_greedy_policy(cfg), _neural_hypers(explore, **kw)
+
+
+@register_policy("boltzmann")
+def _b_boltzmann(env, cfg, explore: float = 0.05,
+                 ucb_backend: str = "jnp", **kw):
+    return boltzmann_policy(cfg), _neural_hypers(explore, **kw)

@@ -173,3 +173,24 @@ def test_serving_pool_matches_protocol_replay():
         np.testing.assert_allclose(
             np.mean([r["cost"] for r in recs]), host["avg_cost"][t],
             rtol=1e-5, err_msg=f"slice {t} avg cost")
+
+
+def test_pool_default_c_max_uses_actual_max_seq():
+    """Regression (ISSUE satellite): the default c_max normalized by a
+    fixed 4096-token horizon while the engines cap sequences at
+    max_seq — every realizable cost then normalized to < max_seq/4096
+    of the range, compressing rewards toward quality-only and erasing
+    cost discrimination between arms. The default must derive from the
+    pool's actual max_seq (explicit c_max still wins)."""
+    import types
+    engines = [types.SimpleNamespace(max_seq=256),
+               types.SimpleNamespace(max_seq=64)]
+    cpt = [1e-4, 1e-6]
+    pool = RoutedServingPool(object(), engines, cpt)
+    assert pool.c_max == pytest.approx(1e-4 * 256)
+    explicit = RoutedServingPool(object(), engines, cpt, c_max=0.05)
+    assert explicit.c_max == 0.05
+    # realizable cost at the cap now reaches the top of the normalized
+    # range instead of 256/4096 of it
+    assert 1e-4 * max(e.max_seq for e in engines) / pool.c_max == \
+        pytest.approx(1.0)

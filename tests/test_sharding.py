@@ -164,7 +164,15 @@ assert len(odd.sharding.device_set) == 1       # falls back, never rejects
 henv = RouterBenchSim(seed=0, n_samples=600, n_slices=3)
 denv = DeviceReplayEnv.from_host(henv)
 out = run_baseline_sweep(denv, random_policy(denv.K), seeds=range(4))
-assert out["avg_reward"].shape == (4, 3)
+assert out["avg_reward"].shape == (1, 4, 3)     # annotated (G, seeds, T)
+# the policy AXIS shares the same lane sharding: a 2-policy zoo sweep
+# executes as one dispatch with each policy's 4 lanes split 2-ways
+from repro.sim import make_policy, run_policy_sweep
+zoo = {n: make_policy(n, denv, None) for n in ("greedy", "dyn_min_cost")}
+sw = run_policy_sweep(denv, zoo, seeds=range(4))
+assert set(sw) == {"greedy", "dyn_min_cost"}
+for d in sw.values():
+    assert d["avg_reward"].shape == (1, 4, 3)
 print("SWEEP_SUBPROC_OK")
 """
 

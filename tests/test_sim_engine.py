@@ -85,13 +85,20 @@ def test_random_policy_matches_in_distribution(envs):
 
 
 def test_multi_seed_sweep_shapes_and_variation(envs):
+    """Baseline sweeps emit the unified grid-annotated schema: metric
+    leaves (G=1, n_seeds, T, ...) plus seed annotations, so any policy's
+    sweep cell feeds summarize via sweep_point_results."""
     _, denv = envs
     out = run_baseline_sweep(denv, random_policy(denv.K), seeds=range(5))
-    assert out["avg_reward"].shape == (5, denv.n_slices)
-    assert out["action_hist"].shape == (5, denv.n_slices, denv.K)
+    assert out["avg_reward"].shape == (1, 5, denv.n_slices)
+    assert out["action_hist"].shape == (1, 5, denv.n_slices, denv.K)
+    assert out["seeds"].tolist() == [0, 1, 2, 3, 4]
     # distinct seeds -> distinct draws
     assert len({round(float(v), 6)
-                for v in out["avg_reward"].mean(axis=1)}) > 1
+                for v in out["avg_reward"][0].mean(axis=1)}) > 1
+    # a sweep cell is summarize-compatible
+    summ = summarize({"p": sweep_point_results(out, 0, 2)})
+    assert np.isfinite(summ["p"]["avg_reward"])
 
 
 def test_device_neuralucb_learns_and_is_monotone(envs):

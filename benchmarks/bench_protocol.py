@@ -29,6 +29,15 @@ Five comparisons, recorded to ``BENCH_protocol.json`` at the repo root
       (DESIGN.md §10): a 5-policy × seed sweep as ONE sharded dispatch
       vs per-policy sweeps and sequential per-seed runs, with
       per-policy decisions/s.
+  experiment_compile       — the declarative ExperimentSpec layer's
+      overhead (DESIGN.md §11): spec→plan compile wall time and the
+      planned device-dispatch count vs the minimal hand-wired count
+      (must be 0 extra dispatches) for the driver presets.
+
+The sweep-shaped sections (neuralucb_sweep, policy_zoo_sweep) are
+expressed through the same ExperimentSpec presets the driver runs
+(``bench_nucb_sweep`` / ``bench_zoo_sweep``), so the bench measures the
+exact code path a ``--preset`` invocation takes.
 
   python -m benchmarks.bench_protocol [--n-samples N] [--n-slices T]
       [--seeds S] [--nucb-samples N] [--nucb-slices T] [--nucb-seeds S]
@@ -60,6 +69,12 @@ from repro.core.policy import NeuralUCBRouter
 from repro.core.protocol import run_protocol
 from repro.core.utilitynet import UtilityNetConfig
 from repro.data.routerbench import RouterBenchSim
+from repro.experiments import (
+    compile_spec,
+    make_preset,
+    run_plan,
+    spec_hash,
+)
 from repro.sim import (
     DeviceNeuralUCB,
     DeviceReplayEnv,
@@ -140,10 +155,17 @@ def bench_neuralucb_runs(n_samples: int = 1200, n_slices: int = 32,
                                     train_steps=train_steps,
                                     batch_size=batch_size)
 
+    # the sweep leg IS the driver's preset path: spec -> plan -> run
+    sweep_plan = compile_spec(
+        make_preset("bench_nucb_sweep", {
+            "data.n_samples": n_samples, "data.n_slices": n_slices,
+            "seeds": list(range(n_seeds)),
+            "train.train_steps": train_steps,
+            "train.batch_size": batch_size}),
+        env=denv, host_env=henv)
+
     def sweep_run():
-        return run_neuralucb_sweep(denv, cfg, seeds=range(n_seeds),
-                                   train_steps=train_steps,
-                                   batch_size=batch_size)
+        return run_plan(sweep_plan)
 
     stepped_run(0)                      # compile all three paths
     scan_run()
@@ -241,8 +263,18 @@ def bench_policy_zoo(n_samples: int = 1200, n_slices: int = 8,
                 for n in names}
     kw = dict(train_steps=train_steps, batch_size=batch_size)
 
+    # the one-dispatch zoo leg IS the driver's preset path
+    zoo_plan = compile_spec(
+        make_preset("bench_zoo_sweep", {
+            "data.n_samples": n_samples, "data.n_slices": n_slices,
+            "seeds": list(range(n_seeds)),
+            "train.train_steps": train_steps,
+            "train.batch_size": batch_size}),
+        env=denv, host_env=henv)
+    assert zoo_plan.n_dispatches == 1
+
     def zoo():
-        return run_policy_sweep(denv, policies, seeds=range(n_seeds), **kw)
+        return run_plan(zoo_plan)
 
     zoo()                               # compile the one-dispatch program
     zoo_s = _median_wall(zoo)
@@ -284,6 +316,44 @@ def bench_policy_zoo(n_samples: int = 1200, n_slices: int = 8,
         "speedup_vs_sequential": sum_seq / zoo_s,
         "per_policy": per_policy,
     }}
+
+
+def bench_experiment_compile(n_samples: int = 1500,
+                             n_slices: int = 3) -> Dict:
+    """The ExperimentSpec layer's cost (DESIGN.md §11): per driver
+    preset, the spec→plan compile wall time (registry resolution, axis
+    validation, dispatch grouping — the replay env is injected so data
+    generation is excluded) and the planned device-dispatch count
+    pinned against the MINIMAL hand-wired count (one
+    ``run_policy_sweep`` per (scenario × forgetting-variant) group).
+    ``extra_dispatches`` must be 0: expressing a study as a spec may
+    cost microseconds of host time but never an extra compiled
+    program."""
+    henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
+    denv = DeviceReplayEnv.from_host(henv)
+    # LITERAL hand-derived run_policy_sweep call counts per preset —
+    # independent of the compiler's grouping code, so a grouping
+    # regression shows up as extra_dispatches != 0 here:
+    #   fig2_beta_sweep: 1 scenario (stationary) x 1 variant      = 1
+    #   scenario_suite:  2 scenarios x (vanilla + forget) variants = 4
+    #   ci_smoke:        3 scenarios x (vanilla + forget) variants = 6
+    hand_wired_calls = {"fig2_beta_sweep": 1, "scenario_suite": 4,
+                        "ci_smoke": 6}
+    out: Dict[str, Dict] = {}
+    for name, hand_wired in hand_wired_calls.items():
+        spec = make_preset(name)
+        compile_s = _median_wall(
+            lambda: compile_spec(spec, env=denv, host_env=henv), reps=5)
+        plan = compile_spec(spec, env=denv, host_env=henv)
+        out[name] = {
+            "spec_hash": spec_hash(spec),
+            "compile_s": compile_s,
+            "n_dispatches": plan.n_dispatches,
+            "hand_wired_dispatches": hand_wired,
+            "extra_dispatches": plan.n_dispatches - hand_wired,
+            "n_cells": plan.n_cells,
+        }
+    return {"experiment_compile": out}
 
 
 def _bench_subprocess(args, n_seeds: int) -> Dict:
@@ -431,6 +501,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
         nucb_batch)
     zoo_runs = bench_policy_zoo_subprocess(
         zoo_samples, zoo_slices, zoo_seeds, nucb_train_steps, nucb_batch)
+    compile_runs = bench_experiment_compile()
 
     return {
         # headline: protocol-engine throughput on the paper-style workload
@@ -467,11 +538,12 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
         **nucb_runs,
         **scen_runs,
         **zoo_runs,
+        **compile_runs,
     }
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine_v4", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v5", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -500,6 +572,10 @@ def run(refresh: bool = False, **kw):
         rows.append((f"zoo/{name}", round(p["sequential_s"], 4),
                      round(p["sweep_s"], 4),
                      f"{p['decisions_per_s']:.0f}/s"))
+    for name, c in out["experiment_compile"].items():
+        rows.append((f"spec_compile/{name}", round(c["compile_s"], 5),
+                     f"{c['n_dispatches']} disp",
+                     f"+{c['extra_dispatches']}"))
     rows.append(("sweep_device_decisions_per_s",
                  round(out["baseline_sweep"]["device_decisions_per_s"]),
                  "", ""))

@@ -1,327 +1,321 @@
-"""Paper experiment driver: the summary table (NeuralUCB vs. baselines on
-utility reward / cost / quality, RouterBench replay, 20 slices) plus the
-Figures 2-4 sweep — seeds x beta (x tau_g x cost_lambda) grids — all on
-the device-resident protocol engine.
+"""Paper experiment driver — a thin CLI over the declarative
+ExperimentSpec API (``repro.experiments``, DESIGN.md §11).
 
-  PYTHONPATH=src python scripts/run_paper_experiments.py              # table
-  PYTHONPATH=src python scripts/run_paper_experiments.py \
-      --n-samples 4000 --n-slices 4 --epochs 2                        # smoke
-  PYTHONPATH=src python scripts/run_paper_experiments.py \
-      --sweep-seeds 5 --betas 0.25 0.5 1.0 2.0                       # Fig. 2-4
-  PYTHONPATH=src python scripts/run_paper_experiments.py \
-      --n-samples 1500 --n-slices 3 --sweep-seeds 2 --betas 0.5 1.0 \
-      --train-steps 32 --sweep-only                                   # CI
-  PYTHONPATH=src python scripts/run_paper_experiments.py \
-      --scenario price_shock arm_outage --replay-rho 0.4              # §9
-  PYTHONPATH=src python scripts/run_paper_experiments.py \
-      --policies neuralucb linucb neural_ts eps_greedy \
-      --sweep-seeds 3 --scenario stationary price_shock               # §10
+Preset mode (the canonical interface — one spec, one artifact):
 
-The sweep runs as ONE device dispatch (`repro.sim.run_neuralucb_sweep`:
-the whole T-slice Algorithm-1 scan vmapped over (grid x seed) lanes and
-sharded across local devices), then each cell is summarized with the
-shared ``core.protocol.summarize`` (slice 1 excluded, paper §4.2).
-Writes summary + curves to --out (default ``paper_experiments.json``).
+  PYTHONPATH=src python scripts/run_paper_experiments.py --list-presets
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --preset paper_table1                                # Table 1
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --preset fig2_beta_sweep                             # Fig. 2-4
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --preset scenario_suite --set seeds=0,1,2            # §9
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --preset ci_smoke                                    # CI, one call
+  PYTHONPATH=src python scripts/run_paper_experiments.py \
+      --preset policy_zoo \
+      --set scenarios=stationary,price_shock,arm_outage    # §10
+
+``--set key=value`` overrides address the spec's JSON form with dotted
+paths (``data.n_samples=1500``, ``seeds=0,1``,
+``policies.neuralucb.axes.beta=0.25,0.5,1.0``); unknown paths and
+invalid values error loudly.
+
+The pre-PR-5 flags are kept and MAPPED onto the same specs (e.g.
+``--sweep-seeds 5 --betas 0.25 0.5 1.0 2.0`` builds the
+``fig2_beta_sweep`` spec), so old invocations keep working — but every
+run, flag-built or preset-built, compiles through
+``repro.experiments.compile_spec`` into the minimal set of
+single-dispatch ``run_policy_sweep`` calls and writes the
+schema-versioned artifact (``--out``, default
+``paper_experiments.json``).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
-from repro.core.protocol import summarize, summarize_sweep
-from repro.core.utilitynet import UtilityNetConfig
-from repro.data.routerbench import RouterBenchSim
-from repro.sim import (
-    DeviceNeuralUCB,
-    DeviceReplayEnv,
-    ForgettingConfig,
-    fixed_policy,
-    greedy_policy,
-    make_policy,
-    random_policy,
-    run_baseline_device,
-    run_baseline_sweep,
-    run_neuralucb_device,
-    run_neuralucb_sweep,
-    run_policy_sweep,
-    run_protocol_device,
-    sweep_point_results,
+from repro.experiments import (
+    DataSpec,
+    ExperimentResult,
+    ExperimentSpec,
+    ForgettingSpec,
+    PolicySpec,
+    TrainSpec,
+    build_env,
+    compile_spec,
+    format_cells,
+    make_preset,
+    parse_override_value,
+    preset_table,
+    run_plan,
 )
 
+# Legacy flags that SELECT work; meaningless (and silently ignored
+# before PR-5) next to --preset, so their presence there is an error.
+# They all parse with default=None (explicitly passing a flag at its
+# old default value must still be DETECTED, not silently shadowed by
+# the preset); the legacy branch fills in the pre-PR-5 defaults.
+_LEGACY_SELECTORS = ("sweep_seeds", "betas", "tau_gs", "cost_lambdas",
+                     "scenario", "policies", "sweep_only",
+                     "scenario_only", "policies_only", "gamma", "window",
+                     "replay_rho", "random_seeds", "train_steps",
+                     "epochs", "n_samples", "n_slices", "seed",
+                     "cost_lambda")
 
-def run_summary_table(henv, denv, cfg, args):
-    """Single-run NeuralUCB vs. baselines table (paper Table 1 shape)."""
-    policies = {
-        "random": random_policy(denv.K),
-        "min-cost": fixed_policy(denv.min_cost_action(), "min-cost"),
-        "max-quality-arm": fixed_policy(denv.max_quality_action(),
-                                        "max-quality"),
-        "greedy": greedy_policy(denv.K),
-    }
-    nucb = DeviceNeuralUCB(denv, cfg, seed=args.seed)
-    results = run_protocol_device(denv, policies, neuralucb=nucb,
-                                  epochs=args.epochs,
-                                  verbose=not args.quiet)
-    summ = summarize(results, skip_first=True)
-
-    # multi-seed random sweep: mean +/- std of the per-slice average
-    # reward (annotated schema: metric leaves are (G=1, n_seeds, T))
-    sweep = run_baseline_sweep(denv, random_policy(denv.K),
-                               range(args.random_seeds))
-    r = sweep["avg_reward"][0, :, 1:].mean(axis=1)
-    summ["random"]["avg_reward_seed_mean"] = float(r.mean())
-    summ["random"]["avg_reward_seed_std"] = float(r.std())
-
-    # oracle reference (full-information upper bound, not a policy)
-    oracle = float(henv.reward_table.max(axis=1).mean())
-
-    header = f"{'policy':<18}{'avg_reward':>11}{'avg_cost':>10}" \
-             f"{'avg_quality':>12}"
-    print("\n" + header)
-    print("-" * len(header))
-    order = ["neuralucb", "random", "min-cost", "max-quality-arm", "greedy"]
-    for name in order:
-        s = summ[name]
-        print(f"{name:<18}{s['avg_reward']:>11.4f}{s['avg_cost']:>10.4f}"
-              f"{s['avg_quality']:>12.4f}")
-    print(f"{'oracle (ref)':<18}{oracle:>11.4f}")
-    mq_cost = summ["max-quality-arm"]["avg_cost"]
-    frac = summ["neuralucb"]["avg_cost"] / mq_cost if mq_cost else float("nan")
-    print(f"\nneuralucb cost = {100 * frac:.1f}% of max-quality-arm "
-          f"(paper: ~33%)")
-
-    out = {
-        "summary": summ,
-        "oracle_reward": oracle,
-        "neuralucb_cost_fraction_of_max_quality": frac,
-        "per_slice": {k: {kk: vv for kk, vv in v.items()
-                          if kk != "action_hist"}
-                      for k, v in results.items()},
-        "action_hist": {k: np.asarray(v["action_hist"]).tolist()
-                        for k, v in results.items()},
-    }
-    ok = (summ["neuralucb"]["avg_reward"] > summ["random"]["avg_reward"]
-          and summ["neuralucb"]["avg_reward"]
-          > summ["max-quality-arm"]["avg_reward"] * 0.9)
-    return out, ok
+_LEGACY_DEFAULTS = {"n_samples": 36_497, "n_slices": 20, "epochs": 5,
+                    "seed": 0, "cost_lambda": 1.0, "sweep_seeds": 0,
+                    "betas": [1.0], "tau_gs": [0.5]}
 
 
-def run_figure_sweep(denv, cfg, args):
-    """Figures 2-4: seeds x (beta, tau_g, cost_lambda) grid in one
-    vmapped scan dispatch, each cell summarized with the shared
-    ``summarize`` and aggregated mean +/- std over seeds."""
-    lambdas = [None if l < 0 else l for l in args.cost_lambdas] \
-        if args.cost_lambdas else [None]
-    sweep = run_neuralucb_sweep(
-        denv, cfg, seeds=range(args.sweep_seeds), betas=args.betas,
-        tau_gs=args.tau_gs, cost_lambdas=lambdas, epochs=args.epochs,
-        train_steps=args.train_steps)
-    G, S = sweep["avg_reward"].shape[:2]
-    points = []
-    for g in range(G):
-        cells = [summarize({"p": sweep_point_results(sweep, g, s)})["p"]
-                 for s in range(S)]
-        agg = {"beta": float(sweep["beta"][g]),
-               "tau_g": float(sweep["tau_g"][g]),
-               "cost_lambda": (None if np.isnan(sweep["cost_lambda"][g])
-                               else float(sweep["cost_lambda"][g]))}
-        for k in ("avg_reward", "avg_cost", "avg_quality"):
-            vals = np.asarray([c[k] for c in cells])
-            agg[f"{k}_mean"] = float(vals.mean())
-            agg[f"{k}_std"] = float(vals.std())
-        agg["per_slice_avg_reward_mean"] = \
-            sweep["avg_reward"][g].mean(axis=0).tolist()
-        points.append(agg)
-
-    header = (f"{'beta':>6}{'tau_g':>7}{'lambda':>8}{'avg_reward':>16}"
-              f"{'avg_cost':>14}{'avg_quality':>12}")
-    print("\nNeuralUCB sweep "
-          f"({args.sweep_seeds} seeds x {G} grid points, one dispatch)")
-    print(header)
-    print("-" * len(header))
-    for p in points:
-        lam = "env" if p["cost_lambda"] is None else f"{p['cost_lambda']:.2f}"
-        print(f"{p['beta']:>6.2f}{p['tau_g']:>7.2f}{lam:>8}"
-              f"{p['avg_reward_mean']:>9.4f}±{p['avg_reward_std']:.4f}"
-              f"{p['avg_cost_mean']:>9.4f}±{p['avg_cost_std']:.4f}"
-              f"{p['avg_quality_mean']:>12.4f}")
-    ok = all(np.isfinite(p["avg_reward_mean"]) and p["avg_reward_mean"] > 0
-             for p in points)
-    return {"seeds": int(args.sweep_seeds),
-            "train_steps": int(sweep["train_steps"]),
-            "points": points}, ok
-
-
-def run_policy_comparison(denv, cfg, args):
-    """Exploration-strategy comparison (DESIGN.md §10): every requested
-    zoo policy × seeds, per scenario (stationary when none named), each
-    scenario ONE sharded device dispatch (``run_policy_sweep``'s policy
-    axis). The paper's closing question — action discrimination and
-    exploration — answered as a table."""
-    seeds = range(max(1, args.sweep_seeds))
-    policies = {name: make_policy(name, denv, cfg, ucb_backend="jnp")
-                for name in args.policies}
-    scenarios = args.scenario or [None]
+def _parse_sets(ap: argparse.ArgumentParser,
+                pairs: List[str]) -> Dict[str, object]:
     out = {}
-    ok = True
-    for scen in scenarios:
-        sw = run_policy_sweep(denv, policies, seeds=seeds, scenario=scen,
-                              train_steps=args.train_steps,
-                              epochs=args.epochs)
-        rows = {name: summarize_sweep(sw[name])[0] for name in sw}
-        label = scen or "stationary"
-        header = (f"{'policy':<14}{'avg_reward':>16}{'oracle':>9}"
-                  f"{'dyn_regret':>11}{'avg_cost':>10}")
-        print(f"\npolicy zoo ({label}, {len(list(seeds))} seeds, "
-              f"one dispatch)")
-        print(header)
-        print("-" * len(header))
-        for name, p in sorted(rows.items(),
-                              key=lambda kv: -kv[1]["avg_reward_mean"]):
-            print(f"{name:<14}{p['avg_reward_mean']:>9.4f}"
-                  f"±{p['avg_reward_std']:.4f}"
-                  f"{p['oracle_avg_reward_mean']:>9.4f}"
-                  f"{p['dynamic_regret_mean']:>11.4f}"
-                  f"{p['avg_cost_mean']:>10.4f}")
-        out[label] = rows
-        ok = ok and all(np.isfinite(p["avg_reward_mean"])
-                        for p in rows.values())
-    return out, ok
+    for pair in pairs:
+        if "=" not in pair:
+            ap.error(f"--set takes KEY=VALUE, got {pair!r}")
+        key, _, val = pair.partition("=")
+        out[key.strip()] = parse_override_value(val.strip())
+    return out
 
 
-def run_scenario_suite(denv, cfg, args):
-    """Non-stationary scenario runs (DESIGN.md §9): per scenario, the
-    scanned NeuralUCB (vanilla AND the forgetting variant) plus greedy /
-    random baselines over the identical drifting stream — each run one
-    device dispatch — summarized with dynamic-oracle regret."""
-    fcfg = ForgettingConfig(gamma=args.gamma, window=args.window,
-                            replay_rho=args.replay_rho)
-    out = {}
-    ok = True
-    for name in args.scenario:
-        kw = dict(seed=args.seed, train_steps=args.train_steps,
-                  epochs=args.epochs)
-        results = {
-            "neuralucb": run_neuralucb_device(denv, cfg, scenario=name,
-                                              **kw),
-            "neuralucb-forget": run_neuralucb_device(
-                denv, cfg, scenario=name, forgetting=fcfg, **kw),
-            "greedy": run_baseline_device(denv, greedy_policy(denv.K),
-                                          seed=args.seed, scenario=name),
-            "random": run_baseline_device(denv, random_policy(denv.K),
-                                          seed=args.seed, scenario=name),
-        }
-        summ = summarize(results, skip_first=True)
-        header = (f"{'policy':<18}{'avg_reward':>11}{'oracle':>9}"
-                  f"{'dyn_regret':>11}{'avg_cost':>10}")
-        print(f"\nscenario: {name}  (forgetting: gamma={args.gamma} "
-              f"window={args.window} rho={args.replay_rho})")
-        print(header)
-        print("-" * len(header))
-        for pol, s in summ.items():
-            print(f"{pol:<18}{s['avg_reward']:>11.4f}"
-                  f"{s['oracle_avg_reward']:>9.4f}"
-                  f"{s['dynamic_regret']:>11.4f}{s['avg_cost']:>10.4f}")
-        out[name] = {
-            "summary": summ,
-            "per_slice": {k: {kk: vv for kk, vv in v.items()
-                              if kk not in ("action_hist",)}
-                          for k, v in results.items()},
-        }
-        ok = ok and all(np.isfinite(s["avg_reward"])
-                        for s in summ.values())
-    return out, ok
+def _data_overrides(args) -> Dict[str, object]:
+    return {"data.seed": args.seed, "data.n_samples": args.n_samples,
+            "data.n_slices": args.n_slices,
+            "data.cost_lambda": args.cost_lambda}
+
+
+def _train(args, batch_size: int = 256) -> TrainSpec:
+    return TrainSpec(epochs=args.epochs, train_steps=args.train_steps,
+                     batch_size=batch_size)
+
+
+def _legacy_specs(ap: argparse.ArgumentParser,
+                  args) -> List[Tuple[str, ExperimentSpec]]:
+    """Map the pre-PR-5 flag surface onto specs — the compat layer.
+    Invalid flag combinations (the ones the old driver silently
+    ignored) error here."""
+    # --gamma/--window/--replay-rho only feed the scenario suite's
+    # forgetting variant; before PR-5 they were SILENTLY ignored
+    # without --scenario (a sweep "with forgetting" quietly ran vanilla)
+    forget_flags = [n for n, v in (("--gamma", args.gamma),
+                                   ("--window", args.window),
+                                   ("--replay-rho", args.replay_rho))
+                    if v is not None]
+    if forget_flags and not args.scenario:
+        ap.error(f"{'/'.join(forget_flags)}: these flags configure the "
+                 f"forgetting variant of the --scenario suite and have "
+                 f"no effect without it; pass --scenario NAME... or "
+                 f"drop them")
+    if args.sweep_only and args.sweep_seeds <= 0:
+        ap.error("--sweep-only requires --sweep-seeds > 0")
+    if args.scenario_only and not args.scenario:
+        ap.error("--scenario-only requires --scenario NAME...")
+    if args.policies_only and not args.policies:
+        ap.error("--policies-only requires --policies NAME...")
+    if args.random_seeds is not None:
+        print("note: --random-seeds is folded into the unified spec's "
+              "seed axis; use --set seeds=0,1,... with --preset "
+              "paper_table1 for a multi-seed table", file=sys.stderr)
+
+    data = DataSpec(seed=args.seed, n_samples=args.n_samples,
+                    n_slices=args.n_slices,
+                    cost_lambda=args.cost_lambda)
+    fg = ForgettingSpec(gamma=1.0 if args.gamma is None else args.gamma,
+                        window=0 if args.window is None else args.window,
+                        replay_rho=(0.4 if args.replay_rho is None
+                                    else args.replay_rho))
+    specs: List[Tuple[str, ExperimentSpec]] = []
+    only = args.sweep_only or args.scenario_only or args.policies_only
+    if not only:
+        specs.append(("summary", make_preset(
+            "paper_table1",
+            {**_data_overrides(args), "seeds": [args.seed],
+             "train.epochs": args.epochs,
+             "train.train_steps": args.train_steps})))
+    if args.sweep_seeds > 0 and not args.policies_only \
+            and not args.scenario_only:
+        lambdas = tuple(None if l < 0 else l
+                        for l in (args.cost_lambdas or [-1.0]))
+        specs.append(("sweep", ExperimentSpec(
+            name="fig2_beta_sweep", data=data,
+            policies=(PolicySpec("neuralucb", axes=(
+                ("beta", tuple(args.betas)),
+                ("tau_g", tuple(args.tau_gs)),
+                ("cost_lambda", lambdas))),),
+            seeds=tuple(range(args.sweep_seeds)),
+            train=_train(args))))
+    if args.scenario and not args.policies_only:
+        specs.append(("scenarios", ExperimentSpec(
+            name="scenario_suite", data=data,
+            policies=(PolicySpec("neuralucb"),
+                      PolicySpec("neuralucb", name="neuralucb-forget",
+                                 forgetting=fg),
+                      PolicySpec("greedy"), PolicySpec("random")),
+            scenarios=tuple(args.scenario),
+            seeds=(args.seed,), train=_train(args))))
+    if args.policies:
+        specs.append(("policy_zoo", ExperimentSpec(
+            name="policy_zoo", data=data,
+            policies=tuple(PolicySpec(p) for p in args.policies),
+            scenarios=(tuple(args.scenario) if args.scenario
+                       else (None,)),
+            seeds=tuple(range(max(1, args.sweep_seeds))),
+            train=_train(args))))
+    return specs
+
+
+def _print_result(section: str, result: ExperimentResult,
+                  oracle: Optional[float]) -> None:
+    spec = result.spec
+    m = result.manifest
+    print(f"\n== {section} ({spec.name}: {len(spec.seeds)} seed"
+          f"{'s' if len(spec.seeds) != 1 else ''}, "
+          f"{m['n_dispatches']} dispatch"
+          f"{'es' if m['n_dispatches'] != 1 else ''}, "
+          f"{m['wall_s']:.1f}s) ==")
+    for scen in result.scenario_names():
+        if len(result.scenario_names()) > 1:
+            print(f"\n-- scenario: {scen} --")
+        print(format_cells(result.cells_for(scen)))
+    if oracle is not None:
+        print(f"{'oracle (ref)':<18}{'':>9}{oracle:>16.4f}")
+
+
+def _table_checks(result: ExperimentResult) -> bool:
+    """The old summary-table acceptance: NeuralUCB beats random and is
+    within 10% of the max-quality arm's reward."""
+    try:
+        nucb = result.cell("neuralucb")
+        rand = result.cell("random")
+        maxq = result.cell("max_quality")
+    except KeyError:
+        return result.ok
+    return (result.ok
+            and nucb["avg_reward_mean"] > rand["avg_reward_mean"]
+            and nucb["avg_reward_mean"]
+            > maxq["avg_reward_mean"] * 0.9)
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n-samples", type=int, default=36_497)
-    ap.add_argument("--n-slices", type=int, default=20)
-    ap.add_argument("--epochs", type=int, default=5)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--random-seeds", type=int, default=5,
-                    help="seeds for the random-baseline sweep (vmap)")
-    ap.add_argument("--cost-lambda", type=float, default=1.0)
-    ap.add_argument("--sweep-seeds", type=int, default=0,
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--preset", default=None,
+                    help="registered ExperimentSpec preset "
+                         "(--list-presets shows all)")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", dest="sets",
+                    help="dotted-path spec override, e.g. "
+                         "data.n_samples=1500 or "
+                         "policies.neuralucb.axes.beta=0.5,1.0")
+    ap.add_argument("--list-presets", action="store_true")
+    # ---- legacy flags (mapped onto specs; defaults resolved late) ----
+    ap.add_argument("--n-samples", type=int, default=None)
+    ap.add_argument("--n-slices", type=int, default=None)
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--random-seeds", type=int, default=None,
+                    help="deprecated: folded into the spec seed axis")
+    ap.add_argument("--cost-lambda", type=float, default=None)
+    ap.add_argument("--sweep-seeds", type=int, default=None,
                     help="NeuralUCB sweep seeds; 0 disables the sweep")
-    ap.add_argument("--betas", type=float, nargs="+", default=[1.0],
-                    help="beta grid for the NeuralUCB sweep (Fig. 2-4)")
-    ap.add_argument("--tau-gs", type=float, nargs="+", default=[0.5])
+    ap.add_argument("--betas", type=float, nargs="+", default=None)
+    ap.add_argument("--tau-gs", type=float, nargs="+", default=None)
     ap.add_argument("--cost-lambdas", type=float, nargs="+", default=None,
                     help="cost_lambda grid; negative = env's own table")
-    ap.add_argument("--train-steps", type=int, default=None,
-                    help="fixed per-slice SGD budget for the scanned "
-                         "runner (default: derived from --epochs)")
-    ap.add_argument("--sweep-only", action="store_true",
-                    help="skip the single-run summary table (CI smoke)")
-    ap.add_argument("--scenario", nargs="+", default=None,
-                    help="non-stationary scenario names (DESIGN.md §9); "
-                         "each runs NeuralUCB (vanilla + forgetting) and "
-                         "baselines over the drifting stream")
-    ap.add_argument("--scenario-only", action="store_true",
-                    help="run only the --scenario suite (CI smoke)")
-    ap.add_argument("--policies", nargs="+", default=None,
-                    help="registered policy-zoo names (DESIGN.md §10) for "
-                         "the exploration-strategy comparison, e.g. "
-                         "neuralucb linucb neural_ts eps_greedy; runs "
-                         "(policy x seed) per scenario as one dispatch")
-    ap.add_argument("--policies-only", action="store_true",
-                    help="run only the --policies comparison (CI smoke)")
-    ap.add_argument("--gamma", type=float, default=1.0,
-                    help="A^-1 rebuild discount for the forgetting "
-                         "variant (1.0 = off)")
-    ap.add_argument("--window", type=int, default=0,
-                    help="A^-1 sliding window in slices (0 = off)")
-    ap.add_argument("--replay-rho", type=float, default=0.4,
-                    help="recency weight for replay sampling "
-                         "(1.0 = uniform)")
+    ap.add_argument("--train-steps", type=int, default=None)
+    ap.add_argument("--sweep-only", action="store_true")
+    ap.add_argument("--scenario", nargs="+", default=None)
+    ap.add_argument("--scenario-only", action="store_true")
+    ap.add_argument("--policies", nargs="+", default=None)
+    ap.add_argument("--policies-only", action="store_true")
+    ap.add_argument("--gamma", type=float, default=None,
+                    help="A^-1 rebuild discount for the scenario "
+                         "suite's forgetting variant (requires "
+                         "--scenario)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="A^-1 sliding window in slices (requires "
+                         "--scenario)")
+    ap.add_argument("--replay-rho", type=float, default=None,
+                    help="recency weight for replay sampling (requires "
+                         "--scenario; suite default 0.4)")
     ap.add_argument("--out", default="paper_experiments.json")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    henv = RouterBenchSim(seed=args.seed, n_samples=args.n_samples,
-                          n_slices=args.n_slices,
-                          cost_lambda=args.cost_lambda)
-    denv = DeviceReplayEnv.from_host(henv)
-    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+    if args.list_presets:
+        for name, desc in preset_table():
+            print(f"{name:<18} {desc}")
+        return 0
 
-    out = {"config": vars(args)}
+    if args.preset is not None:
+        # --preset takes its configuration from --set alone; a legacy
+        # flag next to it would be silently shadowed by the spec (all
+        # legacy flags parse with default=None / False, so even one
+        # passed at its old default value is detected here)
+        stray = [n for n in _LEGACY_SELECTORS
+                 if getattr(args, n) not in (None, False)]
+        if stray:
+            flags = ", ".join("--" + n.replace("_", "-") for n in stray)
+            ap.error(f"{flags} cannot be combined with --preset; use "
+                     f"--set key=value overrides instead")
+        try:
+            spec = make_preset(args.preset, _parse_sets(ap, args.sets))
+        except (KeyError, ValueError) as e:
+            ap.error(str(e))
+        sections = [(args.preset, spec)]
+    else:
+        if args.sets:
+            ap.error("--set requires --preset")
+        for name, default in _LEGACY_DEFAULTS.items():
+            if getattr(args, name) is None:
+                setattr(args, name, default)
+        sections = _legacy_specs(ap, args)
+        if not sections:
+            ap.error("nothing to run")
+
+    out: Dict[str, object] = {}
     ok = True
-    if not args.sweep_only and not args.scenario_only \
-            and not args.policies_only:
-        table, ok_t = run_summary_table(henv, denv, cfg, args)
-        out.update(table)
-        ok = ok and ok_t
-    if args.sweep_seeds > 0 and not args.policies_only:
-        sweep_out, ok_s = run_figure_sweep(denv, cfg, args)
-        out["sweep"] = sweep_out
-        ok = ok and ok_s
-    elif args.sweep_only:
-        print("--sweep-only given but --sweep-seeds is 0; nothing to do",
-              file=sys.stderr)
-        ok = False
-    if args.scenario and not args.policies_only:
-        scen_out, ok_n = run_scenario_suite(denv, cfg, args)
-        out["scenarios"] = scen_out
-        ok = ok and ok_n
-    elif args.scenario_only:
-        print("--scenario-only given but no --scenario names",
-              file=sys.stderr)
-        ok = False
-    if args.policies:
-        zoo_out, ok_z = run_policy_comparison(denv, cfg, args)
-        out["policy_zoo"] = zoo_out
-        ok = ok and ok_z
-    elif args.policies_only:
-        print("--policies-only given but no --policies names",
-              file=sys.stderr)
-        ok = False
+    # legacy multi-section runs share one DataSpec — build the replay
+    # env once and inject it into every section's compile
+    shared_data = shared_henv = shared_denv = None
+    for section, spec in sections:
+        if spec.data != shared_data:
+            shared_henv, shared_denv = build_env(spec.data)
+            shared_data = spec.data
+        try:
+            plan = compile_spec(spec, env=shared_denv,
+                                host_env=shared_henv)
+        except ValueError as e:
+            ap.error(str(e))
+        result = run_plan(plan, verbose=not args.quiet)
+        oracle = None
+        if plan.host_env is not None and spec.scenarios == (None,):
+            oracle = float(plan.host_env.reward_table.max(axis=1).mean())
+            result.manifest["oracle_reward"] = oracle
+        if not args.quiet:
+            _print_result(section, result, oracle)
+        if spec.name == "paper_table1":
+            ok = ok and _table_checks(result)
+            try:
+                frac = (result.cell("neuralucb")["avg_cost_mean"]
+                        / result.cell("max_quality")["avg_cost_mean"])
+                result.manifest[
+                    "neuralucb_cost_fraction_of_max_quality"] = frac
+                if not args.quiet:
+                    print(f"\nneuralucb cost = {100 * frac:.1f}% of "
+                          f"max-quality-arm (paper: ~33%)")
+            except (KeyError, ZeroDivisionError):
+                pass
+        else:
+            ok = ok and result.ok
+        out[section] = result.to_json()
 
+    doc = next(iter(out.values())) if len(out) == 1 else out
     with open(args.out, "w") as f:
-        json.dump(out, f, indent=1, default=float)
+        json.dump(doc, f, indent=1, default=float)
     print(f"\nwrote {args.out}")
     return 0 if ok else 1
 

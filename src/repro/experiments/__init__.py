@@ -1,0 +1,78 @@
+"""Declarative ExperimentSpec API (DESIGN.md §11): one typed spec →
+one compile → one run → one schema-versioned artifact, shared by the
+paper driver, the protocol benchmarks, CI, and the tests.
+
+    spec = make_preset("fig2_beta_sweep")        # or ExperimentSpec(...)
+    plan = compile_spec(spec)                    # registry resolution +
+                                                 # minimal dispatch grouping
+    result = run_plan(plan)                      # ONE run_policy_sweep
+                                                 # dispatch per plan call
+    result.save("fig2.json")                     # manifest + cells
+"""
+from repro.experiments.compiler import (
+    ExperimentPlan,
+    SweepCall,
+    build_env,
+    compile_spec,
+)
+from repro.experiments.presets import (
+    PRESETS,
+    make_preset,
+    preset_table,
+    register_preset,
+)
+from repro.experiments.runner import (
+    RESULT_SCHEMA_VERSION,
+    ExperimentResult,
+    format_cells,
+    run_plan,
+    run_spec,
+)
+from repro.experiments.spec import (
+    SPEC_SCHEMA_VERSION,
+    DataSpec,
+    ExperimentSpec,
+    ForgettingSpec,
+    PolicySpec,
+    SummarizeSpec,
+    TrainSpec,
+    apply_overrides,
+    parse_override_value,
+    spec_from_json,
+    spec_hash,
+    spec_to_json,
+)
+
+# the ISSUE's verb names, kept as aliases of the explicit ones
+compile = compile_spec  # noqa: A001  (deliberate: experiments.compile(spec))
+run = run_plan
+
+__all__ = [
+    "SPEC_SCHEMA_VERSION",
+    "RESULT_SCHEMA_VERSION",
+    "DataSpec",
+    "ExperimentSpec",
+    "ExperimentPlan",
+    "ExperimentResult",
+    "ForgettingSpec",
+    "PolicySpec",
+    "SummarizeSpec",
+    "SweepCall",
+    "TrainSpec",
+    "PRESETS",
+    "apply_overrides",
+    "build_env",
+    "compile",
+    "compile_spec",
+    "format_cells",
+    "make_preset",
+    "parse_override_value",
+    "preset_table",
+    "register_preset",
+    "run",
+    "run_plan",
+    "run_spec",
+    "spec_from_json",
+    "spec_hash",
+    "spec_to_json",
+]

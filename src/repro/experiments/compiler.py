@@ -1,0 +1,178 @@
+"""``compile(spec) -> ExperimentPlan`` (DESIGN.md §11.2).
+
+Compilation resolves the spec against the live registries
+(``repro.sim.POLICIES`` / ``repro.sim.SCENARIOS``), validates every
+hyper-grid axis against the policy's hypers pytree, builds the (G,)
+grid arrays in cartesian-product order, and groups the whole study into
+the MINIMAL set of single-dispatch ``run_policy_sweep`` calls: one call
+per (scenario × forgetting-variant) group, every policy of the group
+riding the same jitted program (``repro.sim.engine._policy_zoo_scan``).
+``plan.n_dispatches`` is therefore an exact device-dispatch count —
+what the ``experiment_compile`` bench section pins against the
+hand-wired equivalent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.utilitynet import UtilityNetConfig
+from repro.data.routerbench import RouterBenchSim
+from repro.experiments.spec import ExperimentSpec, ForgettingSpec
+from repro.sim import (
+    POLICIES,
+    SCENARIOS,
+    BanditPolicy,
+    DeviceReplayEnv,
+    ForgettingConfig,
+    make_policy,
+    neuralucb_train_schedule,
+)
+from repro.sim.policies import _no_train
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCall:
+    """One device dispatch: every policy of one (scenario, forgetting)
+    group. ``grids[label]`` holds the host-side per-grid-point axis
+    values (``None`` preserved for the cost_lambda sentinel) in the same
+    order as the sweep's G axis."""
+
+    scenario: Optional[str]
+    forgetting: ForgettingConfig
+    policies: Dict[str, Tuple[BanditPolicy, Any]]
+    grids: Dict[str, List[Dict[str, Any]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentPlan:
+    """A compiled, ready-to-run study. ``env`` is the device-resident
+    replay environment every call shares; ``train_steps`` is the
+    RESOLVED fixed per-slice budget (spec value, or derived from
+    ``train.epochs`` when the spec leaves it None and any policy
+    trains)."""
+
+    spec: ExperimentSpec
+    env: DeviceReplayEnv
+    host_env: Optional[RouterBenchSim]
+    cfg: UtilityNetConfig
+    calls: Tuple[SweepCall, ...]
+    train_steps: Optional[int]
+    compile_s: float
+
+    @property
+    def n_dispatches(self) -> int:
+        return len(self.calls)
+
+    @property
+    def n_cells(self) -> int:
+        return sum(len(pts) for c in self.calls
+                   for pts in c.grids.values())
+
+
+def build_env(data) -> Tuple[RouterBenchSim, DeviceReplayEnv]:
+    """Materialize a spec's :class:`DataSpec` as the (host, device)
+    replay environment pair. Factored out of :func:`compile_spec` so
+    callers running several specs over the same data (the driver's
+    legacy multi-section mode, the bench) can build once and inject."""
+    henv = RouterBenchSim(seed=data.seed, n_samples=data.n_samples,
+                          n_slices=data.n_slices,
+                          cost_lambda=data.cost_lambda)
+    return henv, DeviceReplayEnv.from_host(henv)
+
+
+def _axis_grid(ps_label: str, hypers: Any, axes) -> Tuple[Any, List[Dict]]:
+    """Expand a policy's hyper-grid axes into (G,)-leaved hypers plus
+    the per-point host annotation. The grid is the cartesian product in
+    axis order (``itertools.product`` — the same order the PR-2
+    ``run_neuralucb_sweep`` used for betas × tau_gs × cost_lambdas)."""
+    if not axes:
+        return hypers, [{}]
+    fields = getattr(hypers, "_fields", ())
+    if not fields:
+        raise ValueError(f"policy {ps_label!r} has no hyper fields; "
+                         f"axes {[f for f, _ in axes]} cannot apply")
+    for field, _ in axes:
+        if field not in fields:
+            raise ValueError(f"policy {ps_label!r}: unknown hyper axis "
+                             f"{field!r} (fields: {list(fields)})")
+    names = [f for f, _ in axes]
+    points = [dict(zip(names, combo))
+              for combo in itertools.product(*(v for _, v in axes))]
+    repl = {}
+    for field in names:
+        vals = [p[field] for p in points]
+        # None -> the "env's own reward table" sentinel (engine contract)
+        vals = [-1.0 if v is None else float(v) for v in vals]
+        repl[field] = jnp.asarray(vals, jnp.float32)
+    return hypers._replace(**repl), points
+
+
+def compile_spec(spec: ExperimentSpec, *,
+                 env: Optional[DeviceReplayEnv] = None,
+                 host_env: Optional[RouterBenchSim] = None
+                 ) -> ExperimentPlan:
+    """Resolve + validate + group (module docstring). ``env`` /
+    ``host_env`` short-circuit data construction (the bench/test hook:
+    compile overhead can be measured without regenerating the replay
+    tables); when omitted they are built from ``spec.data``."""
+    t0 = time.perf_counter()
+    for s in spec.scenarios:
+        if s is not None and s not in SCENARIOS:
+            raise ValueError(f"unknown scenario {s!r}; registered: "
+                             f"{sorted(SCENARIOS)}")
+    for ps in spec.policies:
+        if ps.policy not in POLICIES:
+            raise ValueError(f"unknown policy {ps.policy!r}; "
+                             f"registered: {sorted(POLICIES)}")
+    if env is None:
+        if host_env is None:
+            host_env, env = build_env(spec.data)
+        else:
+            env = DeviceReplayEnv.from_host(host_env)
+    cfg = UtilityNetConfig(emb_dim=env.x_emb.shape[1],
+                           num_actions=env.K)
+
+    resolved = []   # (label, fspec, policy, grid_hypers, points)
+    any_train = False
+    for ps in spec.policies:
+        try:
+            pol, hyp = make_policy(ps.policy, env, cfg,
+                                   ucb_backend=spec.ucb_backend,
+                                   **dict(ps.overrides))
+        except TypeError as e:
+            # a misspelled builder override must fail loudly, with the
+            # spec entry named, not as a bare TypeError
+            raise ValueError(f"policy {ps.label!r}: bad override "
+                             f"({e})") from e
+        grid_hyp, points = _axis_grid(ps.label, hyp, ps.axes)
+        fspec = ps.forgetting if ps.forgetting is not None \
+            else spec.forgetting
+        resolved.append((ps.label, fspec, pol, grid_hyp, points))
+        any_train = any_train or pol.train is not _no_train
+
+    train_steps = spec.train.train_steps
+    if train_steps is None and any_train:
+        train_steps = neuralucb_train_schedule(env, spec.train.epochs,
+                                               spec.train.batch_size)
+
+    calls = []
+    for scenario in spec.scenarios:
+        variants: Dict[ForgettingSpec, SweepCall] = {}
+        for label, fspec, pol, grid_hyp, points in resolved:
+            call = variants.get(fspec)
+            if call is None:
+                call = SweepCall(scenario=scenario,
+                                 forgetting=fspec.to_config(),
+                                 policies={}, grids={})
+                variants[fspec] = call
+                calls.append(call)
+            call.policies[label] = (pol, grid_hyp)
+            call.grids[label] = points
+    return ExperimentPlan(spec=spec, env=env, host_env=host_env, cfg=cfg,
+                          calls=tuple(calls), train_steps=train_steps,
+                          compile_s=time.perf_counter() - t0)

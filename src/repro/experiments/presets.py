@@ -1,0 +1,157 @@
+"""Preset experiment specs (DESIGN.md §11.4).
+
+Every named workload the repo runs — the paper's Table 1, the
+Figures 2-4 β sweep, the non-stationary scenario suite, the policy-zoo
+exploration comparison, the CI smoke, and the protocol-bench sweep
+shapes — is a preset here: a function returning an
+:class:`ExperimentSpec`. The driver exposes them as
+``run_paper_experiments.py --preset NAME [--set key=value ...]``; the
+benches and tests build the SAME specs, so a preset edit propagates to
+every consumer at once.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.experiments.spec import (
+    DataSpec,
+    ExperimentSpec,
+    ForgettingSpec,
+    PolicySpec,
+    SummarizeSpec,
+    TrainSpec,
+    apply_overrides,
+)
+
+PRESETS: Dict[str, Callable[[], ExperimentSpec]] = {}
+
+
+def register_preset(name: str):
+    def deco(fn: Callable[[], ExperimentSpec]):
+        PRESETS[name] = fn
+        return fn
+    return deco
+
+
+def make_preset(name: str,
+                overrides: Optional[Dict[str, Any]] = None
+                ) -> ExperimentSpec:
+    """Build a registered preset, optionally with ``--set``-style
+    dotted-path overrides (``repro.experiments.spec.apply_overrides``).
+    """
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; registered: "
+                       f"{sorted(PRESETS)}")
+    spec = PRESETS[name]()
+    if overrides:
+        spec = apply_overrides(spec, overrides)
+    return spec
+
+
+def preset_table() -> List[Tuple[str, str]]:
+    """(name, one-line description) rows for ``--list-presets`` and the
+    README table."""
+    rows = []
+    for name in sorted(PRESETS):
+        doc = (PRESETS[name].__doc__ or "").strip().splitlines()
+        rows.append((name, doc[0] if doc else ""))
+    return rows
+
+
+_BASELINES = (PolicySpec("random"), PolicySpec("min_cost"),
+              PolicySpec("max_quality"), PolicySpec("greedy"))
+
+
+@register_preset("paper_table1")
+def _paper_table1() -> ExperimentSpec:
+    """Paper Table 1: NeuralUCB vs. the §4.1 baselines on the full
+    replay stream (reward / cost / quality summary)."""
+    return ExperimentSpec(
+        name="paper_table1",
+        policies=(PolicySpec("neuralucb"),) + _BASELINES)
+
+
+@register_preset("fig2_beta_sweep")
+def _fig2_beta_sweep() -> ExperimentSpec:
+    """Figures 2-4: the seeds × β exploration grid as ONE vmapped,
+    device-sharded scan dispatch."""
+    return ExperimentSpec(
+        name="fig2_beta_sweep",
+        policies=(PolicySpec("neuralucb",
+                             axes=(("beta", (0.25, 0.5, 1.0, 2.0)),)),),
+        seeds=(0, 1, 2, 3, 4))
+
+
+@register_preset("scenario_suite")
+def _scenario_suite() -> ExperimentSpec:
+    """Non-stationary suite (DESIGN.md §9): vanilla + forgetting
+    NeuralUCB vs. greedy/random under price shocks and outages, with
+    dynamic-oracle regret."""
+    return ExperimentSpec(
+        name="scenario_suite",
+        policies=(PolicySpec("neuralucb"),
+                  PolicySpec("neuralucb", name="neuralucb-forget",
+                             forgetting=ForgettingSpec(replay_rho=0.4)),
+                  PolicySpec("greedy"), PolicySpec("random")),
+        scenarios=("price_shock", "arm_outage"))
+
+
+@register_preset("policy_zoo")
+def _policy_zoo() -> ExperimentSpec:
+    """Exploration-strategy comparison (DESIGN.md §10): the whole zoo ×
+    seeds, stationary and under a price shock, one dispatch per
+    scenario."""
+    return ExperimentSpec(
+        name="policy_zoo",
+        policies=(PolicySpec("neuralucb"), PolicySpec("linucb"),
+                  PolicySpec("neural_ts"), PolicySpec("eps_greedy"),
+                  PolicySpec("boltzmann")),
+        scenarios=(None, "price_shock"),
+        seeds=(0, 1, 2))
+
+
+@register_preset("ci_smoke")
+def _ci_smoke() -> ExperimentSpec:
+    """CI: the sweep + scenario + cross-policy smokes as one tiny spec
+    (β grid, forgetting variant, zoo members, three scenarios)."""
+    return ExperimentSpec(
+        name="ci_smoke",
+        data=DataSpec(n_samples=1500, n_slices=3),
+        policies=(PolicySpec("neuralucb",
+                             axes=(("beta", (0.5, 1.0)),)),
+                  PolicySpec("neuralucb", name="neuralucb-forget",
+                             forgetting=ForgettingSpec(replay_rho=0.4)),
+                  PolicySpec("linucb"), PolicySpec("neural_ts"),
+                  PolicySpec("eps_greedy")),
+        scenarios=(None, "price_shock", "arm_outage"),
+        seeds=(0, 1),
+        train=TrainSpec(train_steps=32, batch_size=64),
+        summarize=SummarizeSpec(curves=False))
+
+
+@register_preset("bench_nucb_sweep")
+def _bench_nucb_sweep() -> ExperimentSpec:
+    """Bench: the neuralucb_sweep section's multi-seed Algorithm-1
+    workload (engine structure at reduced stream size)."""
+    return ExperimentSpec(
+        name="bench_nucb_sweep",
+        data=DataSpec(n_samples=1200, n_slices=32),
+        policies=(PolicySpec("neuralucb"),),
+        seeds=(0, 1, 2, 3),
+        train=TrainSpec(train_steps=32, batch_size=32),
+        summarize=SummarizeSpec(curves=False))
+
+
+@register_preset("bench_zoo_sweep")
+def _bench_zoo_sweep() -> ExperimentSpec:
+    """Bench: the policy_zoo_sweep section's 5-policy × seed one-
+    dispatch workload."""
+    return ExperimentSpec(
+        name="bench_zoo_sweep",
+        data=DataSpec(n_samples=1200, n_slices=8),
+        policies=(PolicySpec("neuralucb"), PolicySpec("linucb"),
+                  PolicySpec("neural_ts"), PolicySpec("eps_greedy"),
+                  PolicySpec("boltzmann")),
+        seeds=(0, 1, 2, 3),
+        train=TrainSpec(train_steps=32, batch_size=32),
+        summarize=SummarizeSpec(curves=False))

@@ -1,0 +1,182 @@
+"""``run(plan) -> ExperimentResult`` (DESIGN.md §11.3).
+
+Executes a compiled :class:`ExperimentPlan` — one
+``repro.sim.run_policy_sweep`` dispatch per :class:`SweepCall` — and
+shapes the outputs into a schema-versioned artifact: one CELL per
+(scenario × policy × grid point) with the seed-aggregated paper metrics
+(``repro.core.protocol.summarize_sweep``), optional per-slice curves
+and per-seed values, and a MANIFEST recording the spec hash, backend /
+device topology, resolved train schedule, dispatch count, and
+compile/run wall time. The artifact is plain JSON: what the driver
+writes, what CI uploads, and what the parity tests diff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.core.protocol import summarize_sweep
+from repro.experiments.compiler import ExperimentPlan
+from repro.experiments.spec import (
+    ExperimentSpec,
+    spec_hash,
+    spec_to_json,
+)
+from repro.sim import run_policy_sweep
+
+RESULT_SCHEMA_VERSION = "experiment-result-v1"
+
+_STATIONARY = "stationary"
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Schema-versioned run artifact. ``cells`` is the flat list of
+    per-(scenario, policy, grid-point) summaries; ``manifest`` the
+    provenance block. ``ok`` is the driver's exit-status predicate:
+    every cell's headline metrics came back finite."""
+
+    spec: ExperimentSpec
+    manifest: Dict[str, Any]
+    cells: List[Dict[str, Any]]
+
+    @property
+    def ok(self) -> bool:
+        return all(np.isfinite(c["avg_reward_mean"]) for c in self.cells)
+
+    def scenario_names(self) -> List[str]:
+        seen: List[str] = []
+        for c in self.cells:
+            if c["scenario"] not in seen:
+                seen.append(c["scenario"])
+        return seen
+
+    def cells_for(self, scenario: str) -> List[Dict[str, Any]]:
+        return [c for c in self.cells if c["scenario"] == scenario]
+
+    def cell(self, policy: str, scenario: str = _STATIONARY,
+             **point) -> Dict[str, Any]:
+        """The unique cell for (policy, scenario[, axis values]) —
+        raises if the selector is ambiguous or matches nothing."""
+        hits = [c for c in self.cells
+                if c["policy"] == policy and c["scenario"] == scenario
+                and all(c["point"].get(k) == v for k, v in point.items())]
+        if len(hits) != 1:
+            raise KeyError(f"cell(policy={policy!r}, "
+                           f"scenario={scenario!r}, {point}) matched "
+                           f"{len(hits)} cells")
+        return hits[0]
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"schema": RESULT_SCHEMA_VERSION,
+                "spec": spec_to_json(self.spec),
+                "manifest": self.manifest,
+                "cells": self.cells}
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, default=float)
+
+
+def run_plan(plan: ExperimentPlan, *, verbose: bool = False
+             ) -> ExperimentResult:
+    """Execute every planned dispatch and assemble the artifact."""
+    import time
+
+    spec = plan.spec
+    summ = spec.summarize
+    cells: List[Dict[str, Any]] = []
+    t0 = time.perf_counter()
+    for call in plan.calls:
+        sweeps = run_policy_sweep(
+            plan.env, call.policies, seeds=spec.seeds,
+            scenario=call.scenario, forgetting=call.forgetting,
+            train_steps=plan.train_steps, epochs=spec.train.epochs,
+            batch_size=spec.train.batch_size)
+        scen_label = call.scenario or _STATIONARY
+        for label, sweep in sweeps.items():
+            points = summarize_sweep(sweep, skip_first=summ.skip_first)
+            for g, p in enumerate(points):
+                cell = {"scenario": scen_label, "policy": label,
+                        "point": call.grids[label][g],
+                        "train_steps": int(sweep["train_steps"]), **p}
+                if summ.curves:
+                    cell["curve_avg_reward"] = np.asarray(
+                        sweep["avg_reward"][g], np.float64
+                    ).mean(axis=0).tolist()
+                if summ.per_seed:
+                    s0 = 1 if summ.skip_first \
+                        and sweep["avg_reward"].shape[2] > 1 else 0
+                    cell["per_seed_avg_reward"] = np.asarray(
+                        sweep["avg_reward"][g][:, s0:], np.float64
+                    ).mean(axis=1).tolist()
+                cells.append(cell)
+            if verbose:
+                best = max(points, key=lambda p: p["avg_reward_mean"])
+                print(f"[{spec.name}] {scen_label}/{label}: "
+                      f"avg_reward={best['avg_reward_mean']:.4f} "
+                      f"({len(points)} grid point"
+                      f"{'s' if len(points) != 1 else ''})", flush=True)
+    wall_s = time.perf_counter() - t0
+
+    dev = jax.local_devices()
+    manifest = {
+        "schema": RESULT_SCHEMA_VERSION,
+        "spec_name": spec.name,
+        "spec_hash": spec_hash(spec),
+        "backend": jax.default_backend(),
+        "n_devices": len(dev),
+        "device_kind": dev[0].device_kind if dev else "none",
+        "jax_version": jax.__version__,
+        "train_steps": plan.train_steps,
+        "n_dispatches": plan.n_dispatches,
+        "n_cells": len(cells),
+        "n_seeds": len(spec.seeds),
+        "compile_s": plan.compile_s,
+        "wall_s": wall_s,
+    }
+    return ExperimentResult(spec=spec, manifest=manifest, cells=cells)
+
+
+def run_spec(spec: ExperimentSpec, *, env=None, host_env=None,
+             verbose: bool = False) -> ExperimentResult:
+    """One-call convenience: compile then run."""
+    from repro.experiments.compiler import compile_spec
+    plan = compile_spec(spec, env=env, host_env=host_env)
+    return run_plan(plan, verbose=verbose)
+
+
+def format_cells(cells: List[Dict[str, Any]], *,
+                 axes: Optional[List[str]] = None) -> str:
+    """Fixed-width table of cells (the CLI's human face). ``axes``
+    names the grid columns to show (default: every axis present)."""
+    if not cells:
+        return "(no cells)"
+    if axes is None:
+        axes = sorted({k for c in cells for k in c["point"]})
+    head = f"{'policy':<18}" + "".join(f"{a:>9}" for a in axes) + \
+        (f"{'avg_reward':>16}{'oracle':>9}{'dyn_regret':>11}"
+         f"{'avg_cost':>10}{'avg_quality':>12}")
+    lines = [head, "-" * len(head)]
+    for c in sorted(cells, key=lambda c: -c["avg_reward_mean"]):
+        ax = ""
+        for a in axes:
+            if a not in c["point"]:
+                ax += f"{'':>9}"
+            elif c["point"][a] is None:
+                ax += f"{'env':>9}"
+            else:
+                ax += f"{c['point'][a]:>9.2f}"
+        lines.append(
+            f"{c['policy']:<18}{ax}"
+            f"{c['avg_reward_mean']:>9.4f}±{c['avg_reward_std']:.4f}"
+            f"{c.get('oracle_avg_reward_mean', float('nan')):>9.4f}"
+            f"{c.get('dynamic_regret_mean', float('nan')):>11.4f}"
+            f"{c['avg_cost_mean']:>10.4f}"
+            f"{c['avg_quality_mean']:>12.4f}")
+    return "\n".join(lines)

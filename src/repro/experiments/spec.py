@@ -1,0 +1,382 @@
+"""Declarative experiment specification (DESIGN.md §11).
+
+An :class:`ExperimentSpec` is a frozen, JSON-round-trippable description
+of a full (policy × scenario × hyper × seed) study: the replay data
+source, the policy list (each with optional hyper-grid axes, builder
+overrides, and a per-entry forgetting variant), the scenario list, the
+seed list, the train schedule, and the summarize options. It is the ONE
+input every consumer shares — the paper driver
+(``scripts/run_paper_experiments.py``), the protocol benchmarks, CI
+smokes, and the parity tests all express their runs as specs, so a new
+scenario / policy / grid axis is a spec edit, not four parallel script
+edits.
+
+The spec layer is deliberately dumb: no registry lookups, no jax — just
+typed fields, cheap invariant checks, and a strict JSON codec
+(:func:`spec_to_json` / :func:`spec_from_json`; unknown keys are
+rejected, round-trips are identity). Registry resolution and grouping
+into device dispatches live in :mod:`repro.experiments.compiler`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Optional, Tuple
+
+SPEC_SCHEMA_VERSION = "experiment-spec-v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """RouterBench-surrogate replay source (DESIGN.md §5)."""
+
+    seed: int = 0
+    n_samples: int = 36_497
+    n_slices: int = 20
+    cost_lambda: float = 1.0
+
+    def __post_init__(self):
+        if self.n_samples <= 0 or self.n_slices <= 0:
+            raise ValueError("DataSpec: n_samples and n_slices must be "
+                             f"positive, got {self.n_samples}/"
+                             f"{self.n_slices}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ForgettingSpec:
+    """Adaptivity knobs (DESIGN.md §9.2) as a JSON-friendly spec; maps
+    onto :class:`repro.sim.policies.ForgettingConfig` at compile time."""
+
+    gamma: float = 1.0
+    window: int = 0
+    replay_rho: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.gamma <= 1.0:
+            raise ValueError(f"ForgettingSpec: gamma must be in (0, 1], "
+                             f"got {self.gamma}")
+        if self.window < 0:
+            raise ValueError(f"ForgettingSpec: window must be >= 0, "
+                             f"got {self.window}")
+        if not 0.0 < self.replay_rho <= 1.0:
+            raise ValueError(f"ForgettingSpec: replay_rho must be in "
+                             f"(0, 1], got {self.replay_rho}")
+
+    def to_config(self):
+        from repro.sim.policies import ForgettingConfig
+        return ForgettingConfig(gamma=float(self.gamma),
+                                window=int(self.window),
+                                replay_rho=float(self.replay_rho))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """Per-slice replay-SGD schedule for policies with a train hook.
+    ``train_steps=None`` derives the fixed per-slice budget from
+    ``epochs`` (``repro.sim.neuralucb_train_schedule``)."""
+
+    epochs: int = 5
+    train_steps: Optional[int] = None
+    batch_size: int = 256
+
+    def __post_init__(self):
+        if self.epochs <= 0 or self.batch_size <= 0:
+            raise ValueError("TrainSpec: epochs and batch_size must be "
+                             "positive")
+        if self.train_steps is not None and self.train_steps <= 0:
+            raise ValueError("TrainSpec: train_steps must be positive "
+                             "or None")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """One policy-zoo entry.
+
+    * ``policy`` — registry name (``repro.sim.POLICIES``).
+    * ``name`` — display label (defaults to ``policy``); must be unique
+      within a spec so forgetting variants of the same policy can
+      coexist (``neuralucb`` / ``neuralucb-forget``).
+    * ``axes`` — hyper-grid axes as ``((field, (v0, v1, ...)), ...)``;
+      the grid is the cartesian product in the given axis order, and
+      each field must exist in the policy's hypers pytree. ``None`` is
+      accepted only for ``cost_lambda`` (the "env's own reward table"
+      sentinel).
+    * ``overrides`` — scalar builder-kwarg overrides, e.g.
+      ``(("explore", 0.2),)``.
+    * ``forgetting`` — per-entry adaptivity variant; ``None`` inherits
+      the spec-level default.
+    """
+
+    policy: str
+    name: Optional[str] = None
+    axes: Tuple[Tuple[str, Tuple[Any, ...]], ...] = ()
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+    forgetting: Optional[ForgettingSpec] = None
+
+    def __post_init__(self):
+        seen = set()
+        for field, values in self.axes:
+            if field in seen:
+                raise ValueError(f"PolicySpec({self.label}): duplicate "
+                                 f"axis {field!r}")
+            seen.add(field)
+            if not values:
+                raise ValueError(f"PolicySpec({self.label}): axis "
+                                 f"{field!r} has no values")
+            if any(v is None for v in values) and field != "cost_lambda":
+                raise ValueError(f"PolicySpec({self.label}): axis "
+                                 f"{field!r} has a null value (only "
+                                 f"cost_lambda accepts the null "
+                                 f"sentinel)")
+
+    @property
+    def label(self) -> str:
+        return self.name or self.policy
+
+
+@dataclasses.dataclass(frozen=True)
+class SummarizeSpec:
+    """Artifact shaping: ``skip_first`` excludes the warm-start slice
+    (paper §4.2); ``curves`` attaches seed-mean per-slice reward curves
+    to each cell; ``per_seed`` attaches the per-seed summary values."""
+
+    skip_first: bool = True
+    curves: bool = True
+    per_seed: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The one typed input (module docstring). ``scenarios`` entries are
+    registry names or ``None`` (stationary fast path)."""
+
+    name: str
+    data: DataSpec = DataSpec()
+    policies: Tuple[PolicySpec, ...] = (PolicySpec("neuralucb"),)
+    scenarios: Tuple[Optional[str], ...] = (None,)
+    seeds: Tuple[int, ...] = (0,)
+    train: TrainSpec = TrainSpec()
+    forgetting: ForgettingSpec = ForgettingSpec()
+    ucb_backend: str = "jnp"
+    summarize: SummarizeSpec = SummarizeSpec()
+
+    def __post_init__(self):
+        if not self.policies:
+            raise ValueError("ExperimentSpec: no policies")
+        if not self.seeds:
+            raise ValueError("ExperimentSpec: no seeds")
+        if not self.scenarios:
+            raise ValueError("ExperimentSpec: no scenarios (use (None,) "
+                             "for the stationary run)")
+        labels = [p.label for p in self.policies]
+        if len(set(labels)) != len(labels):
+            dup = sorted({l for l in labels if labels.count(l) > 1})
+            raise ValueError(f"ExperimentSpec: duplicate policy labels "
+                             f"{dup}; set PolicySpec.name to "
+                             f"disambiguate variants")
+
+
+# ------------------------------------------------------------ JSON codec --
+def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
+    """Spec -> plain JSON-serializable dict (schema-versioned). Inverse
+    of :func:`spec_from_json`: round-trips are identity."""
+    return {
+        "schema": SPEC_SCHEMA_VERSION,
+        "name": spec.name,
+        "data": dataclasses.asdict(spec.data),
+        "policies": [
+            {
+                "policy": p.policy,
+                "name": p.name,
+                "axes": [[f, list(v)] for f, v in p.axes],
+                "overrides": [[k, v] for k, v in p.overrides],
+                "forgetting": (None if p.forgetting is None
+                               else dataclasses.asdict(p.forgetting)),
+            }
+            for p in spec.policies
+        ],
+        "scenarios": list(spec.scenarios),
+        "seeds": list(spec.seeds),
+        "train": dataclasses.asdict(spec.train),
+        "forgetting": dataclasses.asdict(spec.forgetting),
+        "ucb_backend": spec.ucb_backend,
+        "summarize": dataclasses.asdict(spec.summarize),
+    }
+
+
+def _strict(cls, d: Dict[str, Any]):
+    """Construct a spec dataclass rejecting unknown keys — a typo'd
+    field in a spec file must fail loudly, not silently run defaults."""
+    if not isinstance(d, dict):
+        raise ValueError(f"{cls.__name__}: expected an object, got "
+                         f"{type(d).__name__}")
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - fields
+    if unknown:
+        raise ValueError(f"{cls.__name__}: unknown keys "
+                         f"{sorted(unknown)} (known: {sorted(fields)})")
+    return cls(**d)
+
+
+def _policy_from_json(d: Dict[str, Any]) -> PolicySpec:
+    d = dict(d)
+    known = {"policy", "name", "axes", "overrides", "forgetting"}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"PolicySpec: unknown keys {sorted(unknown)} "
+                         f"(known: {sorted(known)})")
+    axes = tuple((f, tuple(v)) for f, v in d.get("axes", ()))
+    overrides = tuple((k, v) for k, v in d.get("overrides", ()))
+    fg = d.get("forgetting")
+    return PolicySpec(
+        policy=d["policy"], name=d.get("name"), axes=axes,
+        overrides=overrides,
+        forgetting=None if fg is None else _strict(ForgettingSpec, fg))
+
+
+def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
+    """Strict inverse of :func:`spec_to_json`. Unknown keys anywhere in
+    the document raise ``ValueError``; an unknown / missing ``schema``
+    tag raises too (a future schema must be converted, not guessed at).
+    """
+    if not isinstance(d, dict):
+        raise ValueError("spec_from_json: expected a JSON object")
+    d = dict(d)
+    schema = d.pop("schema", None)
+    if schema != SPEC_SCHEMA_VERSION:
+        raise ValueError(f"spec_from_json: schema {schema!r} is not "
+                         f"{SPEC_SCHEMA_VERSION!r}")
+    known = {"name", "data", "policies", "scenarios", "seeds", "train",
+             "forgetting", "ucb_backend", "summarize"}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"ExperimentSpec: unknown keys "
+                         f"{sorted(unknown)} (known: {sorted(known)})")
+    if "name" not in d:
+        raise ValueError("ExperimentSpec: missing required key 'name'")
+    kw: Dict[str, Any] = {"name": d["name"]}
+    if "data" in d:
+        kw["data"] = _strict(DataSpec, d["data"])
+    if "policies" in d:
+        if not isinstance(d["policies"], (list, tuple)):
+            raise ValueError("ExperimentSpec: 'policies' must be a "
+                             "list of policy objects")
+        kw["policies"] = tuple(_policy_from_json(p)
+                               for p in d["policies"])
+    if "scenarios" in d:
+        # a bare scalar (e.g. --set scenarios=price_shock) means a
+        # one-element list — NOT a string to iterate character-wise
+        v = d["scenarios"]
+        kw["scenarios"] = tuple(v) if isinstance(v, (list, tuple)) \
+            else (v,)
+    if "seeds" in d:
+        v = d["seeds"]
+        if not isinstance(v, (list, tuple)):
+            v = [v]
+        try:
+            kw["seeds"] = tuple(int(s) for s in v)
+        except (TypeError, ValueError) as e:
+            raise ValueError(f"ExperimentSpec: 'seeds' must be a list "
+                             f"of ints, got {d['seeds']!r}") from e
+    if "train" in d:
+        kw["train"] = _strict(TrainSpec, d["train"])
+    if "forgetting" in d:
+        kw["forgetting"] = _strict(ForgettingSpec, d["forgetting"])
+    if "ucb_backend" in d:
+        kw["ucb_backend"] = d["ucb_backend"]
+    if "summarize" in d:
+        kw["summarize"] = _strict(SummarizeSpec, d["summarize"])
+    return ExperimentSpec(**kw)
+
+
+def spec_hash(spec: ExperimentSpec) -> str:
+    """Content hash of the canonical JSON form — the artifact manifest's
+    reproducibility key (same spec <=> same hash, field order
+    irrelevant)."""
+    canon = json.dumps(spec_to_json(spec), sort_keys=True,
+                       separators=(",", ":"))
+    return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+
+# ------------------------------------------------------- ``--set`` paths --
+def parse_override_value(text: str) -> Any:
+    """Parse one ``--set key=value`` right-hand side: JSON when it
+    parses (numbers, null, true/false, quoted strings, [lists]),
+    comma-split into a list otherwise, bare string as a fallback."""
+    try:
+        return json.loads(text)
+    except (json.JSONDecodeError, ValueError):
+        pass
+    if "," in text:
+        return [parse_override_value(v) for v in text.split(",")]
+    return text
+
+
+def _set_path(node: Any, parts, value):
+    head, rest = parts[0], parts[1:]
+    if isinstance(node, list):
+        # integer index, or a policy entry matched by its display label
+        if head.lstrip("-").isdigit():
+            target = node[int(head)]
+        else:
+            matches = [p for p in node
+                       if isinstance(p, dict)
+                       and (p.get("name") or p.get("policy")) == head]
+            if not matches:
+                raise KeyError(f"no policy entry labeled {head!r}")
+            target = matches[0]
+        if not rest:
+            raise KeyError("cannot replace a whole policy entry via "
+                           "--set; set its fields instead")
+        return _set_path(target, rest, value)
+    if not isinstance(node, dict):
+        raise KeyError(f"cannot descend into {type(node).__name__} at "
+                       f"{head!r}")
+    if head == "axes" and rest:
+        # axes are [field, values] pairs: address by hyper-field name
+        if len(rest) != 1:
+            raise KeyError(f"axes paths take exactly one field name, "
+                           f"got {'.'.join(rest)!r}")
+        field = rest[0]
+        vals = value if isinstance(value, list) else [value]
+        axes = node.setdefault("axes", [])
+        for pair in axes:
+            if pair[0] == field:
+                pair[1] = vals
+                return
+        axes.append([field, vals])
+        return
+    if not rest:
+        if head not in node:
+            raise KeyError(f"unknown spec key {head!r} (known: "
+                           f"{sorted(node)})")
+        node[head] = value
+        return
+    if head not in node:
+        raise KeyError(f"unknown spec key {head!r} (known: "
+                       f"{sorted(node)})")
+    return _set_path(node[head], rest, value)
+
+
+def apply_overrides(spec: ExperimentSpec,
+                    assignments: Dict[str, Any]) -> ExperimentSpec:
+    """Apply dotted-path overrides to a spec (the CLI's ``--set``).
+
+    Paths address the JSON form: ``data.n_samples=1500``,
+    ``seeds=0,1``, ``train.train_steps=32``,
+    ``scenarios=price_shock,arm_outage``,
+    ``policies.neuralucb.axes.beta=0.25,0.5,1.0`` (policy entries are
+    addressed by display label, axes by hyper-field name). The result
+    re-validates through the strict JSON codec, so a typo'd path or an
+    invalid value errors loudly."""
+    doc = spec_to_json(spec)
+    for path, value in assignments.items():
+        parts = path.split(".")
+        if not parts or parts[0] == "schema":
+            raise KeyError(f"cannot set {path!r}")
+        try:
+            _set_path(doc, parts, value)
+        except (KeyError, IndexError) as e:
+            raise KeyError(f"--set {path}: {e}") from e
+    return spec_from_json(doc)

@@ -16,7 +16,8 @@ the actual serving pool rather than the benchmark's API prices.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -39,6 +40,13 @@ class RoutedServingPool:
     at ``engine.max_seq``, so normalizing by a fixed 4096-token horizon
     (the old default) compressed every realizable cost toward 0 and
     collapsed the reward's cost discrimination between arms.
+
+    ``log`` keeps the most recent ``log_capacity`` per-request records
+    (a bounded deque — under sustained traffic an unbounded list grew
+    without limit and eventually OOM'd the serving process). Pass
+    ``log_capacity=None`` to opt out of the bound; ``dropped_log_records``
+    counts records evicted by the cap so monitoring can tell a short log
+    from a trimmed one.
     """
 
     def __init__(self, router,
@@ -47,8 +55,12 @@ class RoutedServingPool:
                  quality_table: Optional[np.ndarray] = None,
                  c_max: Optional[float] = None,
                  cost_lambda: float = 1.0,
-                 max_batch: int = 8):
+                 max_batch: int = 8,
+                 log_capacity: Optional[int] = 10_000):
         assert len(engines) == len(cost_per_token)
+        if log_capacity is not None and log_capacity <= 0:
+            raise ValueError("log_capacity must be positive or None "
+                             f"(unbounded), got {log_capacity}")
         self.router = router
         self.engines = list(engines)
         self.cost_per_token = np.asarray(cost_per_token, np.float64)
@@ -59,7 +71,8 @@ class RoutedServingPool:
         self.c_max = c_max
         self.cost_lambda = cost_lambda
         self.batcher = RequestBatcher(max_batch=max_batch)
-        self.log: List[Dict] = []
+        self.log: Deque[Dict] = deque(maxlen=log_capacity)
+        self.dropped_log_records = 0
 
     def submit(self, requests: Sequence[Request]) -> List[Dict]:
         """Route + serve a wave of requests; returns per-request records."""
@@ -101,6 +114,9 @@ class RoutedServingPool:
         self.router.update(x_emb, x_feat, domain, decision, rewards)
         out = [dict(records[r.rid], reward=float(rw))
                for r, rw in zip(requests, rewards)]
+        if self.log.maxlen is not None:
+            self.dropped_log_records += max(
+                0, len(self.log) + len(out) - self.log.maxlen)
         self.log.extend(out)
         return out
 

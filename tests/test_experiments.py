@@ -1,0 +1,324 @@
+"""Declarative ExperimentSpec API tests (DESIGN.md §11): strict JSON
+round-trip, ``--set`` override paths, compile-time validation and
+minimal dispatch grouping, the schema-versioned artifact, and the
+parity tests pinning the ``paper_table1`` / ``fig2_beta_sweep`` /
+``scenario_suite`` presets against the pre-redesign (PR-4) driver path
+on a tiny config."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.protocol import summarize, summarize_sweep
+from repro.core.utilitynet import UtilityNetConfig
+from repro.data.routerbench import RouterBenchSim
+from repro.experiments import (
+    PRESETS,
+    ExperimentSpec,
+    ForgettingSpec,
+    PolicySpec,
+    apply_overrides,
+    compile_spec,
+    make_preset,
+    parse_override_value,
+    run_plan,
+    run_spec,
+    spec_from_json,
+    spec_hash,
+    spec_to_json,
+)
+from repro.sim import (
+    DeviceReplayEnv,
+    ForgettingConfig,
+    greedy_policy,
+    random_policy,
+    run_baseline_device,
+    run_neuralucb_device,
+    run_neuralucb_sweep,
+)
+
+TINY = {"data.n_samples": 600, "data.n_slices": 3,
+        "train.train_steps": 8, "train.batch_size": 32}
+
+
+@pytest.fixture(scope="module")
+def envs():
+    henv = RouterBenchSim(seed=0, n_samples=600, n_slices=3)
+    return henv, DeviceReplayEnv.from_host(henv)
+
+
+@pytest.fixture(scope="module")
+def cfg(envs):
+    henv, _ = envs
+    return UtilityNetConfig(emb_dim=henv.x_emb.shape[1], num_actions=henv.K)
+
+
+# ------------------------------------------------------------ spec codec --
+def test_every_preset_round_trips():
+    for name in PRESETS:
+        spec = make_preset(name)
+        doc = json.loads(json.dumps(spec_to_json(spec)))
+        assert spec_from_json(doc) == spec, name
+        assert spec_hash(spec_from_json(doc)) == spec_hash(spec)
+
+
+def test_round_trip_preserves_axes_and_variants():
+    spec = ExperimentSpec(
+        name="rt",
+        policies=(PolicySpec("neuralucb",
+                             axes=(("beta", (0.5, 1.0)),
+                                   ("cost_lambda", (None, 0.5)))),
+                  PolicySpec("neuralucb", name="nucb-forget",
+                             forgetting=ForgettingSpec(replay_rho=0.4),
+                             overrides=(("tau_g", 0.25),))),
+        scenarios=("price_shock", None),
+        seeds=(0, 7))
+    rt = spec_from_json(spec_to_json(spec))
+    assert rt == spec
+    assert rt.policies[0].axes[1][1] == (None, 0.5)  # null sentinel kept
+
+
+def test_unknown_keys_rejected_everywhere():
+    doc = spec_to_json(make_preset("ci_smoke"))
+    top = dict(doc, bogus=1)
+    with pytest.raises(ValueError, match="bogus"):
+        spec_from_json(top)
+    nested = json.loads(json.dumps(doc))
+    nested["data"]["n_sample"] = 10          # typo'd field
+    with pytest.raises(ValueError, match="n_sample"):
+        spec_from_json(nested)
+    pol = json.loads(json.dumps(doc))
+    pol["policies"][0]["beta"] = 2.0         # hyper outside axes
+    with pytest.raises(ValueError, match="beta"):
+        spec_from_json(pol)
+    fg = json.loads(json.dumps(doc))
+    fg["forgetting"]["rho"] = 0.4
+    with pytest.raises(ValueError, match="rho"):
+        spec_from_json(fg)
+
+
+def test_schema_tag_is_mandatory():
+    doc = spec_to_json(make_preset("ci_smoke"))
+    del doc["schema"]
+    with pytest.raises(ValueError, match="schema"):
+        spec_from_json(doc)
+    doc["schema"] = "experiment-spec-v999"
+    with pytest.raises(ValueError, match="v999"):
+        spec_from_json(doc)
+
+
+def test_spec_invariants():
+    with pytest.raises(ValueError, match="duplicate policy labels"):
+        ExperimentSpec(name="dup", policies=(PolicySpec("neuralucb"),
+                                             PolicySpec("neuralucb")))
+    with pytest.raises(ValueError, match="no values"):
+        PolicySpec("neuralucb", axes=(("beta", ()),))
+    with pytest.raises(ValueError, match="null"):
+        PolicySpec("neuralucb", axes=(("beta", (None, 1.0)),))
+    with pytest.raises(ValueError, match="gamma"):
+        ForgettingSpec(gamma=0.0)
+    with pytest.raises(ValueError, match="no seeds"):
+        ExperimentSpec(name="s", seeds=())
+
+
+# -------------------------------------------------------- --set overrides --
+def test_parse_override_value():
+    assert parse_override_value("32") == 32
+    assert parse_override_value("0.5") == 0.5
+    assert parse_override_value("null") is None
+    assert parse_override_value("0.5,1.0") == [0.5, 1.0]
+    assert parse_override_value("price_shock,arm_outage") == \
+        ["price_shock", "arm_outage"]
+    assert parse_override_value("price_shock") == "price_shock"
+
+
+def test_apply_overrides_paths():
+    spec = make_preset("fig2_beta_sweep", {
+        "data.n_samples": 600, "seeds": [0, 1],
+        "policies.neuralucb.axes.beta": [0.5],
+        "policies.neuralucb.axes.tau_g": 0.25,
+        "scenarios": ["price_shock"],
+        "train.train_steps": 8})
+    assert spec.data.n_samples == 600
+    assert spec.seeds == (0, 1)
+    assert spec.scenarios == ("price_shock",)
+    assert dict(spec.policies[0].axes) == {"beta": (0.5,),
+                                           "tau_g": (0.25,)}
+    assert spec.train.train_steps == 8
+
+
+def test_apply_overrides_rejects_unknown_paths():
+    spec = make_preset("fig2_beta_sweep")
+    with pytest.raises(KeyError, match="n_sample"):
+        apply_overrides(spec, {"data.n_sample": 600})
+    with pytest.raises(KeyError, match="no policy entry"):
+        apply_overrides(spec, {"policies.linucb.axes.alpha": [1.0]})
+
+
+# ---------------------------------------------------------------- compile --
+def test_compile_validates_registries(envs):
+    henv, denv = envs
+    with pytest.raises(ValueError, match="unknown policy"):
+        compile_spec(ExperimentSpec(name="x",
+                                    policies=(PolicySpec("nope"),)),
+                     env=denv)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        compile_spec(ExperimentSpec(name="x", scenarios=("nope",)),
+                     env=denv)
+    with pytest.raises(ValueError, match="unknown hyper axis"):
+        compile_spec(ExperimentSpec(
+            name="x", policies=(PolicySpec("neuralucb",
+                                           axes=(("betta", (1.0,)),)),)),
+            env=denv)
+    with pytest.raises(ValueError, match="no hyper fields"):
+        compile_spec(ExperimentSpec(
+            name="x", policies=(PolicySpec("random",
+                                           axes=(("beta", (1.0,)),)),)),
+            env=denv)
+    with pytest.raises(ValueError, match="bad override"):
+        compile_spec(ExperimentSpec(
+            name="x", policies=(PolicySpec("neuralucb",
+                                           overrides=(("betta", 1.0),)),)),
+            env=denv)
+
+
+def test_compile_groups_into_minimal_dispatches(envs):
+    henv, denv = envs
+    plan = compile_spec(make_preset("ci_smoke"), env=denv, host_env=henv)
+    # 3 scenarios × 2 forgetting variants — every vanilla policy of a
+    # scenario shares ONE run_policy_sweep dispatch
+    assert plan.n_dispatches == 6
+    assert plan.n_cells == 18       # (2β + 4×1) cells × 3 scenarios
+    vanilla = plan.calls[0]
+    assert vanilla.scenario is None
+    assert set(vanilla.policies) == {"neuralucb", "linucb", "neural_ts",
+                                     "eps_greedy"}
+    assert vanilla.forgetting == ForgettingConfig()
+    forget = plan.calls[1]
+    assert set(forget.policies) == {"neuralucb-forget"}
+    assert forget.forgetting == ForgettingConfig(replay_rho=0.4)
+
+    fig2 = compile_spec(make_preset("fig2_beta_sweep"), env=denv,
+                        host_env=henv)
+    assert fig2.n_dispatches == 1   # same count as hand-wired PR-2 sweep
+    assert fig2.n_cells == 4
+
+
+def test_compile_resolves_train_schedule(envs):
+    henv, denv = envs
+    spec = make_preset("paper_table1", TINY)
+    plan = compile_spec(spec, env=denv, host_env=henv)
+    assert plan.train_steps == 8
+    derived = compile_spec(
+        make_preset("paper_table1", {"data.n_samples": 600,
+                                     "data.n_slices": 3}),
+        env=denv, host_env=henv)
+    assert derived.train_steps is not None and derived.train_steps > 0
+
+
+# ----------------------------------------------------------- parity (PR-4) --
+def test_fig2_beta_sweep_preset_matches_pr4_driver(envs, cfg):
+    """Acceptance: the preset path must reproduce the PR-4
+    ``run_neuralucb_sweep`` + ``summarize_sweep`` numbers exactly, from
+    the same one-dispatch program."""
+    henv, denv = envs
+    spec = make_preset("fig2_beta_sweep", {
+        **TINY, "seeds": [0, 1],
+        "policies.neuralucb.axes.beta": [0.5, 1.0]})
+    res = run_spec(spec, env=denv, host_env=henv)
+    assert res.manifest["n_dispatches"] == 1
+
+    ref = run_neuralucb_sweep(denv, cfg, seeds=[0, 1], betas=[0.5, 1.0],
+                              train_steps=8, batch_size=32)
+    points = summarize_sweep(ref)
+    assert len(res.cells) == len(points) == 2
+    for cell, point in zip(res.cells, points):
+        assert cell["point"]["beta"] == point["beta"]
+        for key in ("avg_reward_mean", "avg_reward_std", "avg_cost_mean",
+                    "avg_quality_mean", "oracle_avg_reward_mean",
+                    "dynamic_regret_mean", "final_cum_reward_mean"):
+            assert cell[key] == point[key], (cell["point"], key)
+
+
+def test_paper_table1_preset_matches_pr4_driver(envs, cfg):
+    henv, denv = envs
+    res = run_spec(make_preset("paper_table1",
+                               {**TINY, "seeds": [0]}),
+                   env=denv, host_env=henv)
+    refs = {
+        "neuralucb": run_neuralucb_device(denv, cfg, seed=0,
+                                          train_steps=8, batch_size=32),
+        "greedy": run_baseline_device(denv, greedy_policy(denv.K),
+                                      seed=0),
+        "random": run_baseline_device(denv, random_policy(denv.K),
+                                      seed=0),
+    }
+    summ = summarize(refs, skip_first=True)
+    for name, ref in summ.items():
+        cell = res.cell(name)
+        for k_new, k_old in (("avg_reward_mean", "avg_reward"),
+                             ("avg_cost_mean", "avg_cost"),
+                             ("avg_quality_mean", "avg_quality"),
+                             ("final_cum_reward_mean",
+                              "final_cum_reward")):
+            np.testing.assert_allclose(cell[k_new], ref[k_old],
+                                       rtol=0, atol=1e-12,
+                                       err_msg=f"{name}/{k_new}")
+
+
+def test_scenario_suite_preset_matches_pr4_driver(envs, cfg):
+    henv, denv = envs
+    res = run_spec(make_preset("scenario_suite",
+                               {**TINY, "seeds": [0],
+                                "scenarios": ["price_shock"]}),
+                   env=denv, host_env=henv)
+    fg = ForgettingConfig(replay_rho=0.4)
+    refs = {
+        "neuralucb": run_neuralucb_device(
+            denv, cfg, seed=0, scenario="price_shock", train_steps=8,
+            batch_size=32),
+        "neuralucb-forget": run_neuralucb_device(
+            denv, cfg, seed=0, scenario="price_shock", forgetting=fg,
+            train_steps=8, batch_size=32),
+        "greedy": run_baseline_device(denv, greedy_policy(denv.K),
+                                      seed=0, scenario="price_shock"),
+        "random": run_baseline_device(denv, random_policy(denv.K),
+                                      seed=0, scenario="price_shock"),
+    }
+    summ = summarize(refs, skip_first=True)
+    for name, ref in summ.items():
+        cell = res.cell(name, "price_shock")
+        for k_new, k_old in (("avg_reward_mean", "avg_reward"),
+                             ("avg_cost_mean", "avg_cost"),
+                             ("oracle_avg_reward_mean",
+                              "oracle_avg_reward"),
+                             ("dynamic_regret_mean", "dynamic_regret")):
+            np.testing.assert_allclose(cell[k_new], ref[k_old],
+                                       rtol=0, atol=1e-12,
+                                       err_msg=f"{name}/{k_new}")
+
+
+# ---------------------------------------------------------------- artifact --
+def test_result_artifact_schema(envs, tmp_path):
+    henv, denv = envs
+    spec = make_preset("fig2_beta_sweep", {
+        **TINY, "seeds": [0],
+        "policies.neuralucb.axes.beta": [1.0]})
+    plan = compile_spec(spec, env=denv, host_env=henv)
+    res = run_plan(plan)
+    m = res.manifest
+    assert m["schema"] == "experiment-result-v1"
+    assert m["spec_hash"] == spec_hash(spec)
+    assert m["n_dispatches"] == 1 and m["n_cells"] == 1
+    assert m["train_steps"] == 8
+    assert m["backend"] and m["n_devices"] >= 1
+    assert res.ok
+
+    cell = res.cells[0]
+    assert cell["scenario"] == "stationary"
+    assert len(cell["curve_avg_reward"]) == 3    # summarize.curves
+    path = tmp_path / "artifact.json"
+    res.save(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == "experiment-result-v1"
+    assert spec_from_json(doc["spec"]) == spec   # artifact reruns as-is

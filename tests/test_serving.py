@@ -194,3 +194,44 @@ def test_pool_default_c_max_uses_actual_max_seq():
     # range instead of 256/4096 of it
     assert 1e-4 * max(e.max_seq for e in engines) / pool.c_max == \
         pytest.approx(1.0)
+
+
+def test_routed_pool_log_is_bounded():
+    """Regression (PR-5 ISSUE): ``pool.log`` grew without bound under
+    sustained traffic. It must be a capped deque keeping the most
+    recent records, counting evictions, with ``log_capacity=None`` as
+    the explicit unbounded opt-out."""
+    import types
+    engines = [types.SimpleNamespace(max_seq=64)]
+    pool = RoutedServingPool(object(), engines, [1e-4], log_capacity=8)
+    assert pool.log.maxlen == 8
+    assert pool.dropped_log_records == 0
+
+    unbounded = RoutedServingPool(object(), engines, [1e-4],
+                                  log_capacity=None)
+    assert unbounded.log.maxlen is None
+    with pytest.raises(ValueError, match="log_capacity"):
+        RoutedServingPool(object(), engines, [1e-4], log_capacity=0)
+
+
+def test_routed_pool_submit_counts_dropped_records():
+    """End-to-end: submit() itself maintains the eviction counter."""
+    cfgs = [dataclasses.replace(get_config(a).reduced(), dtype="float32")
+            for a in ("llama3_2_3b",)]
+    engines = [ServingEngine(cfgs[0], seed=0, max_seq=32)]
+    ucfg = UtilityNetConfig(emb_dim=16, num_actions=1, num_domains=3)
+    router = NeuralUCBRouter(ucfg, seed=0, batch_size=8)
+    pool = RoutedServingPool(router, engines, [1e-4], c_max=0.05,
+                             max_batch=4, log_capacity=3)
+    rng = np.random.default_rng(2)
+    reqs = [Request(tokens=rng.integers(1, 50, size=5),
+                    x_emb=rng.normal(size=16).astype(np.float32),
+                    x_feat=rng.normal(size=4).astype(np.float32),
+                    domain=int(rng.integers(0, 3)), sample_idx=-1)
+            for i in range(5)]
+    pool.submit(reqs)
+    assert len(pool.log) == 3
+    assert pool.dropped_log_records == 2
+    pool.submit(reqs)
+    assert len(pool.log) == 3
+    assert pool.dropped_log_records == 7

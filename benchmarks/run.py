@@ -15,6 +15,7 @@ from benchmarks import (
     bench_protocol,
     bench_rewards,
     bench_roofline,
+    bench_serving,
 )
 from benchmarks.common import emit_csv
 
@@ -25,6 +26,7 @@ SECTIONS = {
     "kernels": bench_kernels.run,
     "roofline": bench_roofline.run,      # deliverable (g)
     "protocol": bench_protocol.run,      # sim engine vs seed host loop
+    "serving": bench_serving.run,        # async engine vs sync loop
 }
 
 

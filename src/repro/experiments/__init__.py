@@ -34,6 +34,7 @@ from repro.experiments.spec import (
     ExperimentSpec,
     ForgettingSpec,
     PolicySpec,
+    ServingSpec,
     SummarizeSpec,
     TrainSpec,
     apply_overrides,
@@ -56,6 +57,7 @@ __all__ = [
     "ExperimentResult",
     "ForgettingSpec",
     "PolicySpec",
+    "ServingSpec",
     "SummarizeSpec",
     "SweepCall",
     "TrainSpec",

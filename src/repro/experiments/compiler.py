@@ -63,6 +63,11 @@ class ExperimentPlan:
     calls: Tuple[SweepCall, ...]
     train_steps: Optional[int]
     compile_s: float
+    # serving-storm mode (spec.serving set): the single resolved policy
+    # as (label, policy, hypers, forgetting); ``calls`` is then empty —
+    # the storm replaces the sweep dispatches.
+    serving_policy: Optional[Tuple[str, BanditPolicy, Any,
+                                   ForgettingConfig]] = None
 
     @property
     def n_dispatches(self) -> int:
@@ -159,6 +164,27 @@ def compile_spec(spec: ExperimentSpec, *,
     if train_steps is None and any_train:
         train_steps = neuralucb_train_schedule(env, spec.train.epochs,
                                                spec.train.batch_size)
+
+    if spec.serving is not None:
+        from repro.serving.traffic import TRAFFIC_PATTERNS
+        sv = spec.serving
+        if sv.pattern not in TRAFFIC_PATTERNS:
+            raise ValueError(f"unknown traffic pattern {sv.pattern!r}; "
+                             f"known: {sorted(TRAFFIC_PATTERNS)}")
+        for arm, s, e in sv.outages:
+            if arm >= env.K:
+                raise ValueError(f"serving outage arm {arm} out of "
+                                 f"range (env has {env.K} arms)")
+            if s >= sv.waves:
+                raise ValueError(f"serving outage ({arm}, {s}, {e}) "
+                                 f"starts past the last wave "
+                                 f"({sv.waves} waves)")
+        label, fspec, pol, hyp, _ = resolved[0]
+        return ExperimentPlan(
+            spec=spec, env=env, host_env=host_env, cfg=cfg, calls=(),
+            train_steps=train_steps,
+            compile_s=time.perf_counter() - t0,
+            serving_policy=(label, pol, hyp, fspec.to_config()))
 
     calls = []
     for scenario in spec.scenarios:

@@ -18,6 +18,7 @@ from repro.experiments.spec import (
     ExperimentSpec,
     ForgettingSpec,
     PolicySpec,
+    ServingSpec,
     SummarizeSpec,
     TrainSpec,
     apply_overrides,
@@ -127,6 +128,29 @@ def _ci_smoke() -> ExperimentSpec:
         seeds=(0, 1),
         train=TrainSpec(train_steps=32, batch_size=64),
         summarize=SummarizeSpec(curves=False))
+
+
+@register_preset("serving_storm")
+def _serving_storm() -> ExperimentSpec:
+    """Serving storm (DESIGN.md §12): flash-crowd traffic through the
+    async engine with two cascading arm outages and an injected decide
+    fault — gates on zero lost requests, the p99 decide-latency bound,
+    and the shed ceiling. CI shrinks it via --set serving.requests=...
+    serving.waves=...; the full size is the acceptance run."""
+    return ExperimentSpec(
+        name="serving_storm",
+        data=DataSpec(n_samples=6000, n_slices=8),
+        policies=(PolicySpec("neuralucb"),),
+        seeds=(0,),
+        train=TrainSpec(train_steps=32, batch_size=64),
+        summarize=SummarizeSpec(curves=False),
+        serving=ServingSpec(
+            requests=20_000, waves=40, pattern="flash_crowd",
+            decide_batch=256, queue_capacity=4096,
+            outages=((0, 12, 28), (1, 20, 36)),
+            fail_decide_calls=(5,),
+            train_every=8, p99_decide_ms=250.0,
+            max_shed_fraction=0.02, require_zero_lost=True))
 
 
 @register_preset("bench_nucb_sweep")

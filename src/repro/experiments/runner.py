@@ -47,7 +47,8 @@ class ExperimentResult:
 
     @property
     def ok(self) -> bool:
-        return all(np.isfinite(c["avg_reward_mean"]) for c in self.cells)
+        return all(np.isfinite(c["avg_reward_mean"])
+                   and c.get("serving_ok", True) for c in self.cells)
 
     def scenario_names(self) -> List[str]:
         seen: List[str] = []
@@ -83,6 +84,61 @@ class ExperimentResult:
             json.dump(self.to_json(), f, indent=1, default=float)
 
 
+def _run_serving_cell(plan: ExperimentPlan, *, verbose: bool = False
+                      ) -> Dict[str, Any]:
+    """Serving-storm mode: drive the plan's single resolved policy
+    through the async engine (DESIGN.md §12) and shape the storm
+    metrics into one artifact cell. ``serving_ok`` applies the spec's
+    gates (zero lost requests, p99 decide-latency bound, shed ceiling)
+    — it feeds :attr:`ExperimentResult.ok`, the CI exit status."""
+    from repro.serving import DevicePolicyRouter, run_storm
+    from repro.sim.engine import _chunks_for, _tables
+
+    spec = plan.spec
+    sv = spec.serving
+    label, pol, hyp, fcfg = plan.serving_policy
+    chunks = _chunks_for(plan.env, pol, plan.train_steps,
+                         spec.train.epochs, spec.train.batch_size)
+    capacity = min(1024, -(-sv.requests // sv.decide_batch) + sv.waves)
+    router = DevicePolicyRouter(
+        pol, hyp, _tables(plan.env), seed=spec.seeds[0],
+        slice_width=sv.decide_batch, capacity_slices=capacity,
+        batch_size=spec.train.batch_size, train_chunks=chunks, fcfg=fcfg)
+    metrics = run_storm(
+        plan.env, router, requests=sv.requests, waves=sv.waves,
+        pattern=sv.pattern, outages=sv.outages,
+        queue_capacity=sv.queue_capacity, decide_batch=sv.decide_batch,
+        serve_batch=sv.serve_batch,
+        fail_decide_calls=sv.fail_decide_calls,
+        train_every=sv.train_every, epochs=spec.train.epochs,
+        seed=sv.seed)
+
+    gates: Dict[str, bool] = {}
+    if sv.require_zero_lost:
+        gates["zero_lost"] = metrics["lost_requests"] == 0
+    if sv.p99_decide_ms is not None:
+        gates["p99_decide"] = \
+            metrics["decide_p99_us"] / 1000.0 <= sv.p99_decide_ms
+    gates["shed_fraction"] = \
+        metrics["shed"] <= sv.max_shed_fraction * sv.requests
+    ok = all(gates.values())
+    if verbose:
+        print(f"[{spec.name}] serving/{label}: "
+              f"{metrics['requests_per_s']:.0f} req/s, "
+              f"p99 decide {metrics['decide_p99_us'] / 1000:.2f} ms, "
+              f"shed {metrics['shed']}, lost "
+              f"{metrics['lost_requests']} -> "
+              f"{'ok' if ok else 'FAIL ' + str(gates)}", flush=True)
+    return {"scenario": f"serving:{sv.pattern}", "policy": label,
+            "point": {}, "train_steps": int(plan.train_steps or 0),
+            "avg_reward_mean": metrics["avg_reward"],
+            "avg_reward_std": 0.0,
+            "avg_cost_mean": metrics["avg_cost"],
+            "avg_quality_mean": metrics["avg_quality"],
+            "serving": metrics, "serving_gates": gates,
+            "serving_ok": bool(ok)}
+
+
 def run_plan(plan: ExperimentPlan, *, verbose: bool = False
              ) -> ExperimentResult:
     """Execute every planned dispatch and assemble the artifact."""
@@ -92,6 +148,8 @@ def run_plan(plan: ExperimentPlan, *, verbose: bool = False
     summ = spec.summarize
     cells: List[Dict[str, Any]] = []
     t0 = time.perf_counter()
+    if spec.serving is not None:
+        cells.append(_run_serving_cell(plan, verbose=verbose))
     for call in plan.calls:
         sweeps = run_policy_sweep(
             plan.env, call.policies, seeds=spec.seeds,

@@ -136,6 +136,65 @@ class PolicySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServingSpec:
+    """Serving-storm study (DESIGN.md §12): drive the spec's single
+    policy through the async serving engine under a traffic pattern and
+    scripted faults instead of the batch protocol sweep.
+
+    * ``requests`` / ``waves`` — total request budget, shaped into
+      arrival waves by ``pattern`` (``repro.serving.TRAFFIC_PATTERNS``).
+    * ``outages`` — announced ``(arm, start_wave, end_wave)`` windows.
+    * ``fail_decide_calls`` — decide-call indices whose router call is
+      forced to raise (the engine must degrade, not crash).
+    * ``train_every`` — run the router's train hook every that many
+      waves (0 = never).
+    * Gates: ``require_zero_lost`` (accounting invariant),
+      ``p99_decide_ms`` (None = unbounded), ``max_shed_fraction``
+      (shed / submitted ceiling). They decide the cell's ``serving_ok``
+      flag and hence ``ExperimentResult.ok`` — the CI exit status.
+    """
+
+    requests: int = 20_000
+    waves: int = 40
+    pattern: str = "flash_crowd"
+    decide_batch: int = 256
+    serve_batch: int = 256
+    queue_capacity: int = 4096
+    outages: Tuple[Tuple[int, int, int], ...] = ()
+    fail_decide_calls: Tuple[int, ...] = ()
+    train_every: int = 0
+    p99_decide_ms: Optional[float] = None
+    max_shed_fraction: float = 1.0
+    require_zero_lost: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.waves <= 0 or self.requests < self.waves:
+            raise ValueError(f"ServingSpec: need requests >= waves >= 1, "
+                             f"got {self.requests}/{self.waves}")
+        if self.decide_batch <= 0 or self.serve_batch <= 0 \
+                or self.queue_capacity <= 0:
+            raise ValueError("ServingSpec: decide_batch, serve_batch and "
+                             "queue_capacity must be positive")
+        for o in self.outages:
+            if len(o) != 3:
+                raise ValueError(f"ServingSpec: outage {o!r} is not "
+                                 f"(arm, start_wave, end_wave)")
+            arm, s, e = o
+            if arm < 0 or s < 0 or not s < e:
+                raise ValueError(f"ServingSpec: bad outage window {o!r} "
+                                 f"(need arm >= 0, 0 <= start < end)")
+        if self.train_every < 0:
+            raise ValueError("ServingSpec: train_every must be >= 0")
+        if self.p99_decide_ms is not None and self.p99_decide_ms <= 0:
+            raise ValueError("ServingSpec: p99_decide_ms must be "
+                             "positive or None")
+        if not 0.0 <= self.max_shed_fraction <= 1.0:
+            raise ValueError("ServingSpec: max_shed_fraction must be in "
+                             "[0, 1]")
+
+
+@dataclasses.dataclass(frozen=True)
 class SummarizeSpec:
     """Artifact shaping: ``skip_first`` excludes the warm-start slice
     (paper §4.2); ``curves`` attaches seed-mean per-slice reward curves
@@ -160,10 +219,19 @@ class ExperimentSpec:
     forgetting: ForgettingSpec = ForgettingSpec()
     ucb_backend: str = "jnp"
     summarize: SummarizeSpec = SummarizeSpec()
+    serving: Optional[ServingSpec] = None
 
     def __post_init__(self):
         if not self.policies:
             raise ValueError("ExperimentSpec: no policies")
+        if self.serving is not None:
+            if len(self.policies) != 1 or self.policies[0].axes:
+                raise ValueError("ExperimentSpec: a serving storm takes "
+                                 "exactly one policy with no grid axes")
+            if tuple(self.scenarios) != (None,):
+                raise ValueError("ExperimentSpec: serving storms take "
+                                 "outage windows (serving.outages), not "
+                                 "sim scenarios; use scenarios=(None,)")
         if not self.seeds:
             raise ValueError("ExperimentSpec: no seeds")
         if not self.scenarios:
@@ -181,7 +249,7 @@ class ExperimentSpec:
 def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
     """Spec -> plain JSON-serializable dict (schema-versioned). Inverse
     of :func:`spec_from_json`: round-trips are identity."""
-    return {
+    j = {
         "schema": SPEC_SCHEMA_VERSION,
         "name": spec.name,
         "data": dataclasses.asdict(spec.data),
@@ -203,6 +271,13 @@ def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
         "ucb_backend": spec.ucb_backend,
         "summarize": dataclasses.asdict(spec.summarize),
     }
+    if spec.serving is not None:
+        # emitted only when set, so pre-serving specs keep their hashes
+        sv = dataclasses.asdict(spec.serving)
+        sv["outages"] = [list(o) for o in spec.serving.outages]
+        sv["fail_decide_calls"] = list(spec.serving.fail_decide_calls)
+        j["serving"] = sv
+    return j
 
 
 def _strict(cls, d: Dict[str, Any]):
@@ -235,6 +310,22 @@ def _policy_from_json(d: Dict[str, Any]) -> PolicySpec:
         forgetting=None if fg is None else _strict(ForgettingSpec, fg))
 
 
+def _serving_from_json(d: Dict[str, Any]) -> ServingSpec:
+    d = dict(d)
+    known = {f.name for f in dataclasses.fields(ServingSpec)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"ServingSpec: unknown keys {sorted(unknown)} "
+                         f"(known: {sorted(known)})")
+    if "outages" in d:
+        d["outages"] = tuple(tuple(int(x) for x in o)
+                             for o in d["outages"])
+    if "fail_decide_calls" in d:
+        d["fail_decide_calls"] = tuple(int(x)
+                                       for x in d["fail_decide_calls"])
+    return ServingSpec(**d)
+
+
 def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
     """Strict inverse of :func:`spec_to_json`. Unknown keys anywhere in
     the document raise ``ValueError``; an unknown / missing ``schema``
@@ -248,7 +339,7 @@ def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
         raise ValueError(f"spec_from_json: schema {schema!r} is not "
                          f"{SPEC_SCHEMA_VERSION!r}")
     known = {"name", "data", "policies", "scenarios", "seeds", "train",
-             "forgetting", "ucb_backend", "summarize"}
+             "forgetting", "ucb_backend", "summarize", "serving"}
     unknown = set(d) - known
     if unknown:
         raise ValueError(f"ExperimentSpec: unknown keys "
@@ -287,6 +378,8 @@ def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
         kw["ucb_backend"] = d["ucb_backend"]
     if "summarize" in d:
         kw["summarize"] = _strict(SummarizeSpec, d["summarize"])
+    if "serving" in d and d["serving"] is not None:
+        kw["serving"] = _serving_from_json(d["serving"])
     return ExperimentSpec(**kw)
 
 

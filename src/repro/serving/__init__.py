@@ -1,5 +1,19 @@
 from repro.serving.engine import ServingEngine
 from repro.serving.batcher import RequestBatcher, Request
 from repro.serving.routed import RoutedServingPool
+from repro.serving.async_engine import AsyncRouterEngine
+from repro.serving.policy_router import DevicePolicyRouter
+from repro.serving.faults import DecideFault, ScriptedFaults
+from repro.serving.storm import run_storm
+from repro.serving.traffic import (
+    TRAFFIC_PATTERNS,
+    outages_from_scenario,
+    wave_sizes,
+)
 
-__all__ = ["ServingEngine", "RequestBatcher", "Request", "RoutedServingPool"]
+__all__ = [
+    "ServingEngine", "RequestBatcher", "Request", "RoutedServingPool",
+    "AsyncRouterEngine", "DevicePolicyRouter", "DecideFault",
+    "ScriptedFaults", "run_storm", "TRAFFIC_PATTERNS",
+    "outages_from_scenario", "wave_sizes",
+]

@@ -1,0 +1,40 @@
+"""Scripted fault injection for the async serving engine (DESIGN.md
+§12.6): deterministic outage windows and decide-call failures, driven by
+the engine's own counters so tests replay the exact same storm every run.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence, Tuple
+
+
+class DecideFault(RuntimeError):
+    """The injected decide-path failure (never escapes the engine)."""
+
+
+class ScriptedFaults:
+    """A fault script against engine-counter time:
+
+    * ``fail_decide_calls`` — decide-call indices (0-based, the engine's
+      ``decide_calls`` counter) whose router call raises
+      :class:`DecideFault` — exercising the engine's catch/degrade path.
+    * ``outages`` — ``(arm, start_wave, end_wave)`` windows applied to
+      the engine health mask by :meth:`apply_wave` at each wave boundary.
+
+    Attach via ``AsyncRouterEngine(fault_hook=faults.on_decide)`` and
+    call ``faults.apply_wave(engine, w)`` per wave.
+    """
+
+    def __init__(self, *, fail_decide_calls: Iterable[int] = (),
+                 outages: Sequence[Tuple[int, int, int]] = ()):
+        self.fail_decide_calls = frozenset(int(i) for i in fail_decide_calls)
+        self.outages = [(int(a), int(s), int(e)) for a, s, e in outages]
+        self.injected_decide_faults = 0
+
+    def on_decide(self, call_idx: int) -> None:
+        if call_idx in self.fail_decide_calls:
+            self.injected_decide_faults += 1
+            raise DecideFault(f"injected decide fault at call {call_idx}")
+
+    def apply_wave(self, engine, wave: int) -> None:
+        for arm, s, e in self.outages:
+            engine.set_arm_health(arm, not (s <= wave < e))

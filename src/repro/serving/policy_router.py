@@ -1,0 +1,254 @@
+"""Device-resident serving router: any `BanditPolicy` behind the async
+engine (DESIGN.md §12.2).
+
+The sim engine (`sim/engine.py`) already runs the whole protocol —
+DECIDE / UPDATE / TRAIN / REBUILD — as jitted device code against
+resident replay tables. This adapter reuses those exact policy callbacks
+for SERVING: router state (net, optimizer, A^-1, outcome ring buffers)
+never leaves the device, requests carry only their sample id (features
+are gathered on device from the resident tables — zero host feature
+transfer per request), and each microbatch is ONE jitted decide call and
+ONE jitted update call regardless of batch width.
+
+Outcome buffers are a (T, S) ring: row = wave mod capacity, S = the
+microbatch width. `end_slice` runs the policy's chunked replay SGD +
+Cholesky rebuild over everything the ring holds, with the same PRNG
+discipline as the scanned runner — a wave-per-slice serving run is
+bit-identical to `run_policy_device` (tests/test_serving_async.py).
+
+Fallback remaps (a request rerouted after decide because its arm went
+down mid-flight) are EXCLUDED from learning by default: the decide aux
+(features g, safe mean) describes the decided arm, and the adapter is
+policy-agnostic so it cannot recompute aux for an arbitrary policy.
+Remapped rows get weight 0 and are counted by the engine; the common
+outage path never hits this — `decide` takes the live availability mask,
+so availability-aware policies never pick a down arm in the first place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.policies import (
+    VANILLA_FORGETTING,
+    BanditPolicy,
+    ForgettingConfig,
+    PolicyCtx,
+)
+
+_STATIC = ("policy", "fcfg", "train_chunks", "batch_size")
+
+
+def _ctx(tables, hyp, *, env_idx=None, cum0=None, t=None, idx=None,
+         mask=None, avail=None, fcfg=VANILLA_FORGETTING, train_chunks=1,
+         batch_size=256):
+    return PolicyCtx(tables=tables, env_idx=env_idx, cum0=cum0, hyp=hyp,
+                     eff=None, t=t, idx=idx, mask=mask, avail=avail,
+                     delay=0, fcfg=fcfg, train_chunks=train_chunks,
+                     batch_size=batch_size)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def _srv_init(policy: BanditPolicy, key, tables, hyp, env_idx,
+              fcfg=VANILLA_FORGETTING, train_chunks=1, batch_size=256):
+    tables = policy.prepare(tables, hyp)
+    cum0 = jnp.zeros(env_idx.shape[0] + 1, jnp.int32)
+    ctx = _ctx(tables, hyp, env_idx=env_idx, cum0=cum0, fcfg=fcfg,
+               train_chunks=train_chunks, batch_size=batch_size)
+    state, key = policy.init(key, ctx)
+    return state, key, tables
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def _srv_decide(policy: BanditPolicy, state, key, tables, hyp, ids, avail,
+                t, fcfg=VANILLA_FORGETTING, train_chunks=1, batch_size=256):
+    batch = {"x_emb": tables["x_emb"][ids], "x_feat": tables["x_feat"][ids],
+             "domain": tables["domain"][ids]}
+    ctx = _ctx(tables, hyp, t=t, idx=ids, avail=avail, fcfg=fcfg,
+               train_chunks=train_chunks, batch_size=batch_size)
+    return policy.decide(state, key, batch, ctx)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def _srv_update(policy: BanditPolicy, state, env_idx, tables, hyp, row,
+                ids, a, r, mask, perm, aux, fcfg=VANILLA_FORGETTING,
+                train_chunks=1, batch_size=256):
+    """One microbatch's feedback write + A^-1 maintenance. ``perm``
+    compacts learnable rows to the row prefix (ring rows keep the
+    prefix-validity layout `_sample_valid` assumes); identity when
+    nothing was remapped or shed, so the permuted gather is a no-op and
+    the sim-parity path stays bit-exact."""
+    n = perm.shape[0]
+    ids, a, r, mask = ids[perm], a[perm], r[perm], mask[perm]
+    aux = jax.tree_util.tree_map(
+        lambda x: x[perm] if (getattr(x, "ndim", 0) >= 1
+                              and x.shape[0] == n) else x, aux)
+    env_idx = env_idx.at[row].set(ids)
+    batch = {"x_emb": tables["x_emb"][ids], "x_feat": tables["x_feat"][ids],
+             "domain": tables["domain"][ids]}
+    ctx = _ctx(tables, hyp, env_idx=env_idx, t=row, idx=ids, mask=mask,
+               fcfg=fcfg, train_chunks=train_chunks, batch_size=batch_size)
+    state = policy.update(state, batch, a, r, ctx, aux)
+    return state, env_idx
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def _srv_train(policy: BanditPolicy, state, key, tables, hyp, env_idx,
+               cum0, t, fcfg=VANILLA_FORGETTING, train_chunks=1,
+               batch_size=256):
+    ctx = _ctx(tables, hyp, env_idx=env_idx, cum0=cum0, t=t, fcfg=fcfg,
+               train_chunks=train_chunks, batch_size=batch_size)
+    state, key = policy.train(state, key, ctx)
+    state = policy.rebuild(state, ctx)
+    return state, key
+
+
+class DevicePolicyRouter:
+    """Serving face of the `BanditPolicy` zoo (class docstring above).
+
+    ``tables`` is the resident-table dict (`sim.engine._tables(env)`);
+    ``slice_width`` is the microbatch capacity S (decide pads shorter
+    batches); ``capacity_slices`` is the ring depth T. The PRNG
+    discipline mirrors the scanned runner exactly: one split per decide
+    call, train splitting further from the carried stream."""
+
+    serving_v2 = True
+
+    def __init__(self, policy: BanditPolicy, hypers: Any, tables: Dict,
+                 *, seed: int = 0, slice_width: int = 256,
+                 capacity_slices: int = 256, batch_size: int = 256,
+                 train_chunks: int = 1,
+                 fcfg: ForgettingConfig = VANILLA_FORGETTING):
+        self.policy = policy
+        self.hyp = hypers
+        self.S = int(slice_width)
+        self.T = int(capacity_slices)
+        self.batch_size = int(batch_size)
+        self.train_chunks = int(train_chunks)
+        self.fcfg = fcfg
+        self.num_actions = int(np.asarray(tables["reward"]).shape[1])
+        env_idx = jnp.zeros((self.T, self.S), jnp.int32)
+        self.state, self._key, self.tables = _srv_init(
+            policy, jax.random.PRNGKey(seed), tables, hypers, env_idx,
+            fcfg=fcfg, train_chunks=train_chunks, batch_size=batch_size)
+        self._env_idx = env_idx
+        self._counts = np.zeros(self.T, np.int64)  # learned rows per ring row
+        self.wave = 0          # microbatches absorbed (ring write cursor)
+        self.slices = 0        # end_slice count (0 = warm)
+
+    def _statics(self):
+        return dict(fcfg=self.fcfg, train_chunks=self.train_chunks,
+                    batch_size=self.batch_size)
+
+    def warmup(self) -> None:
+        """Compile both decide variants (mask-free fast path and masked
+        outage path) with a throwaway key, so jit compile time never
+        lands in a storm's decide-latency samples. State and PRNG stream
+        are untouched — compilation caches by shape, not value."""
+        k, _ = jax.random.split(jax.random.PRNGKey(0))
+        ids = jnp.zeros(self.S, jnp.int32)
+        for av in (None, jnp.ones(self.num_actions, jnp.float32)):
+            a, _ = _srv_decide(self.policy, self.state, k, self.tables,
+                               self.hyp, ids, av, jnp.int32(0),
+                               **self._statics())
+            jax.block_until_ready(a)
+
+    # ----------------------------------------------------------- DECIDE --
+    def decide(self, x_emb=None, x_feat=None, domain=None, *,
+               sample_idx=None, avail=None) -> Dict:
+        """Decide for a microbatch of replay sample ids. ``avail`` is the
+        engine's live arm-health mask ((K,) float, 1 = up); None or
+        all-up takes the stationary fast trace (bit-identical to the sim
+        scan's no-scenario path)."""
+        ids = np.asarray(sample_idx, np.int64).reshape(-1)
+        B = ids.size
+        if not 0 < B <= self.S:
+            raise ValueError(f"microbatch size {B} outside (0, {self.S}]")
+        ids_pad = np.zeros(self.S, np.int32)
+        ids_pad[:B] = ids
+        av = None
+        if avail is not None and not np.all(np.asarray(avail) > 0):
+            av = jnp.asarray(avail, jnp.float32)
+        self._key, k = jax.random.split(self._key)
+        a, aux = _srv_decide(
+            self.policy, self.state, k, self.tables, self.hyp,
+            jnp.asarray(ids_pad), av, jnp.int32(min(self.slices, 1)),
+            **self._statics())
+        return {"action": np.asarray(a)[:B].astype(np.int32),
+                "ids": ids, "aux": aux, "n": B}
+
+    # ----------------------------------------------------------- UPDATE --
+    def update_wave(self, decision: Dict, served, rewards,
+                    learn_mask=None) -> int:
+        """Absorb one decided microbatch's outcomes into the ring.
+        ``served`` are the arms actually run (== decided unless a
+        fallback remapped); ``learn_mask`` marks rows to learn from
+        (sheds and remaps excluded by the engine). Returns the number of
+        rows learned."""
+        B = decision["n"]
+        served = np.asarray(served, np.int32).reshape(-1)
+        rewards = np.asarray(rewards, np.float32).reshape(-1)
+        assert served.size == B and rewards.size == B
+        learn = (np.ones(B, bool) if learn_mask is None
+                 else np.asarray(learn_mask, bool).reshape(-1))
+        decided = decision["action"]
+        learn = learn & (served == decided)   # remapped rows: aux is stale
+        order = np.argsort(~learn, kind="stable")
+        perm = np.concatenate([order, np.arange(B, self.S)]).astype(np.int32)
+        pad = lambda v, dt: np.concatenate(  # noqa: E731
+            [v, np.zeros(self.S - B, dt)]).astype(dt)
+        row = self.wave % self.T
+        self.state, self._env_idx = _srv_update(
+            self.policy, self.state, self._env_idx, self.tables, self.hyp,
+            jnp.int32(row), jnp.asarray(pad(decision["ids"], np.int32)),
+            jnp.asarray(pad(served, np.int32)),
+            jnp.asarray(pad(rewards, np.float32)),
+            jnp.asarray(pad(learn.astype(np.float32), np.float32)),
+            jnp.asarray(perm), decision["aux"], **self._statics())
+        self._counts[row] = int(learn.sum())
+        self.wave += 1
+        return int(learn.sum())
+
+    # ------------------------------------------------- TRAIN + REBUILD --
+    def end_slice(self, epochs: Optional[int] = None) -> None:
+        """Replay-SGD + A^-1 rebuild over the ring (one jitted dispatch);
+        ends the warm phase. ``epochs`` is accepted for interface parity
+        with the host router — the SGD budget here is the constructor's
+        static ``train_chunks``."""
+        del epochs
+        if self.wave > 0:
+            t = min(self.wave, self.T) - 1
+            cum0 = jnp.asarray(np.concatenate(
+                [[0], np.cumsum(self._counts)]).astype(np.int32))
+            self.state, self._key = _srv_train(
+                self.policy, self.state, self._key, self.tables, self.hyp,
+                self._env_idx, cum0, jnp.int32(t), **self._statics())
+            # sync here: the train pause owns its own wall time, instead
+            # of bleeding into the next decide's latency sample
+            jax.block_until_ready(self.state)
+        self.slices += 1
+
+    # --------------------------------------------------------- SNAPSHOT --
+    def state_dict(self) -> Dict:
+        return {
+            "arrays": {
+                "state": jax.tree_util.tree_map(np.asarray, self.state),
+                "key": np.asarray(self._key),
+                "env_idx": np.asarray(self._env_idx),
+                "counts": self._counts.copy(),
+            },
+            "meta": {"wave": int(self.wave), "slices": int(self.slices)},
+        }
+
+    def load_state_dict(self, d: Dict) -> None:
+        arrays = d["arrays"]
+        self.state = jax.tree_util.tree_map(jnp.asarray, arrays["state"])
+        self._key = jnp.asarray(arrays["key"])
+        self._env_idx = jnp.asarray(arrays["env_idx"])
+        self._counts = np.asarray(arrays["counts"], np.int64).copy()
+        self.wave = int(d["meta"]["wave"])
+        self.slices = int(d["meta"]["slices"])

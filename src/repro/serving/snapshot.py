@@ -1,0 +1,79 @@
+"""Router-state snapshot/restore (DESIGN.md §12.4).
+
+Format ``router-snapshot-v1``: one ``.npz`` holding every array leaf of
+the router's state pytree (nested dict/tuple paths flattened to
+``a/b/0/c`` keys) plus a ``.json`` sidecar for the non-array metadata
+(host RNG state, warm flag, engine counters, schema tag). No pickle —
+both files are inspectable, diffable, and loadable across processes.
+
+A snapshot restores onto a FRESHLY CONSTRUCTED router of the same
+configuration: :func:`unflatten_state` rebuilds the nested pytree against
+the new router's own state structure, so a wrong-shape or wrong-config
+restore fails loudly instead of corrupting state.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+SCHEMA = "router-snapshot-v1"
+_SEP = "/"
+
+
+def flatten_state(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten a nested dict/tuple/list pytree of arrays to path keys."""
+    flat: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        items = [(str(k), v) for k, v in sorted(tree.items())]
+    elif isinstance(tree, (tuple, list)):
+        items = [(str(i), v) for i, v in enumerate(tree)]
+    else:
+        flat[prefix.rstrip(_SEP)] = np.asarray(tree)
+        return flat
+    for k, v in items:
+        if _SEP in k:
+            raise ValueError(f"state key {k!r} contains the path separator")
+        flat.update(flatten_state(v, f"{prefix}{k}{_SEP}"))
+    return flat
+
+
+def unflatten_state(flat: Dict[str, np.ndarray], like: Any,
+                    prefix: str = "") -> Any:
+    """Rebuild ``flat`` into the structure of the reference pytree
+    ``like`` (a freshly initialized router's state). Missing or extra
+    keys raise — a snapshot must match the target's structure exactly."""
+    if isinstance(like, dict):
+        return {k: unflatten_state(flat, v, f"{prefix}{k}{_SEP}")
+                for k, v in like.items()}
+    if isinstance(like, (tuple, list)):
+        seq = [unflatten_state(flat, v, f"{prefix}{i}{_SEP}")
+               for i, v in enumerate(like)]
+        return type(like)(seq)
+    key = prefix.rstrip(_SEP)
+    if key not in flat:
+        raise KeyError(f"snapshot missing state leaf {key!r}")
+    return flat[key]
+
+
+def save_snapshot(path, arrays: Any, meta: Dict) -> None:
+    """Write ``<path>.npz`` (array leaves) + ``<path>.json`` (metadata)."""
+    path = Path(path)
+    flat = flatten_state(arrays)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez_compressed(path.with_suffix(".npz"), **flat)
+    manifest = {"schema": SCHEMA, "n_leaves": len(flat), **meta}
+    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+
+
+def load_snapshot(path) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Read back (flat arrays, metadata); validates the schema tag."""
+    path = Path(path)
+    with np.load(path.with_suffix(".npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = json.loads(path.with_suffix(".json").read_text())
+    if meta.get("schema") != SCHEMA:
+        raise ValueError(f"unknown snapshot schema {meta.get('schema')!r}")
+    return flat, meta

@@ -1,0 +1,117 @@
+"""Traffic generation for the serving engine (DESIGN.md §12.5).
+
+Arrival patterns shape a total request budget into per-wave arrival
+counts — steady load, random bursts, a diurnal curve, a flash crowd —
+and the sim scenario engine (`sim/scenarios.py`) doubles as the outage
+generator: a scenario's availability / zero-quality windows map onto
+announced arm-outage windows for the engine's health mask, so the same
+declarative non-stationarity that drives the protocol studies drives the
+serving storms (the `arm_outage` scenario becomes the cascading-outage
+storm, `arm_arrival` the capacity-ramp storm).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.sim.scenarios import make_scenario
+
+
+def _steady(n_waves: int, rng) -> np.ndarray:
+    return np.ones(n_waves)
+
+
+def _bursts(n_waves: int, rng) -> np.ndarray:
+    """Low baseline with random 8x spikes on ~1/6 of the waves."""
+    w = np.ones(n_waves)
+    spikes = rng.random(n_waves) < 1 / 6
+    if not spikes.any():
+        spikes[int(rng.integers(0, n_waves))] = True
+    w[spikes] = 8.0
+    return w
+
+
+def _diurnal(n_waves: int, rng) -> np.ndarray:
+    """One day-night cycle across the trace: trough at 1/5 of the peak."""
+    phase = np.linspace(0, 2 * np.pi, n_waves, endpoint=False)
+    return 0.6 - 0.4 * np.cos(phase)
+
+
+def _flash_crowd(n_waves: int, rng) -> np.ndarray:
+    """Steady load, then a 10x crowd arriving over ~1/8 of the trace
+    starting at the 1/3 mark, decaying geometrically."""
+    w = np.ones(n_waves)
+    start = n_waves // 3
+    width = max(n_waves // 8, 1)
+    for i in range(start, n_waves):
+        decay = 0.5 ** max(0, (i - start - width) / max(width, 1))
+        w[i] += 9.0 * decay if i >= start else 0.0
+    return w
+
+
+TRAFFIC_PATTERNS = {
+    "steady": _steady,
+    "bursts": _bursts,
+    "diurnal": _diurnal,
+    "flash_crowd": _flash_crowd,
+}
+
+
+def wave_sizes(pattern: str, n_requests: int, n_waves: int, *,
+               seed: int = 0) -> np.ndarray:
+    """(n_waves,) int arrival counts summing exactly to ``n_requests``."""
+    if pattern not in TRAFFIC_PATTERNS:
+        raise ValueError(f"unknown traffic pattern {pattern!r}; "
+                         f"known: {sorted(TRAFFIC_PATTERNS)}")
+    if n_requests < n_waves:
+        raise ValueError(f"need >= 1 request per wave "
+                         f"({n_requests} requests, {n_waves} waves)")
+    w = TRAFFIC_PATTERNS[pattern](n_waves, np.random.default_rng(seed))
+    sizes = np.maximum(1, np.floor(w / w.sum() * n_requests)).astype(np.int64)
+    # distribute the rounding remainder over the largest waves
+    order = np.argsort(-w, kind="stable")
+    rem = n_requests - int(sizes.sum())
+    step = 1 if rem > 0 else -1
+    i = 0
+    while rem != 0:
+        t = order[i % n_waves]
+        if step > 0 or sizes[t] > 1:
+            sizes[t] += step
+            rem -= step
+        i += 1
+    return sizes
+
+
+def outages_from_scenario(scenario, env, n_waves: int
+                          ) -> List[Tuple[int, int, int]]:
+    """Map a sim scenario's per-slice arm masks onto announced outage
+    windows ``(arm, start_wave, end_wave)`` for the engine health mask.
+    Both the availability mask (announced arrivals/exits) and hard
+    zero-quality windows (the `arm_outage` cascades) count as DOWN —
+    serving a known-dead arm is an outage whether or not the protocol
+    study treats it as announced."""
+    scn = (make_scenario(env, scenario) if isinstance(scenario, str)
+           else scenario)
+    down = np.zeros((n_waves, env.K), bool)
+    if scn.tables is not None:
+        slice_down = (np.asarray(scn.tables.avail) <= 0) | (
+            np.asarray(scn.tables.quality_mult) <= 0)   # (T, K)
+        T = slice_down.shape[0]
+        rows = np.minimum((np.arange(n_waves) * T) // n_waves, T - 1)
+        down = slice_down[rows]
+    out: List[Tuple[int, int, int]] = []
+    for k in range(env.K):
+        edges = np.flatnonzero(np.diff(np.r_[0, down[:, k], 0]))
+        for s, e in zip(edges[::2], edges[1::2]):
+            out.append((int(k), int(s), int(e)))
+    return out
+
+
+def outage_health(outages, n_arms: int, wave: int) -> Dict[int, bool]:
+    """Arm -> up? at ``wave`` under explicit outage windows."""
+    up = {k: True for k in range(n_arms)}
+    for arm, s, e in outages:
+        if s <= wave < e:
+            up[int(arm)] = False
+    return up

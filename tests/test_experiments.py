@@ -322,3 +322,87 @@ def test_result_artifact_schema(envs, tmp_path):
     doc = json.loads(path.read_text())
     assert doc["schema"] == "experiment-result-v1"
     assert spec_from_json(doc["spec"]) == spec   # artifact reruns as-is
+
+
+# ---------------------------------------------------------------- serving --
+def test_serving_spec_codec_and_invariants():
+    from repro.experiments import ServingSpec
+
+    spec = make_preset("serving_storm")
+    doc = json.loads(json.dumps(spec_to_json(spec)))
+    assert spec_from_json(doc) == spec
+    # the key is emitted only when set: pre-serving specs (and their
+    # hashes) are untouched by the schema extension
+    assert "serving" not in spec_to_json(make_preset("paper_table1"))
+    with pytest.raises(ValueError, match="unknown keys"):
+        bad = spec_to_json(spec)
+        bad["serving"]["p99_decide_sec"] = 1
+        spec_from_json(bad)
+    with pytest.raises(ValueError, match="requests >= waves"):
+        ServingSpec(requests=5, waves=10)
+    with pytest.raises(ValueError, match="outage"):
+        ServingSpec(outages=((0, 9, 3),))
+    with pytest.raises(ValueError, match="max_shed_fraction"):
+        ServingSpec(max_shed_fraction=1.5)
+    with pytest.raises(ValueError, match="exactly one policy"):
+        ExperimentSpec(name="s", serving=ServingSpec(),
+                       policies=(PolicySpec("neuralucb"),
+                                 PolicySpec("greedy")))
+    with pytest.raises(ValueError, match="scenarios"):
+        ExperimentSpec(name="s", serving=ServingSpec(),
+                       scenarios=("price_shock",))
+    # --set paths reach into the serving block (the CI-smoke shrink)
+    small = apply_overrides(spec, {"serving.requests": 2000,
+                                   "serving.decide_batch": 64})
+    assert small.serving.requests == 2000
+    assert small.serving.decide_batch == 64
+    assert small.serving.outages == spec.serving.outages
+
+
+def test_serving_compile_validates(envs):
+    henv, denv = envs
+    spec = make_preset("serving_storm", {"serving.pattern": "tsunami"})
+    with pytest.raises(ValueError, match="traffic pattern"):
+        compile_spec(spec, env=denv, host_env=henv)
+    spec = make_preset("serving_storm", {"serving.waves": 10,
+                                         "serving.outages": []})
+    spec = apply_overrides(spec, {"serving.outages": [[99, 0, 2]]})
+    with pytest.raises(ValueError, match="out of range"):
+        compile_spec(spec, env=denv, host_env=henv)
+    spec = make_preset("serving_storm")
+    spec = apply_overrides(spec, {"serving.waves": 10})
+    with pytest.raises(ValueError, match="past the last wave"):
+        compile_spec(spec, env=denv, host_env=henv)
+
+
+def test_serving_storm_preset_runs_and_gates(envs, tmp_path):
+    """The serving_storm preset compiled against a tiny env: zero
+    dispatches (the storm replaces the sweeps), one serving cell with
+    the gate verdicts, `ExperimentResult.ok` wired to them, and the
+    artifact round-trips."""
+    henv, denv = envs
+    spec = make_preset("serving_storm", {
+        "train.train_steps": 8, "train.batch_size": 32,
+        "serving.requests": 1200, "serving.waves": 40,
+        "serving.decide_batch": 64, "serving.queue_capacity": 512,
+        "serving.p99_decide_ms": 5000})
+    plan = compile_spec(spec, env=denv, host_env=henv)
+    assert plan.calls == () and plan.serving_policy[0] == "neuralucb"
+    res = run_plan(plan)
+    cell = res.cells[0]
+    assert cell["scenario"] == "serving:flash_crowd"
+    sv = cell["serving"]
+    assert sv["lost_requests"] == 0
+    assert sv["completed"] + sv["shed"] == 1200
+    assert sv["decide_errors"] == 1          # the injected decide fault
+    assert cell["serving_gates"]["zero_lost"]
+    assert cell["serving_ok"] and res.ok
+    path = tmp_path / "storm.json"
+    res.save(str(path))
+    doc = json.loads(path.read_text())
+    assert spec_from_json(doc["spec"]) == spec
+
+    # a failed gate must fail the artifact
+    bad = dict(cell, serving_ok=False)
+    res.cells[0] = bad
+    assert not res.ok

@@ -66,6 +66,57 @@ def test_batcher_age_resets_after_service():
     assert b.next_batch() is None
 
 
+def test_batcher_flush_deadline_armed_by_arrival_not_epoch():
+    """Regression (ISSUE satellite): the flush deadline used to be an
+    epoch timer armed at the last flush, so after an empty-then-burst
+    arrival the stale deadline had already expired and the first batch
+    flushed immediately, undersized. Deadlines must arm per request
+    from its OWN arrival time: an idle period leaves nothing armed."""
+    now = [0.0]
+    b = RequestBatcher(max_batch=4, pad_to_multiple=1, flush_timeout=1.0,
+                       clock=lambda: now[0])
+    assert b.next_batch() is None
+    now[0] = 50.0                    # long idle gap, then a burst
+    b.submit(0, Request(tokens=np.array([1])))
+    b.submit(0, Request(tokens=np.array([2])))
+    # stale-deadline bug: a deadline armed at t=0 expired long ago and
+    # this pair would flush here, undersized
+    assert b.next_batch() is None
+    now[0] = 50.4
+    b.submit(0, Request(tokens=np.array([3])))
+    b.submit(0, Request(tokens=np.array([4])))
+    target, reqs, _ = b.next_batch()         # full batch: always ready
+    assert target == 0 and len(reqs) == 4
+    # a straggler flushes when ITS OWN age crosses the window...
+    b.submit(0, Request(tokens=np.array([5])))
+    now[0] = 51.3
+    assert b.next_batch() is None            # 0.9s old < 1.0s window
+    now[0] = 51.5
+    _, reqs, _ = b.next_batch()
+    assert len(reqs) == 1
+    # ...and force (drain) overrides the window
+    b.submit(0, Request(tokens=np.array([6])))
+    _, reqs, _ = b.next_batch(force=True)
+    assert len(reqs) == 1
+    assert b.pending() == 0
+
+
+def test_batcher_flush_timeout_selects_among_ready_queues_only():
+    """A queue inside its flush window is waiting, not starving: it is
+    skipped (without aging toward starvation service) until ready."""
+    now = [0.0]
+    b = RequestBatcher(max_batch=4, pad_to_multiple=1, flush_timeout=1.0,
+                       clock=lambda: now[0])
+    b.submit(0, Request(tokens=np.array([1])))   # partial, in-window
+    for _ in range(4):
+        b.submit(1, Request(tokens=np.array([2])))
+    target, reqs, _ = b.next_batch()
+    assert target == 1 and len(reqs) == 4        # the full queue wins
+    assert b.next_batch() is None                # 0 still inside window
+    now[0] = 2.0
+    assert b.next_batch()[0] == 0
+
+
 @pytest.fixture(scope="module")
 def tiny_engine():
     cfg = dataclasses.replace(get_config("llama3_2_3b").reduced(),

@@ -356,6 +356,55 @@ def bench_experiment_compile(n_samples: int = 1500,
     return {"experiment_compile": out}
 
 
+def bench_offline_pretrain(henv: RouterBenchSim, denv: DeviceReplayEnv,
+                           corpus_size: int = 20_000,
+                           pretrain_steps: int = 512,
+                           train_steps: int = 32) -> Dict:
+    """Lifecycle bench (DESIGN.md §13.3): offline pretraining wall time
+    per hooked policy plus the warm-vs-cold cumulative-reward delta
+    over the EARLY window — the first 20% of slices of the
+    paper_table1-shaped stream, where a warm start must pay off before
+    the cold online learner catches up. Warm and cold runs share the
+    seed (identical PRNG streams); warm additionally drops the slice-0
+    uniform warm-up (``warm_slice=False``) so the pretrained state
+    routes from the first request."""
+    from repro.data.logged import replay_corpus
+    from repro.sim import pretrain_policy_state
+
+    cfg = UtilityNetConfig(emb_dim=henv.x_emb.shape[1],
+                           num_actions=henv.K)
+    corpus = replay_corpus(denv, corpus_size, seed=0)
+    n_early = max(1, int(denv.mask.shape[0]) // 5)
+    out: Dict = {"corpus_size": corpus.n, "pretrain_steps": pretrain_steps,
+                 "early_slices": n_early, "policies": {}}
+    for name in ("neuralucb", "sup_winrate", "linucb"):
+        pol_c, hyp = make_policy(name, denv, cfg)
+        try:
+            pol_w, hyp = make_policy(name, denv, cfg, warm_slice=False)
+        except TypeError:
+            pol_w = pol_c
+        t0 = time.perf_counter()
+        state = jax.block_until_ready(pretrain_policy_state(
+            denv, pol_w, hyp, corpus, seed=0, steps=pretrain_steps))
+        pretrain_s = time.perf_counter() - t0
+        res_w = run_policy_device(denv, pol_w, hyp, seed=0,
+                                  train_steps=train_steps,
+                                  init_state=state)
+        res_c = run_policy_device(denv, pol_c, hyp, seed=0,
+                                  train_steps=train_steps)
+        warm = res_w["cum_reward"][n_early - 1]
+        cold = res_c["cum_reward"][n_early - 1]
+        out["policies"][name] = {
+            "pretrain_s": pretrain_s,
+            "early_cum_reward_warm": warm,
+            "early_cum_reward_cold": cold,
+            "early_delta": warm - cold,
+            "final_cum_reward_warm": res_w["cum_reward"][-1],
+            "final_cum_reward_cold": res_c["cum_reward"][-1],
+        }
+    return {"offline_pretrain": out}
+
+
 def _bench_subprocess(args, n_seeds: int) -> Dict:
     """Run a bench section in a subprocess with the host's CPU cores
     exposed as XLA host-platform devices (sweeps shard their lane axis
@@ -502,6 +551,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
     zoo_runs = bench_policy_zoo_subprocess(
         zoo_samples, zoo_slices, zoo_seeds, nucb_train_steps, nucb_batch)
     compile_runs = bench_experiment_compile()
+    pretrain_runs = bench_offline_pretrain(henv, denv)
 
     return {
         # headline: protocol-engine throughput on the paper-style workload
@@ -539,11 +589,12 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
         **scen_runs,
         **zoo_runs,
         **compile_runs,
+        **pretrain_runs,
     }
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine_v5", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v6", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -576,6 +627,11 @@ def run(refresh: bool = False, **kw):
         rows.append((f"spec_compile/{name}", round(c["compile_s"], 5),
                      f"{c['n_dispatches']} disp",
                      f"+{c['extra_dispatches']}"))
+    for name, p in out["offline_pretrain"]["policies"].items():
+        rows.append((f"pretrain/{name}", round(p["pretrain_s"], 3),
+                     f"{p['early_cum_reward_warm']:.0f}w/"
+                     f"{p['early_cum_reward_cold']:.0f}c",
+                     f"{p['early_delta']:+.0f}"))
     rows.append(("sweep_device_decisions_per_s",
                  round(out["baseline_sweep"]["device_decisions_per_s"]),
                  "", ""))

@@ -182,6 +182,29 @@ def _print_result(section: str, result: ExperimentResult,
         print(format_cells(result.cells_for(scen)))
     if oracle is not None:
         print(f"{'oracle (ref)':<18}{'':>9}{oracle:>16.4f}")
+    pt = m.get("pretrain")
+    if pt:
+        hits = sum(v["cache_hit"] for v in pt["labels"].values())
+        secs = sum(v["pretrain_s"] for v in pt["labels"].values())
+        print(f"\npretrain: {len(pt['labels'])} warm label"
+              f"{'s' if len(pt['labels']) != 1 else ''} on a "
+              f"{pt['corpus_size']}-row {pt['behavior']!r} corpus "
+              f"({hits} cache hit{'s' if hits != 1 else ''}, "
+              f"{secs:.1f}s)")
+    ope = m.get("ope")
+    if ope:
+        print(f"\nope: {len(ope['targets'])} targets scored from one "
+              f"{ope['behavior']!r} log (n={ope['n']}) -> parity "
+              f"{'ok' if ope['parity_ok'] else 'FAIL'}")
+        for c in result.cells_for("offline"):
+            e = c["ope"]
+            pin = ""
+            if "ope_ok" in c:
+                pin = (f"  vs on-policy {c['onpolicy_value']:.4f} "
+                       f"[{'ok' if c['ope_ok'] else 'FAIL'}]")
+            print(f"  {c['policy']:<18} dr={e['dr']:.4f} "
+                  f"snips={e['snips']:.4f} ips={e['ips']:.4f} "
+                  f"ess={e['ess']:.0f}{pin}")
 
 
 def _table_checks(result: ExperimentResult) -> bool:

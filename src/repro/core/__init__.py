@@ -9,9 +9,10 @@ from repro.core.utilitynet import (
 )
 from repro.core.neuralucb import init_ainv, sherman_morrison_update, rebuild_ainv
 from repro.core.policy import NeuralUCBRouter
-from repro.core.protocol import run_protocol
+from repro.core.protocol import estimate_offline, run_protocol
 
 __all__ = [
+    "estimate_offline",
     "utility_reward",
     "normalize_cost",
     "init_utilitynet",

@@ -124,7 +124,7 @@ def summarize_sweep(sweep: Dict, skip_first: bool = True) -> List[Dict]:
     for g in range(G):
         p = {f: float(np.asarray(v).reshape(-1)[g]) for f, v in grid.items()}
         for key in ("avg_reward", "avg_cost", "avg_quality",
-                    "oracle_avg_reward"):
+                    "oracle_avg_reward", "mean_logp"):
             if key in sweep:
                 per_seed = np.asarray(sweep[key], np.float64)[g, :, s0:]
                 p[f"{key}_mean"] = float(per_seed.mean(axis=1).mean())
@@ -138,3 +138,73 @@ def summarize_sweep(sweep: Dict, skip_first: bool = True) -> List[Dict]:
             p["final_cum_reward_mean"] = float(cum.mean())
         points.append(p)
     return points
+
+
+# ------------------------------- off-policy evaluation (DESIGN.md §13.4) --
+def estimate_offline(logged, target_probs: np.ndarray, *,
+                     qhat: Optional[np.ndarray] = None,
+                     clip: Optional[float] = None) -> Dict[str, float]:
+    """Counterfactual value estimates of a TARGET policy from one logged
+    run (Causal LLM Routing, PAPERS.md): score a policy that never ran.
+
+    ``logged`` is a :class:`repro.data.logged.LoggedInteractions` from a
+    propensity-aware producer; ``target_probs`` (n, K) is the target
+    policy's action distribution per logged context (rows sum to 1);
+    ``qhat`` (n, K), when given, is a direct-method reward model enabling
+    the doubly-robust estimator. Returns per-request value estimates:
+
+    * ``ips``   — inverse-propensity scoring, mean(w_i * r_i) with
+      w_i = pi_t(a_i | x_i) / pi_b(a_i | x_i). Unbiased, high variance.
+    * ``snips`` — self-normalized IPS, sum(w r) / sum(w). Biased
+      O(1/n), far lower variance; invariant to propensity scale.
+    * ``dm``    — direct method, mean_i sum_k pi_t(k|x_i) qhat[i, k]
+      (NaN without ``qhat``). Biased by the reward model.
+    * ``dr``    — doubly robust, dm + mean(w (r - qhat[i, a_i])).
+      Unbiased when EITHER the propensities or qhat are right.
+    * ``ess``   — Kish effective sample size of the weights, the
+      reliability diagnostic (ess << n means the log barely covers the
+      target).
+
+    ``clip`` truncates importance weights at that value (bias-variance
+    knob; SNIPS/DR use the clipped weights too). Fails loudly on logs
+    without propensities — a producer that cannot state pi_b cannot feed
+    counterfactual estimates (satellite b)."""
+    if not logged.has_propensities:
+        raise ValueError(
+            f"estimate_offline: log from {logged.behavior!r} carries no "
+            "propensities (logp=None) — only propensity-aware producers "
+            "(record_log runs, replay_corpus, serving to_logged) can "
+            "feed counterfactual estimates")
+    n = logged.n
+    tp = np.asarray(target_probs, np.float64)
+    if tp.shape != (n, logged.num_actions):
+        raise ValueError(
+            f"estimate_offline: target_probs shape {tp.shape} != "
+            f"(n={n}, K={logged.num_actions})")
+    r = np.asarray(logged.reward, np.float64)
+    a = np.asarray(logged.action)
+    rows = np.arange(n)
+    pb = np.exp(np.asarray(logged.logp, np.float64))
+    w = tp[rows, a] / np.maximum(pb, 1e-12)
+    if clip is not None:
+        w = np.minimum(w, float(clip))
+    out = {
+        "ips": float((w * r).mean()),
+        "snips": float((w * r).sum() / np.maximum(w.sum(), 1e-12)),
+        "ess": float(w.sum() ** 2 / np.maximum((w ** 2).sum(), 1e-12)),
+        "mean_w": float(w.mean()),
+        "n": int(n),
+    }
+    if qhat is None:
+        out["dm"] = float("nan")
+        out["dr"] = float("nan")
+    else:
+        q = np.asarray(qhat, np.float64)
+        if q.shape != (n, logged.num_actions):
+            raise ValueError(
+                f"estimate_offline: qhat shape {q.shape} != "
+                f"(n={n}, K={logged.num_actions})")
+        dm = (tp * q).sum(axis=1).mean()
+        out["dm"] = float(dm)
+        out["dr"] = float(dm + (w * (r - q[rows, a])).mean())
+    return out

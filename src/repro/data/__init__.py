@@ -4,6 +4,12 @@ from repro.data.routerbench import (
     MODEL_POOL,
 )
 from repro.data.encoders import ENCODERS, encode
+from repro.data.logged import (
+    LOGGED_SCHEMA_VERSION,
+    LoggedInteractions,
+    from_run_log,
+    replay_corpus,
+)
 
 __all__ = [
     "RouterBenchSim",
@@ -11,4 +17,8 @@ __all__ = [
     "MODEL_POOL",
     "ENCODERS",
     "encode",
+    "LOGGED_SCHEMA_VERSION",
+    "LoggedInteractions",
+    "from_run_log",
+    "replay_corpus",
 ]

@@ -1,0 +1,216 @@
+"""Logged-interaction datasets for the phased learning lifecycle
+(DESIGN.md §13).
+
+A :class:`LoggedInteractions` is the ONE interchange format between the
+lifecycle phases: the sim scan (``run_policy_device(record_log=True)``),
+the async serving engine (``DevicePolicyRouter.to_logged``), and the
+synthetic RouterBench replay generator (:func:`replay_corpus`) all
+produce it; offline pretraining (``repro.sim.pretrain_policy_state``)
+and off-policy evaluation (``repro.core.protocol.estimate_offline``)
+consume it. One row = one served request: the context (embedding /
+features / domain), the action taken, the realized reward, the
+behavior policy's LOG-propensity of that action (None when the
+producer could not state one), and the slice the request arrived in.
+
+The format is self-contained (contexts are materialized, not table
+references) so a log survives the env it came from; ``sample_idx``
+additionally records replay-table provenance when known, which the OPE
+scorer uses to re-decide targets against the resident tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+LOGGED_SCHEMA_VERSION = "logged-interactions-v1"
+
+
+@dataclasses.dataclass
+class LoggedInteractions:
+    """One logged run (module docstring). ``logp`` is the behavior
+    policy's log-propensity of the LOGGED action — exact for the
+    stochastic zoo members, the declared ε-smoothed value for the
+    deterministic/UCB family (``repro.sim.policies.OPE_SMOOTHING_EPS``),
+    and None when the producer recorded no propensities (such a log can
+    pretrain but not feed ``estimate_offline``)."""
+
+    x_emb: np.ndarray                 # (N, E) float32 context embeddings
+    x_feat: np.ndarray                # (N, F) float32 side features
+    domain: np.ndarray                # (N,) int32 domain ids
+    action: np.ndarray                # (N,) int32 logged arms
+    reward: np.ndarray                # (N,) float32 realized rewards
+    logp: Optional[np.ndarray]        # (N,) float32 behavior log-propensity
+    slice_idx: np.ndarray             # (N,) int32 arrival slice
+    num_actions: int
+    behavior: str = "unknown"         # producing policy / run label
+    sample_idx: Optional[np.ndarray] = None   # (N,) replay-table provenance
+
+    def __post_init__(self):
+        self.x_emb = np.asarray(self.x_emb, np.float32)
+        self.x_feat = np.asarray(self.x_feat, np.float32)
+        self.domain = np.asarray(self.domain, np.int32).reshape(-1)
+        self.action = np.asarray(self.action, np.int32).reshape(-1)
+        self.reward = np.asarray(self.reward, np.float32).reshape(-1)
+        self.slice_idx = np.asarray(self.slice_idx, np.int32).reshape(-1)
+        if self.logp is not None:
+            self.logp = np.asarray(self.logp, np.float32).reshape(-1)
+        if self.sample_idx is not None:
+            self.sample_idx = np.asarray(self.sample_idx,
+                                         np.int64).reshape(-1)
+        n = self.n
+        for name in ("x_feat", "domain", "action", "reward", "slice_idx"):
+            v = getattr(self, name)
+            if v.shape[0] != n:
+                raise ValueError(f"LoggedInteractions: {name} has "
+                                 f"{v.shape[0]} rows, x_emb has {n}")
+        for name in ("logp", "sample_idx"):
+            v = getattr(self, name)
+            if v is not None and v.shape[0] != n:
+                raise ValueError(f"LoggedInteractions: {name} has "
+                                 f"{v.shape[0]} rows, x_emb has {n}")
+        if self.num_actions <= 0:
+            raise ValueError("LoggedInteractions: num_actions must be "
+                             f"positive, got {self.num_actions}")
+        if n and (self.action.min() < 0
+                  or self.action.max() >= self.num_actions):
+            raise ValueError(
+                f"LoggedInteractions: actions outside "
+                f"[0, {self.num_actions}): "
+                f"[{self.action.min()}, {self.action.max()}]")
+        if self.logp is not None and n and self.logp.max() > 1e-6:
+            raise ValueError("LoggedInteractions: logp must be "
+                             f"log-probabilities (<= 0), max is "
+                             f"{self.logp.max()}")
+
+    @property
+    def n(self) -> int:
+        return int(self.x_emb.shape[0])
+
+    @property
+    def has_propensities(self) -> bool:
+        return self.logp is not None
+
+    # ------------------------------------------------------------ slicing --
+    def take(self, rows: np.ndarray,
+             behavior: Optional[str] = None) -> "LoggedInteractions":
+        opt = lambda v: None if v is None else v[rows]  # noqa: E731
+        return LoggedInteractions(
+            x_emb=self.x_emb[rows], x_feat=self.x_feat[rows],
+            domain=self.domain[rows], action=self.action[rows],
+            reward=self.reward[rows], logp=opt(self.logp),
+            slice_idx=self.slice_idx[rows], num_actions=self.num_actions,
+            behavior=behavior or self.behavior,
+            sample_idx=opt(self.sample_idx))
+
+    def subsample(self, size: int, *, seed: int = 0) -> "LoggedInteractions":
+        """Uniform subsample without replacement (identity when the log
+        is already no larger than ``size``)."""
+        if self.n <= size:
+            return self
+        rng = np.random.default_rng(seed)
+        rows = np.sort(rng.choice(self.n, size=size, replace=False))
+        return self.take(rows)
+
+    # ------------------------------------------------------------- device --
+    def to_device(self) -> Dict[str, Any]:
+        """The pretrain-hook view: a dict of device arrays with the
+        per-row loss weights (all ones — padding never reaches a saved
+        log)."""
+        import jax.numpy as jnp
+        return {"x_emb": jnp.asarray(self.x_emb),
+                "x_feat": jnp.asarray(self.x_feat),
+                "domain": jnp.asarray(self.domain),
+                "action": jnp.asarray(self.action),
+                "reward": jnp.asarray(self.reward),
+                "w": jnp.ones((self.n,), jnp.float32)}
+
+    # ---------------------------------------------------------------- I/O --
+    def save(self, path: str) -> None:
+        meta = np.array([LOGGED_SCHEMA_VERSION, self.behavior,
+                         str(self.num_actions)])
+        arrays = {"x_emb": self.x_emb, "x_feat": self.x_feat,
+                  "domain": self.domain, "action": self.action,
+                  "reward": self.reward, "slice_idx": self.slice_idx,
+                  "__meta": meta}
+        if self.logp is not None:
+            arrays["logp"] = self.logp
+        if self.sample_idx is not None:
+            arrays["sample_idx"] = self.sample_idx
+        np.savez_compressed(path, **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "LoggedInteractions":
+        with np.load(path, allow_pickle=False) as z:
+            meta = [str(v) for v in z["__meta"]]
+            if meta[0] != LOGGED_SCHEMA_VERSION:
+                raise ValueError(f"{path}: schema {meta[0]!r} is not "
+                                 f"{LOGGED_SCHEMA_VERSION!r}")
+            return cls(
+                x_emb=z["x_emb"], x_feat=z["x_feat"], domain=z["domain"],
+                action=z["action"], reward=z["reward"],
+                logp=z["logp"] if "logp" in z.files else None,
+                slice_idx=z["slice_idx"], num_actions=int(meta[2]),
+                behavior=meta[1],
+                sample_idx=(z["sample_idx"] if "sample_idx" in z.files
+                            else None))
+
+
+def _slice_of_sample(env) -> np.ndarray:
+    """(n,) arrival slice per replay sample from the env's padded (T, S)
+    index/mask layout."""
+    idx = np.asarray(env.idx)
+    mask = np.asarray(env.mask) > 0
+    out = np.zeros(int(np.asarray(env.reward).shape[0]), np.int32)
+    for t in range(idx.shape[0]):
+        out[idx[t][mask[t]]] = t
+    return out
+
+
+def replay_corpus(env, size: int, *, seed: int = 0,
+                  behavior: str = "random") -> LoggedInteractions:
+    """Synthetic RouterBench replay corpus for offline pretraining: draw
+    ``size`` (context, arm) pairs uniformly WITH replacement from the
+    env's replay tables and read the realized reward off the reward
+    table — i.e. the log a uniform-random production router would have
+    written, with exact propensities log(1/K)."""
+    if size <= 0:
+        raise ValueError(f"replay_corpus: size must be positive, got {size}")
+    reward = np.asarray(env.reward)
+    n, K = reward.shape
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, n, size=size)
+    a = rng.integers(0, K, size=size).astype(np.int32)
+    sl = _slice_of_sample(env)
+    return LoggedInteractions(
+        x_emb=np.asarray(env.x_emb)[ids], x_feat=np.asarray(env.x_feat)[ids],
+        domain=np.asarray(env.domain)[ids], action=a,
+        reward=reward[ids, a],
+        logp=np.full(size, -math.log(K), np.float32),
+        slice_idx=sl[ids], num_actions=K, behavior=behavior,
+        sample_idx=ids)
+
+
+def from_run_log(env, log: Dict[str, np.ndarray],
+                 behavior: str) -> LoggedInteractions:
+    """Shape a scanned run's (T, S) action/logp/reward log (the
+    ``record_log=True`` output of ``repro.sim.run_policy_device``) into a
+    flat :class:`LoggedInteractions` — padded rows (env mask 0) are
+    dropped."""
+    mask = np.asarray(env.mask) > 0                      # (T, S)
+    idx = np.asarray(env.idx)
+    T = mask.shape[0]
+    sl = np.broadcast_to(np.arange(T, dtype=np.int32)[:, None],
+                         mask.shape)
+    ids = idx[mask]
+    return LoggedInteractions(
+        x_emb=np.asarray(env.x_emb)[ids], x_feat=np.asarray(env.x_feat)[ids],
+        domain=np.asarray(env.domain)[ids],
+        action=np.asarray(log["action"])[mask],
+        reward=np.asarray(log["reward"])[mask],
+        logp=np.asarray(log["logp"])[mask],
+        slice_idx=sl[mask],
+        num_actions=int(np.asarray(env.reward).shape[1]),
+        behavior=behavior, sample_idx=ids)

@@ -28,12 +28,16 @@ from repro.experiments.runner import (
     run_plan,
     run_spec,
 )
+from repro.experiments.ope import score_policies_offline
+from repro.experiments.pretrain import build_corpus, pretrained_states
 from repro.experiments.spec import (
     SPEC_SCHEMA_VERSION,
     DataSpec,
     ExperimentSpec,
     ForgettingSpec,
+    OPESpec,
     PolicySpec,
+    PretrainSpec,
     ServingSpec,
     SummarizeSpec,
     TrainSpec,
@@ -56,14 +60,19 @@ __all__ = [
     "ExperimentPlan",
     "ExperimentResult",
     "ForgettingSpec",
+    "OPESpec",
     "PolicySpec",
+    "PretrainSpec",
     "ServingSpec",
     "SummarizeSpec",
     "SweepCall",
     "TrainSpec",
     "PRESETS",
     "apply_overrides",
+    "build_corpus",
     "build_env",
+    "pretrained_states",
+    "score_policies_offline",
     "compile",
     "compile_spec",
     "format_cells",

@@ -32,7 +32,7 @@ from repro.sim import (
     make_policy,
     neuralucb_train_schedule,
 )
-from repro.sim.policies import _no_train
+from repro.sim.policies import _no_pretrain, _no_train
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +68,10 @@ class ExperimentPlan:
     # the storm replaces the sweep dispatches.
     serving_policy: Optional[Tuple[str, BanditPolicy, Any,
                                    ForgettingConfig]] = None
+    # lifecycle mode (spec.pretrain set): expanded label -> warm-start
+    # flag. Labels marked True receive an offline-pretrained init state
+    # from the runner; False labels are the cold controls.
+    pretrain_labels: Optional[Dict[str, bool]] = None
 
     @property
     def n_dispatches(self) -> int:
@@ -134,6 +138,19 @@ def compile_spec(spec: ExperimentSpec, *,
         if ps.policy not in POLICIES:
             raise ValueError(f"unknown policy {ps.policy!r}; "
                              f"registered: {sorted(POLICIES)}")
+    if spec.pretrain is not None and spec.pretrain.behavior != "random" \
+            and spec.pretrain.behavior not in POLICIES:
+        raise ValueError(f"pretrain behavior {spec.pretrain.behavior!r} "
+                         f"is neither 'random' nor a registered policy; "
+                         f"registered: {sorted(POLICIES)}")
+    if spec.ope is not None:
+        if spec.ope.behavior not in POLICIES:
+            raise ValueError(f"ope behavior {spec.ope.behavior!r} not "
+                             f"registered; registered: {sorted(POLICIES)}")
+        for t in spec.ope.targets:
+            if t not in POLICIES:
+                raise ValueError(f"ope target {t!r} not registered; "
+                                 f"registered: {sorted(POLICIES)}")
     if env is None:
         if host_env is None:
             host_env, env = build_env(spec.data)
@@ -143,6 +160,7 @@ def compile_spec(spec: ExperimentSpec, *,
                            num_actions=env.K)
 
     resolved = []   # (label, fspec, policy, grid_hypers, points)
+    pretrain_labels: Dict[str, bool] = {}
     any_train = False
     for ps in spec.policies:
         try:
@@ -154,11 +172,37 @@ def compile_spec(spec: ExperimentSpec, *,
             # spec entry named, not as a bare TypeError
             raise ValueError(f"policy {ps.label!r}: bad override "
                              f"({e})") from e
-        grid_hyp, points = _axis_grid(ps.label, hyp, ps.axes)
         fspec = ps.forgetting if ps.forgetting is not None \
             else spec.forgetting
-        resolved.append((ps.label, fspec, pol, grid_hyp, points))
         any_train = any_train or pol.train is not _no_train
+        hooked = (spec.pretrain is not None
+                  and pol.pretrain is not _no_pretrain)
+        if not hooked:
+            grid_hyp, points = _axis_grid(ps.label, hyp, ps.axes)
+            resolved.append((ps.label, fspec, pol, grid_hyp, points))
+            continue
+        # warm_start is a sweepable axis: one policy entry per value.
+        # Warm entries drop the slice-0 uniform warm-up (warm_slice
+        # False) so the pretrained net routes from the first request;
+        # builders without the kwarg (linucb/supervised — no warm-up
+        # to drop) reuse the base policy.
+        ws_axis = spec.pretrain.warm_start
+        for w in ws_axis:
+            label = ps.label if len(ws_axis) == 1 \
+                else f"{ps.label}:{'warm' if w else 'cold'}"
+            use_pol, use_hyp = pol, hyp
+            if w:
+                try:
+                    use_pol, use_hyp = make_policy(
+                        ps.policy, env, cfg,
+                        ucb_backend=spec.ucb_backend,
+                        warm_slice=False, **dict(ps.overrides))
+                except TypeError:
+                    pass
+            grid_hyp, points = _axis_grid(label, use_hyp, ps.axes)
+            points = [dict(p, warm_start=bool(w)) for p in points]
+            resolved.append((label, fspec, use_pol, grid_hyp, points))
+            pretrain_labels[label] = bool(w)
 
     train_steps = spec.train.train_steps
     if train_steps is None and any_train:
@@ -184,7 +228,8 @@ def compile_spec(spec: ExperimentSpec, *,
             spec=spec, env=env, host_env=host_env, cfg=cfg, calls=(),
             train_steps=train_steps,
             compile_s=time.perf_counter() - t0,
-            serving_policy=(label, pol, hyp, fspec.to_config()))
+            serving_policy=(label, pol, hyp, fspec.to_config()),
+            pretrain_labels=pretrain_labels or None)
 
     calls = []
     for scenario in spec.scenarios:
@@ -201,4 +246,5 @@ def compile_spec(spec: ExperimentSpec, *,
             call.grids[label] = points
     return ExperimentPlan(spec=spec, env=env, host_env=host_env, cfg=cfg,
                           calls=tuple(calls), train_steps=train_steps,
-                          compile_s=time.perf_counter() - t0)
+                          compile_s=time.perf_counter() - t0,
+                          pretrain_labels=pretrain_labels or None)

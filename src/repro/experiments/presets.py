@@ -17,7 +17,9 @@ from repro.experiments.spec import (
     DataSpec,
     ExperimentSpec,
     ForgettingSpec,
+    OPESpec,
     PolicySpec,
+    PretrainSpec,
     ServingSpec,
     SummarizeSpec,
     TrainSpec,
@@ -151,6 +153,41 @@ def _serving_storm() -> ExperimentSpec:
             fail_decide_calls=(5,),
             train_every=8, p99_decide_ms=250.0,
             max_shed_fraction=0.02, require_zero_lost=True))
+
+
+@register_preset("offline_online")
+def _offline_online() -> ExperimentSpec:
+    """Phased lifecycle (DESIGN.md §13): pretrain on a logged corpus,
+    then stream online — warm vs cold start as a sweepable axis for the
+    neural + supervised zoo members, cold baselines riding along. CI
+    shrinks it via --set data.n_samples=... pretrain.corpus_size=...;
+    the full size is the acceptance run."""
+    return ExperimentSpec(
+        name="offline_online",
+        policies=(PolicySpec("neuralucb"), PolicySpec("sup_winrate"),
+                  PolicySpec("linucb"), PolicySpec("greedy"),
+                  PolicySpec("random")),
+        seeds=(0, 1),
+        pretrain=PretrainSpec(corpus_size=20_000, behavior="random",
+                              steps=512, warm_start=(True, False)))
+
+
+@register_preset("ope_selection")
+def _ope_selection() -> ExperimentSpec:
+    """Off-policy router selection (DESIGN.md §13.4): one eps-greedy
+    behavior log scored against four targets via IPS/SNIPS/DR — the
+    supervised router fit purely from the log — with the deterministic
+    min-cost target's DR estimate parity-pinned against its on-policy
+    replay run."""
+    return ExperimentSpec(
+        name="ope_selection",
+        policies=(PolicySpec("eps_greedy"),),
+        seeds=(0,),
+        summarize=SummarizeSpec(curves=False),
+        ope=OPESpec(behavior="eps_greedy",
+                    targets=("min_cost", "greedy", "sup_winrate",
+                             "random"),
+                    parity=("min_cost",), parity_tol=0.05))
 
 
 @register_preset("bench_nucb_sweep")

@@ -1,0 +1,117 @@
+"""Offline pretraining stage of the learning lifecycle (DESIGN.md §13.3).
+
+Bridges the compiled plan and the engine's offline phase: build ONE
+behavior corpus per spec (a uniform replay corpus, or the
+propensity-aware log of a registered behavior policy run), call
+``repro.sim.pretrain_policy_state`` for every warm-flagged label in
+``plan.pretrain_labels``, and cache the resulting state pytrees as
+``{spec_hash}-{label}.npz`` via ``repro.training.checkpoint`` so
+re-running the same spec skips the offline phase entirely. The cache
+directory comes from ``$REPRO_PRETRAIN_CACHE`` (default
+``.pretrain_cache/``); keying by spec hash means any change to the
+spec — corpus size, behavior, steps, data seed — invalidates it.
+"""
+from __future__ import annotations
+
+import os
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.data.logged import LoggedInteractions, replay_corpus
+from repro.experiments.compiler import ExperimentPlan
+from repro.experiments.spec import spec_hash
+from repro.sim import make_policy, pretrain_policy_state, run_policy_device
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+CACHE_ENV_VAR = "REPRO_PRETRAIN_CACHE"
+_DEFAULT_CACHE = ".pretrain_cache"
+
+
+def cache_dir() -> str:
+    return os.environ.get(CACHE_ENV_VAR, _DEFAULT_CACHE)
+
+
+def _safe(label: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", label)
+
+
+def _point0(hyp: Any) -> Any:
+    """Grid point 0's scalar hypers. Pretraining is grid-invariant: one
+    offline state is shared across the online sweep's G axis, so the
+    (G,)-leaved grid hypers collapse to their first point."""
+    return jax.tree_util.tree_map(
+        lambda x: x[0] if getattr(x, "ndim", 0) == 1 else x, hyp)
+
+
+def build_corpus(plan: ExperimentPlan) -> LoggedInteractions:
+    """The spec's behavior corpus. ``behavior='random'`` draws a uniform
+    replay corpus (exact ``-log K`` propensities); any registered policy
+    name instead RUNS that policy over the replay env with
+    ``record_log=True`` and subsamples its propensity-aware log."""
+    pt = plan.spec.pretrain
+    if pt.behavior == "random":
+        return replay_corpus(plan.env, pt.corpus_size, seed=pt.seed)
+    pol, hyp = make_policy(pt.behavior, plan.env, plan.cfg,
+                           ucb_backend=plan.spec.ucb_backend)
+    _, logged = run_policy_device(
+        plan.env, pol, hyp, seed=pt.seed, record_log=True,
+        train_steps=plan.train_steps, epochs=plan.spec.train.epochs,
+        batch_size=plan.spec.train.batch_size)
+    return logged.subsample(pt.corpus_size, seed=pt.seed)
+
+
+def pretrained_states(plan: ExperimentPlan, *,
+                      logged: Optional[LoggedInteractions] = None,
+                      verbose: bool = False
+                      ) -> Tuple[Optional[LoggedInteractions],
+                                 Dict[str, Any], Dict[str, Any]]:
+    """Pretrain every warm label of the plan. Returns ``(corpus,
+    states, info)`` — ``states`` maps label -> pretrained state pytree
+    (feed to ``run_policy_sweep(init_states=...)`` / the router's
+    ``pretrained_state``), ``info`` the per-label manifest block
+    (cache hit, wall time, checkpoint path)."""
+    pt = plan.spec.pretrain
+    if pt is None or not plan.pretrain_labels:
+        return logged, {}, {}
+
+    entries: Dict[str, Tuple[Any, Any]] = {}
+    if plan.serving_policy is not None:
+        label, pol, hyp, _ = plan.serving_policy
+        entries[label] = (pol, hyp)
+    for call in plan.calls:
+        entries.update(call.policies)
+
+    shash = spec_hash(plan.spec)
+    states: Dict[str, Any] = {}
+    info: Dict[str, Any] = {}
+    for label, warm in plan.pretrain_labels.items():
+        if not warm or label not in entries:
+            continue
+        pol, grid_hyp = entries[label]
+        path = os.path.join(cache_dir(), f"{shash}-{_safe(label)}.npz")
+        t0 = time.perf_counter()
+        if pt.cache and os.path.exists(path):
+            states[label] = load_checkpoint(path)
+            info[label] = {"cache_hit": True, "path": path,
+                           "pretrain_s": time.perf_counter() - t0}
+            continue
+        if logged is None:
+            logged = build_corpus(plan)
+        state = jax.block_until_ready(pretrain_policy_state(
+            plan.env, pol, _point0(grid_hyp), logged, seed=pt.seed,
+            steps=pt.steps, batch_size=pt.batch_size))
+        if pt.cache:
+            save_checkpoint(path, state)
+        states[label] = state
+        info[label] = {"cache_hit": False,
+                       "path": path if pt.cache else None,
+                       "pretrain_s": time.perf_counter() - t0}
+        if verbose:
+            print(f"[{plan.spec.name}] pretrain/{label}: "
+                  f"{info[label]['pretrain_s']:.2f}s "
+                  f"(corpus n={logged.n}, behavior "
+                  f"{logged.behavior!r})", flush=True)
+    return logged, states, info

@@ -48,7 +48,8 @@ class ExperimentResult:
     @property
     def ok(self) -> bool:
         return all(np.isfinite(c["avg_reward_mean"])
-                   and c.get("serving_ok", True) for c in self.cells)
+                   and c.get("serving_ok", True)
+                   and c.get("ope_ok", True) for c in self.cells)
 
     def scenario_names(self) -> List[str]:
         seen: List[str] = []
@@ -84,8 +85,9 @@ class ExperimentResult:
             json.dump(self.to_json(), f, indent=1, default=float)
 
 
-def _run_serving_cell(plan: ExperimentPlan, *, verbose: bool = False
-                      ) -> Dict[str, Any]:
+def _run_serving_cell(plan: ExperimentPlan, *,
+                      pretrained_state: Any = None,
+                      verbose: bool = False) -> Dict[str, Any]:
     """Serving-storm mode: drive the plan's single resolved policy
     through the async engine (DESIGN.md §12) and shape the storm
     metrics into one artifact cell. ``serving_ok`` applies the spec's
@@ -103,7 +105,8 @@ def _run_serving_cell(plan: ExperimentPlan, *, verbose: bool = False
     router = DevicePolicyRouter(
         pol, hyp, _tables(plan.env), seed=spec.seeds[0],
         slice_width=sv.decide_batch, capacity_slices=capacity,
-        batch_size=spec.train.batch_size, train_chunks=chunks, fcfg=fcfg)
+        batch_size=spec.train.batch_size, train_chunks=chunks, fcfg=fcfg,
+        pretrained_state=pretrained_state)
     metrics = run_storm(
         plan.env, router, requests=sv.requests, waves=sv.waves,
         pattern=sv.pattern, outages=sv.outages,
@@ -148,14 +151,32 @@ def run_plan(plan: ExperimentPlan, *, verbose: bool = False
     summ = spec.summarize
     cells: List[Dict[str, Any]] = []
     t0 = time.perf_counter()
+
+    warm_states: Dict[str, Any] = {}
+    pretrain_info: Dict[str, Any] = {}
+    if spec.pretrain is not None and plan.pretrain_labels:
+        from repro.experiments.pretrain import pretrained_states
+        corpus, warm_states, pretrain_info = pretrained_states(
+            plan, verbose=verbose)
+        pretrain_info = {"behavior": spec.pretrain.behavior,
+                         "corpus_size": None if corpus is None
+                         else corpus.n,
+                         "labels": pretrain_info}
+
     if spec.serving is not None:
-        cells.append(_run_serving_cell(plan, verbose=verbose))
+        srv_label = plan.serving_policy[0]
+        cells.append(_run_serving_cell(
+            plan, pretrained_state=warm_states.get(srv_label),
+            verbose=verbose))
     for call in plan.calls:
+        inits = {lbl: warm_states[lbl] for lbl in call.policies
+                 if lbl in warm_states}
         sweeps = run_policy_sweep(
             plan.env, call.policies, seeds=spec.seeds,
             scenario=call.scenario, forgetting=call.forgetting,
             train_steps=plan.train_steps, epochs=spec.train.epochs,
-            batch_size=spec.train.batch_size)
+            batch_size=spec.train.batch_size,
+            init_states=inits or None)
         scen_label = call.scenario or _STATIONARY
         for label, sweep in sweeps.items():
             points = summarize_sweep(sweep, skip_first=summ.skip_first)
@@ -180,6 +201,12 @@ def run_plan(plan: ExperimentPlan, *, verbose: bool = False
                       f"avg_reward={best['avg_reward_mean']:.4f} "
                       f"({len(points)} grid point"
                       f"{'s' if len(points) != 1 else ''})", flush=True)
+
+    ope_info: Dict[str, Any] = {}
+    if spec.ope is not None:
+        from repro.experiments.ope import score_policies_offline
+        ope_cells, ope_info = score_policies_offline(plan, verbose=verbose)
+        cells.extend(ope_cells)
     wall_s = time.perf_counter() - t0
 
     dev = jax.local_devices()
@@ -198,6 +225,10 @@ def run_plan(plan: ExperimentPlan, *, verbose: bool = False
         "compile_s": plan.compile_s,
         "wall_s": wall_s,
     }
+    if pretrain_info:
+        manifest["pretrain"] = pretrain_info
+    if ope_info:
+        manifest["ope"] = ope_info
     return ExperimentResult(spec=spec, manifest=manifest, cells=cells)
 
 

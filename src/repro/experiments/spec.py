@@ -195,6 +195,93 @@ class ServingSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PretrainSpec:
+    """Offline pretraining phase (DESIGN.md §13.3): build a logged
+    corpus, run every hooked policy's ``pretrain`` on it, and inject the
+    resulting states into the online sweep as warm starts.
+
+    * ``corpus_size`` — logged rows. ``behavior="random"`` uses the
+      exact-propensity RouterBench replay generator
+      (``repro.data.replay_corpus``); any other value must be a policy
+      REGISTRY name, which is run online once (``record_log=True``) and
+      subsampled to ``corpus_size``.
+    * ``steps`` / ``batch_size`` — offline SGD budget (the ridge folds
+      consume the whole corpus regardless).
+    * ``warm_start`` — sweepable axis: for each value every hooked
+      policy entry is expanded into a warm (pretrained state injected,
+      no slice-0 uniform warm-up) and/or cold variant, labeled
+      ``<name>:warm`` / ``<name>:cold`` when both are present.
+    * ``cache`` — checkpoint pretrained states keyed by the spec hash
+      (``training/checkpoint.py``) so repeated CI/bench runs skip the
+      offline phase.
+    """
+
+    corpus_size: int = 20_000
+    behavior: str = "random"
+    steps: int = 512
+    batch_size: int = 256
+    warm_start: Tuple[bool, ...] = (True,)
+    seed: int = 0
+    cache: bool = True
+
+    def __post_init__(self):
+        if self.corpus_size <= 0 or self.steps <= 0 or self.batch_size <= 0:
+            raise ValueError("PretrainSpec: corpus_size, steps and "
+                             "batch_size must be positive")
+        if not self.warm_start:
+            raise ValueError("PretrainSpec: warm_start needs at least one "
+                             "value (True and/or False)")
+        ws = [bool(w) for w in self.warm_start]
+        if len(set(ws)) != len(ws):
+            raise ValueError(f"PretrainSpec: duplicate warm_start values "
+                             f"{tuple(self.warm_start)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class OPESpec:
+    """Off-policy evaluation phase (DESIGN.md §13.4): one logged run of
+    the ``behavior`` policy scores every ``targets`` policy
+    counterfactually via ``repro.core.protocol.estimate_offline`` —
+    policies that never ran get IPS / SNIPS / DR value estimates.
+
+    * ``behavior`` — policy REGISTRY name producing the propensity-aware
+      log (run online with ``record_log=True``); ``behavior_overrides``
+      are its builder kwargs (e.g. a wider ``explore`` for coverage).
+    * ``targets`` — registry names to score offline. Pretrainable
+      targets are first pretrained ON THE BEHAVIOR LOG (offline policy
+      selection); their decided actions are scored as the declared
+      ε-smoothed point mass (``repro.sim.OPE_SMOOTHING_EPS``).
+    * ``parity`` — subset of targets ALSO run on-policy; each cell's
+      ``ope_ok`` gate requires |DR − on-policy value| <= ``parity_tol``
+      (the satellite-c sanity pin; keep it to deterministic targets).
+    * ``clip`` — importance-weight truncation (None = unclipped).
+    """
+
+    targets: Tuple[str, ...] = ()
+    behavior: str = "eps_greedy"
+    behavior_overrides: Tuple[Tuple[str, Any], ...] = ()
+    seed: int = 0
+    clip: Optional[float] = None
+    parity: Tuple[str, ...] = ()
+    parity_tol: float = 0.05
+
+    def __post_init__(self):
+        if not self.targets:
+            raise ValueError("OPESpec: no targets to score")
+        if len(set(self.targets)) != len(self.targets):
+            raise ValueError(f"OPESpec: duplicate targets "
+                             f"{tuple(self.targets)}")
+        extra = set(self.parity) - set(self.targets)
+        if extra:
+            raise ValueError(f"OPESpec: parity names {sorted(extra)} are "
+                             f"not in targets")
+        if self.clip is not None and self.clip <= 0:
+            raise ValueError("OPESpec: clip must be positive or None")
+        if self.parity_tol <= 0:
+            raise ValueError("OPESpec: parity_tol must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
 class SummarizeSpec:
     """Artifact shaping: ``skip_first`` excludes the warm-start slice
     (paper §4.2); ``curves`` attaches seed-mean per-slice reward curves
@@ -220,10 +307,15 @@ class ExperimentSpec:
     ucb_backend: str = "jnp"
     summarize: SummarizeSpec = SummarizeSpec()
     serving: Optional[ServingSpec] = None
+    pretrain: Optional[PretrainSpec] = None
+    ope: Optional[OPESpec] = None
 
     def __post_init__(self):
         if not self.policies:
             raise ValueError("ExperimentSpec: no policies")
+        if self.ope is not None and self.serving is not None:
+            raise ValueError("ExperimentSpec: off-policy evaluation and "
+                             "a serving storm cannot share a spec")
         if self.serving is not None:
             if len(self.policies) != 1 or self.policies[0].axes:
                 raise ValueError("ExperimentSpec: a serving storm takes "
@@ -277,6 +369,19 @@ def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
         sv["outages"] = [list(o) for o in spec.serving.outages]
         sv["fail_decide_calls"] = list(spec.serving.fail_decide_calls)
         j["serving"] = sv
+    if spec.pretrain is not None:
+        # same emit-only-when-set contract: pre-lifecycle specs keep
+        # their hashes
+        pt = dataclasses.asdict(spec.pretrain)
+        pt["warm_start"] = [bool(w) for w in spec.pretrain.warm_start]
+        j["pretrain"] = pt
+    if spec.ope is not None:
+        op = dataclasses.asdict(spec.ope)
+        op["targets"] = list(spec.ope.targets)
+        op["parity"] = list(spec.ope.parity)
+        op["behavior_overrides"] = [[k, v] for k, v
+                                    in spec.ope.behavior_overrides]
+        j["ope"] = op
     return j
 
 
@@ -339,7 +444,8 @@ def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
         raise ValueError(f"spec_from_json: schema {schema!r} is not "
                          f"{SPEC_SCHEMA_VERSION!r}")
     known = {"name", "data", "policies", "scenarios", "seeds", "train",
-             "forgetting", "ucb_backend", "summarize", "serving"}
+             "forgetting", "ucb_backend", "summarize", "serving",
+             "pretrain", "ope"}
     unknown = set(d) - known
     if unknown:
         raise ValueError(f"ExperimentSpec: unknown keys "
@@ -380,6 +486,23 @@ def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
         kw["summarize"] = _strict(SummarizeSpec, d["summarize"])
     if "serving" in d and d["serving"] is not None:
         kw["serving"] = _serving_from_json(d["serving"])
+    if "pretrain" in d and d["pretrain"] is not None:
+        p = dict(d["pretrain"])
+        if "warm_start" in p:
+            v = p["warm_start"]
+            p["warm_start"] = tuple(bool(w) for w in v) \
+                if isinstance(v, (list, tuple)) else (bool(v),)
+        kw["pretrain"] = _strict(PretrainSpec, p)
+    if "ope" in d and d["ope"] is not None:
+        o = dict(d["ope"])
+        for f in ("targets", "parity"):
+            if f in o:
+                v = o[f]
+                o[f] = tuple(v) if isinstance(v, (list, tuple)) else (v,)
+        if "behavior_overrides" in o:
+            o["behavior_overrides"] = tuple(
+                (k, v) for k, v in o["behavior_overrides"])
+        kw["ope"] = _strict(OPESpec, o)
     return ExperimentSpec(**kw)
 
 
@@ -444,6 +567,20 @@ def _set_path(node: Any, parts, value):
         if head not in node:
             raise KeyError(f"unknown spec key {head!r} (known: "
                            f"{sorted(node)})")
+        if head == "policies":
+            # policies=<label,...> FILTERS the spec's entries by display
+            # label (the CI-shrink idiom); entries can't be built from
+            # scalar values, only selected
+            labels = value if isinstance(value, list) else [value]
+            by_label = {(p.get("name") or p.get("policy")): p
+                        for p in node[head]}
+            missing = [l for l in labels if l not in by_label]
+            if missing:
+                raise KeyError(f"no policy entry labeled "
+                               f"{missing[0]!r} (have: "
+                               f"{sorted(by_label)})")
+            node[head] = [by_label[l] for l in labels]
+            return
         node[head] = value
         return
     if head not in node:

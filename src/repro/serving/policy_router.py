@@ -122,7 +122,8 @@ class DevicePolicyRouter:
                  *, seed: int = 0, slice_width: int = 256,
                  capacity_slices: int = 256, batch_size: int = 256,
                  train_chunks: int = 1,
-                 fcfg: ForgettingConfig = VANILLA_FORGETTING):
+                 fcfg: ForgettingConfig = VANILLA_FORGETTING,
+                 pretrained_state: Any = None, log_capacity: int = 0):
         self.policy = policy
         self.hyp = hypers
         self.S = int(slice_width)
@@ -135,10 +136,23 @@ class DevicePolicyRouter:
         self.state, self._key, self.tables = _srv_init(
             policy, jax.random.PRNGKey(seed), tables, hypers, env_idx,
             fcfg=fcfg, train_chunks=train_chunks, batch_size=batch_size)
+        if pretrained_state is not None:
+            # warm start (DESIGN.md §13.3): the offline phase's state
+            # (sim.pretrain_policy_state) replaces the fresh init; the
+            # PRNG stream is untouched, matching the scanned runner's
+            # init_state injection
+            self.state = jax.tree_util.tree_map(jnp.asarray,
+                                                pretrained_state)
         self._env_idx = env_idx
         self._counts = np.zeros(self.T, np.int64)  # learned rows per ring row
         self.wave = 0          # microbatches absorbed (ring write cursor)
         self.slices = 0        # end_slice count (0 = warm)
+        # propensity-aware request log (DESIGN.md §13.1): bounded ring of
+        # LEARNED rows, drained by to_logged(); 0 disables (the storm
+        # bench path pays nothing)
+        self.log_capacity = int(log_capacity)
+        self._log: list = []
+        self._log_rows = 0
 
     def _statics(self):
         return dict(fcfg=self.fcfg, train_chunks=self.train_chunks,
@@ -152,9 +166,9 @@ class DevicePolicyRouter:
         k, _ = jax.random.split(jax.random.PRNGKey(0))
         ids = jnp.zeros(self.S, jnp.int32)
         for av in (None, jnp.ones(self.num_actions, jnp.float32)):
-            a, _ = _srv_decide(self.policy, self.state, k, self.tables,
-                               self.hyp, ids, av, jnp.int32(0),
-                               **self._statics())
+            a, _, _ = _srv_decide(self.policy, self.state, k, self.tables,
+                                  self.hyp, ids, av, jnp.int32(0),
+                                  **self._statics())
             jax.block_until_ready(a)
 
     # ----------------------------------------------------------- DECIDE --
@@ -174,11 +188,12 @@ class DevicePolicyRouter:
         if avail is not None and not np.all(np.asarray(avail) > 0):
             av = jnp.asarray(avail, jnp.float32)
         self._key, k = jax.random.split(self._key)
-        a, aux = _srv_decide(
+        a, logp, aux = _srv_decide(
             self.policy, self.state, k, self.tables, self.hyp,
             jnp.asarray(ids_pad), av, jnp.int32(min(self.slices, 1)),
             **self._statics())
         return {"action": np.asarray(a)[:B].astype(np.int32),
+                "logp": np.asarray(logp)[:B].astype(np.float32),
                 "ids": ids, "aux": aux, "n": B}
 
     # ----------------------------------------------------------- UPDATE --
@@ -211,7 +226,47 @@ class DevicePolicyRouter:
             jnp.asarray(perm), decision["aux"], **self._statics())
         self._counts[row] = int(learn.sum())
         self.wave += 1
+        if self.log_capacity and learn.any():
+            lp = decision.get("logp")
+            lp = (np.zeros(B, np.float32) if lp is None
+                  else np.asarray(lp, np.float32).reshape(-1))
+            self._log.append((
+                np.asarray(decision["ids"], np.int64)[learn],
+                served[learn].copy(), rewards[learn].copy(), lp[learn],
+                np.full(int(learn.sum()), self.slices, np.int32)))
+            self._log_rows += int(learn.sum())
+            while self._log_rows > self.log_capacity and len(self._log) > 1:
+                self._log_rows -= len(self._log.pop(0)[0])
         return int(learn.sum())
+
+    # ------------------------------------------------------- REQUEST LOG --
+    def to_logged(self):
+        """Round-trip the serving request log into a
+        :class:`repro.data.logged.LoggedInteractions` (DESIGN.md §13.1):
+        the production loop's log -> pretrain -> redeploy closer. Only
+        LEARNED rows are logged (sheds and fallback remaps carry no
+        usable propensity); contexts are gathered from the resident
+        tables. Requires ``log_capacity > 0`` at construction."""
+        from repro.data.logged import LoggedInteractions
+        if not self.log_capacity:
+            raise ValueError(
+                "DevicePolicyRouter: request logging is disabled "
+                "(log_capacity=0); construct with log_capacity > 0")
+        if not self._log:
+            raise ValueError("DevicePolicyRouter: request log is empty — "
+                             "serve some traffic first")
+        ids = np.concatenate([c[0] for c in self._log])
+        a = np.concatenate([c[1] for c in self._log])
+        r = np.concatenate([c[2] for c in self._log])
+        lp = np.concatenate([c[3] for c in self._log])
+        sl = np.concatenate([c[4] for c in self._log])
+        return LoggedInteractions(
+            x_emb=np.asarray(self.tables["x_emb"])[ids],
+            x_feat=np.asarray(self.tables["x_feat"])[ids],
+            domain=np.asarray(self.tables["domain"])[ids],
+            action=a, reward=r, logp=lp, slice_idx=sl,
+            num_actions=self.num_actions,
+            behavior=f"serving:{self.policy.name}", sample_idx=ids)
 
     # ------------------------------------------------- TRAIN + REBUILD --
     def end_slice(self, epochs: Optional[int] = None) -> None:

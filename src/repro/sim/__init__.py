@@ -15,16 +15,19 @@ every policy automatically.
 """
 from repro.sim.env import DeviceReplayEnv
 from repro.sim.policies import (
+    OPE_SMOOTHING_EPS,
     POLICIES,
     VANILLA_FORGETTING,
     BanditPolicy,
     DevicePolicy,
     ForgettingConfig,
     LinUCBHypers,
+    MFHypers,
     NeuralPolicyHypers,
     NeuralUCBHypers,
     NeuralUCBState,
     PolicyCtx,
+    SupervisedHypers,
     as_bandit_policy,
     boltzmann_policy,
     dyn_min_cost_policy,
@@ -37,6 +40,8 @@ from repro.sim.policies import (
     neuralucb_policy,
     random_policy,
     register_policy,
+    sup_mf_policy,
+    sup_winrate_policy,
 )
 from repro.sim.scenarios import (
     SCENARIOS,
@@ -50,6 +55,7 @@ from repro.sim.scenarios import (
 from repro.sim.engine import (
     DeviceNeuralUCB,
     neuralucb_train_schedule,
+    pretrain_policy_state,
     run_baseline_device,
     run_baseline_sweep,
     run_neuralucb_device,
@@ -66,9 +72,12 @@ __all__ = [
     "DevicePolicy",
     "PolicyCtx",
     "POLICIES",
+    "OPE_SMOOTHING_EPS",
     "ForgettingConfig",
     "VANILLA_FORGETTING",
     "LinUCBHypers",
+    "MFHypers",
+    "SupervisedHypers",
     "NeuralPolicyHypers",
     "NeuralUCBHypers",
     "NeuralUCBState",
@@ -91,8 +100,11 @@ __all__ = [
     "neuralucb_policy",
     "random_policy",
     "register_policy",
+    "sup_mf_policy",
+    "sup_winrate_policy",
     "DeviceNeuralUCB",
     "neuralucb_train_schedule",
+    "pretrain_policy_state",
     "run_baseline_device",
     "run_baseline_sweep",
     "run_neuralucb_device",

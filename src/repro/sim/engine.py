@@ -158,7 +158,7 @@ def _metrics_to_results(ms: Dict[str, np.ndarray], wall_s: float) -> Dict:
     ``core.protocol.run_protocol`` per-policy result format."""
     T = len(ms["avg_reward"])
     cum = np.cumsum(np.asarray(ms["sum_reward"], np.float64))
-    return {
+    out = {
         "avg_reward": [float(v) for v in ms["avg_reward"]],
         "cum_reward": [float(v) for v in cum],
         "avg_cost": [float(v) for v in ms["avg_cost"]],
@@ -167,6 +167,9 @@ def _metrics_to_results(ms: Dict[str, np.ndarray], wall_s: float) -> Dict:
         "action_hist": np.asarray(ms["action_hist"]),
         "wall_s": [wall_s / T] * T,
     }
+    if "mean_logp" in ms:
+        out["mean_logp"] = [float(v) for v in ms["mean_logp"]]
+    return out
 
 
 def _resolve_lam(tables, hyp):
@@ -184,13 +187,22 @@ def _policy_scan_impl(tables, xs, env_idx, cum0, key, hyp,
                       policy: BanditPolicy,
                       scn: Optional[ScenarioTables] = None, delay: int = 0,
                       fcfg: ForgettingConfig = VANILLA_FORGETTING,
-                      train_chunks: int = 1, batch_size: int = 256):
+                      train_chunks: int = 1, batch_size: int = 256,
+                      init_state: Any = None, record_log: bool = False):
     """The single protocol scan driving every registered policy: one
     whole T-slice run as a pure ``lax.scan`` over (state, key). Key
     discipline is fixed by the runner — one split per slice feeds
     ``decide``; ``train`` splits further from the carried stream — so
     every policy (and the host-stepped NeuralUCB reference) consumes an
-    identical PRNG stream for identical schedules."""
+    identical PRNG stream for identical schedules.
+
+    ``init_state`` injects a PRETRAINED state pytree (DESIGN.md §13.3):
+    ``policy.init`` still runs — its key fold fixes the run stream, so a
+    warm and a cold run differ only by state, never by PRNG — and its
+    state is then replaced. ``record_log`` (static) additionally stacks
+    the per-slice (action, log-propensity, realized reward) into the
+    metrics pytree so the runner can shape a
+    :class:`repro.data.logged.LoggedInteractions` from the run."""
     if scn is None:
         # stationary: pre-derive the whole reward table once per run;
         # scenario runs re-derive per slice inside _effective_slice
@@ -201,6 +213,8 @@ def _policy_scan_impl(tables, xs, env_idx, cum0, key, hyp,
                      delay=delay, fcfg=fcfg, train_chunks=train_chunks,
                      batch_size=batch_size)
     state, key = policy.init(key, ctx0)
+    if init_state is not None:
+        state = init_state
 
     def step(carry, x):
         state, key = carry
@@ -210,11 +224,14 @@ def _policy_scan_impl(tables, xs, env_idx, cum0, key, hyp,
         batch = _context(tables, idx)
         avail = None if eff is None else eff["avail"]
         ctx = ctx0._replace(eff=eff, t=t, idx=idx, mask=mask, avail=avail)
-        a, aux = policy.decide(state, k_slice, batch, ctx)
+        a, logp, aux = policy.decide(state, k_slice, batch, ctx)
         if not policy.availability_aware and avail is not None:
             a = _avail_fallback(a, avail, tables["mean_cost"])
         m = _slice_metrics(tables, eff, idx, mask, a)
         r = _pick(tables, eff, "reward", idx, a)
+        m["mean_logp"] = (logp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        if record_log:
+            m["action"], m["logp"], m["reward"] = a, logp, r
         state = policy.update(state, batch, a, r, ctx, aux)
         state, key = policy.train(state, key, ctx)
         state = policy.rebuild(state, ctx)
@@ -223,7 +240,8 @@ def _policy_scan_impl(tables, xs, env_idx, cum0, key, hyp,
     return jax.lax.scan(step, (state, key), xs)
 
 
-_STATIC = ("policy", "delay", "fcfg", "train_chunks", "batch_size")
+_STATIC = ("policy", "delay", "fcfg", "train_chunks", "batch_size",
+           "record_log")
 
 _policy_scan = jax.jit(_policy_scan_impl, static_argnames=_STATIC)
 
@@ -235,7 +253,8 @@ def _policy_zoo_scan(tables, xs, env_idx, cum0, keys_tup, hyp_tup,
                      policies: Tuple[BanditPolicy, ...], scn=None,
                      delay: int = 0,
                      fcfg: ForgettingConfig = VANILLA_FORGETTING,
-                     train_chunks: int = 1, batch_size: int = 256):
+                     train_chunks: int = 1, batch_size: int = 256,
+                     init_tup: Any = None):
     """The POLICY AXIS: every policy's (grid x seed) lane vmap, compiled
     and executed as ONE jitted dispatch. Per policy, ``keys`` (L, 2) and
     every hyp leaf (L,) are pre-flattened by the caller into one lane
@@ -250,10 +269,14 @@ def _policy_zoo_scan(tables, xs, env_idx, cum0, keys_tup, hyp_tup,
     the same drift (one resident copy of the transform tables)."""
     out = []
     for i, p in enumerate(policies):
-        def one(k, h, p=p):
+        # a pretrained init state (one per policy) is CLOSED OVER, so it
+        # broadcasts across the lane vmap instead of growing a lane axis
+        ist = None if init_tup is None else init_tup[i]
+
+        def one(k, h, p=p, ist=ist):
             return _policy_scan_impl(tables, xs, env_idx, cum0, k, h, p,
                                      scn, delay, fcfg, train_chunks,
-                                     batch_size)[1]
+                                     batch_size, init_state=ist)[1]
         out.append(jax.vmap(one)(keys_tup[i], hyp_tup[i]))
     return tuple(out)
 
@@ -304,7 +327,8 @@ def run_policy_device(env: DeviceReplayEnv, policy: BanditPolicy,
                       hypers: Any = (), *, seed: int = 0, scenario=None,
                       forgetting: ForgettingConfig = VANILLA_FORGETTING,
                       train_steps: Optional[int] = None, epochs: int = 5,
-                      batch_size: int = 256, return_state: bool = False):
+                      batch_size: int = 256, return_state: bool = False,
+                      init_state: Any = None, record_log: bool = False):
     """Any registered policy, all T slices, ONE device dispatch.
 
     ``hypers`` is the policy's scalar hypers pytree (see
@@ -312,19 +336,75 @@ def run_policy_device(env: DeviceReplayEnv, policy: BanditPolicy,
     None) applies the DESIGN.md §9 non-stationary transforms inside the
     same single scan; ``forgetting`` selects the §9.2 adaptivity variant;
     ``train_steps`` / ``epochs`` set the per-slice replay-SGD budget for
-    policies with a train hook. Returns the ``run_protocol`` per-policy
-    result dict; with ``return_state=True`` also ``(state, key)``."""
+    policies with a train hook. ``init_state`` injects a pretrained state
+    (:func:`pretrain_policy_state`); ``record_log`` also returns the
+    run's propensity-annotated :class:`~repro.data.logged
+    .LoggedInteractions`. Returns the ``run_protocol`` per-policy result
+    dict; with ``record_log=True`` ``(res, logged)``; with
+    ``return_state=True`` additionally ``state, key`` appended."""
+    from repro.data.logged import from_run_log
     env, scn, delay = resolve_scenario(env, scenario)
     chunks = _chunks_for(env, policy, train_steps, epochs, batch_size)
     t0 = time.perf_counter()
     (state, key), ms = _policy_scan(
         _tables(env), env.slice_xs(), env.idx, _cum_valid(env),
         jax.random.PRNGKey(seed), hypers, policy, scn, delay, forgetting,
-        chunks, batch_size)
+        chunks, batch_size, init_state, record_log)
     jax.block_until_ready(ms)
-    res = _metrics_to_results({k: np.asarray(v) for k, v in ms.items()},
-                              time.perf_counter() - t0)
-    return (res, state, key) if return_state else res
+    ms = {k: np.asarray(v) for k, v in ms.items()}
+    log = {k: ms.pop(k) for k in ("action", "logp", "reward")
+           if k in ms}
+    res = _metrics_to_results(ms, time.perf_counter() - t0)
+    extras = []
+    if record_log:
+        extras.append(from_run_log(env, log, behavior=policy.name))
+    if return_state:
+        extras.extend([state, key])
+    return (res, *extras) if extras else res
+
+
+# ------------------------------------------- offline pretraining (§13.3) --
+@functools.partial(
+    jax.jit, static_argnames=("policy", "fcfg", "train_chunks",
+                              "batch_size", "pretrain_steps"))
+def _pretrain_impl(tables, env_idx, cum0, key, hyp, logged,
+                   policy: BanditPolicy,
+                   fcfg: ForgettingConfig = VANILLA_FORGETTING,
+                   train_chunks: int = 1, batch_size: int = 256,
+                   pretrain_steps: int = 0):
+    """prepare -> init -> pretrain as one jitted dispatch: the offline
+    phase of the lifecycle, producing the state the online scan starts
+    from."""
+    tables = policy.prepare(tables, hyp)
+    ctx = PolicyCtx(tables=tables, env_idx=env_idx, cum0=cum0, hyp=hyp,
+                    eff=None, t=None, idx=None, mask=None, avail=None,
+                    delay=0, fcfg=fcfg, train_chunks=train_chunks,
+                    batch_size=batch_size, pretrain_steps=pretrain_steps)
+    state, key = policy.init(key, ctx)
+    state, _ = policy.pretrain(state, key, logged, ctx)
+    return state
+
+
+def pretrain_policy_state(env: DeviceReplayEnv, policy: BanditPolicy,
+                          hypers: Any = (), logged=None, *, seed: int = 0,
+                          steps: int = 512, batch_size: int = 256,
+                          forgetting: ForgettingConfig = VANILLA_FORGETTING):
+    """Run a policy's OFFLINE phase on a logged corpus (DESIGN.md §13.3).
+
+    ``logged`` is a :class:`repro.data.logged.LoggedInteractions`;
+    ``steps`` is the offline SGD budget (``PolicyCtx.pretrain_steps`` —
+    the ridge folds ignore it, they consume the whole corpus). Returns
+    the pretrained state pytree, injectable into the online scan via
+    ``run_policy_device(init_state=...)`` /
+    ``run_policy_sweep(init_states={name: ...})`` — warm and cold runs
+    then share an identical PRNG stream and differ only by this state."""
+    if logged is None:
+        raise ValueError("pretrain_policy_state: a LoggedInteractions "
+                         "corpus is required")
+    return _pretrain_impl(_tables(env), env.idx, _cum_valid(env),
+                          jax.random.PRNGKey(seed), hypers,
+                          logged.to_device(), policy, forgetting, 1,
+                          batch_size, int(steps))
 
 
 def _grid_size(hypers: Any) -> int:
@@ -352,14 +432,18 @@ def run_policy_sweep(env: DeviceReplayEnv,
                      seeds: Sequence[int], scenario=None,
                      forgetting: ForgettingConfig = VANILLA_FORGETTING,
                      train_steps: Optional[int] = None, epochs: int = 5,
-                     batch_size: int = 256) -> Dict[str, Dict]:
+                     batch_size: int = 256,
+                     init_states: Optional[Dict[str, Any]] = None
+                     ) -> Dict[str, Dict]:
     """(policy × hypers × seed) study as ONE sharded device dispatch.
 
     ``policies`` maps name -> (BanditPolicy, hypers_grid) where each
     hypers_grid leaf is a scalar (broadcast) or a (G,) array of grid
     points (G may differ per policy). Every policy's (G x n_seeds) lane
     axis is sharded across local devices, and all policies run inside
-    one jitted program (``_policy_zoo_scan``).
+    one jitted program (``_policy_zoo_scan``). ``init_states`` maps
+    name -> pretrained state pytree (:func:`pretrain_policy_state`) —
+    one state per policy, broadcast across its lanes.
 
     Returns {name: sweep} in the unified annotated schema: metric leaves
     (G, n_seeds, T, ...), plus ``seeds``, ``train_steps``, and ``grid``
@@ -386,10 +470,13 @@ def run_policy_sweep(env: DeviceReplayEnv,
         hyp_t.append(hyp)
         grids.append(grid)
         gsizes.append(G)
+    init_tup = None
+    if init_states:
+        init_tup = tuple(init_states.get(n) for n in names)
     ms_t = _policy_zoo_scan(_tables(env), env.slice_xs(), env.idx,
                             _cum_valid(env), tuple(keys_t), tuple(hyp_t),
                             tuple(pols), scn, delay, forgetting, chunks,
-                            batch_size)
+                            batch_size, init_tup=init_tup)
     out = {}
     for name, pol, G, grid, ms in zip(names, pols, gsizes, grids, ms_t):
         d = {k: np.asarray(v).reshape((G, n_seeds) + v.shape[1:])
@@ -530,7 +617,7 @@ def sweep_point_results(sweep: Dict[str, np.ndarray], g: int,
     feed ``repro.core.protocol.summarize`` unchanged."""
     cum = np.cumsum(np.asarray(sweep["sum_reward"][g, s], np.float64))
     T = len(cum)
-    return {
+    out = {
         "avg_reward": [float(v) for v in sweep["avg_reward"][g, s]],
         "cum_reward": [float(v) for v in cum],
         "avg_cost": [float(v) for v in sweep["avg_cost"][g, s]],
@@ -540,6 +627,9 @@ def sweep_point_results(sweep: Dict[str, np.ndarray], g: int,
         "action_hist": np.asarray(sweep["action_hist"][g, s]),
         "wall_s": [0.0] * T,
     }
+    if "mean_logp" in sweep:
+        out["mean_logp"] = [float(v) for v in sweep["mean_logp"][g, s]]
+    return out
 
 
 # -------------------------------------------- host-stepped parity runner --
@@ -552,10 +642,10 @@ def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
     Stationary tables only — scenarios are a scanned-runner feature."""
     batch = _context(tables, idx)
     if warm:
-        a, g, mu_safe, gs = _decide_warm(params, batch, key, cfg)
+        a, _, g, mu_safe, gs = _decide_warm(params, batch, key, cfg)
     else:
-        a, g, mu_safe, gs = _decide_ucb(params, ainv, batch, beta, tau_g,
-                                        cfg, backend)
+        a, _, g, mu_safe, gs = _decide_ucb(params, ainv, batch, beta,
+                                           tau_g, cfg, backend)
     r = _pick(tables, None, "reward", idx, a)
     gate_label = (r < mu_safe - gate_margin).astype(jnp.float32)
     bufs = {

@@ -7,11 +7,23 @@ runner in :mod:`repro.sim.engine` (``run_policy_device`` /
 ``run_policy_sweep``). The protocol:
 
     init(key, ctx)                      -> (state, run_key)
-    decide(state, key, batch, ctx)      -> (actions (S,) i32, aux)
+    decide(state, key, batch, ctx)      -> (actions (S,) i32,
+                                            log_propensities (S,) f32, aux)
     update(state, batch, a, r, ctx, aux)-> state      # in-slice feedback
     train(state, key, ctx)              -> (state, key)  # end-of-slice SGD
     rebuild(state, ctx)                 -> state      # end-of-slice refresh
     prepare(tables, hyp)                -> tables     # stationary pre-derive
+    pretrain(state, key, logged, ctx)   -> (state, key)  # offline phase
+
+``decide``'s second output is the behavior LOG-PROPENSITY of each chosen
+action (DESIGN.md §13.2): exact for the stochastic members (uniform
+warm-up, ε-greedy, Boltzmann, random), and the declared ε-smoothed
+point-mass value (:data:`OPE_SMOOTHING_EPS`) for the
+deterministic-given-state family (UCB, TS, LinUCB, supervised, fixed
+arms use exact 0). ``pretrain`` consumes a
+:class:`repro.data.logged.LoggedInteractions` device view and runs the
+offline phase (replay SGD + A^-1 fold) before any online slice;
+policies without an offline phase keep the default no-op.
 
 ``ctx`` is a :class:`PolicyCtx` carrying the resident replay tables, the
 slice cursor, the scenario's effective tables / availability mask, and
@@ -37,6 +49,10 @@ exploration") made comparable across exploration mechanisms:
         (Pallas ``ucb_score`` kernel on TPU)
     eps_greedy   — ε-uniform over the UtilityNet's mean estimates
     boltzmann    — softmax(mu / temperature) sampling
+    sup_winrate  — supervised win-rate classifier: per-arm ridge fitted
+        purely offline by ``pretrain``, frozen online (routellm-style)
+    sup_mf       — supervised matrix-factorization router: domain × arm
+        embeddings fitted purely offline, frozen online
 
 The neural variants share the UtilityNet replay-training path verbatim
 (`_train_chunk`), so a zoo comparison isolates the exploration rule.
@@ -60,15 +76,54 @@ from repro.kernels.ucb_score.ops import ucb_score
 from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
 
+# -------------------------------------------------- propensity semantics --
+# The declared behavior-smoothing rate for policies whose decide is
+# deterministic given their state (UCB / TS / LinUCB): the logged
+# propensity is that of the ε-smoothed point mass
+# (1 - ε) δ(a*) + ε uniform(available), so off-policy importance weights
+# stay bounded (DESIGN.md §13.2). Exactly-stochastic policies log exact
+# propensities and never consult this.
+OPE_SMOOTHING_EPS = 0.05
+
+
+def _n_avail(num_actions: int, avail):
+    if avail is None:
+        return jnp.float32(num_actions)
+    return jnp.maximum((avail > 0).sum().astype(jnp.float32), 1.0)
+
+
+def _uniform_logp(B: int, num_actions: int, avail):
+    """Exact log-propensity of a uniform draw over available arms."""
+    return jnp.full((B,), -jnp.log(_n_avail(num_actions, avail)),
+                    jnp.float32)
+
+
+def _smoothed_logp(B: int, num_actions: int, avail):
+    """Declared ε-smoothed log-propensity of a deterministic choice."""
+    nav = _n_avail(num_actions, avail)
+    return jnp.full(
+        (B,),
+        jnp.log(1.0 - OPE_SMOOTHING_EPS + OPE_SMOOTHING_EPS / nav),
+        jnp.float32)
+
+
+def _zero_logp(B: int):
+    """Deterministic policies: propensity 1 (log 0) on the chosen arm."""
+    return jnp.zeros((B,), jnp.float32)
+
+
 # ------------------------------------------------------------ legacy API --
 class DevicePolicy(NamedTuple):
     """Stateless baseline triple (DESIGN.md §8.2); lift with
-    :func:`as_bandit_policy` to run on the unified runtime."""
+    :func:`as_bandit_policy` to run on the unified runtime. ``logp``
+    optionally maps ``(actions, batch) -> (B,)`` log-propensities; None
+    means deterministic (log-propensity 0)."""
 
     name: str
     init: Callable
     decide: Callable
     update: Callable
+    logp: Optional[Callable] = None
 
 
 class NeuralUCBState(NamedTuple):
@@ -119,6 +174,21 @@ class LinUCBHypers(NamedTuple):
 
     alpha: jnp.ndarray
     ridge: jnp.ndarray
+
+
+class SupervisedHypers(NamedTuple):
+    """Win-rate supervised router hypers: the per-arm ridge of the
+    offline reward regression."""
+
+    ridge: jnp.ndarray
+
+
+class MFHypers(NamedTuple):
+    """Matrix-factorization supervised router hypers: offline AdamW
+    learning rate and embedding L2 regularization."""
+
+    lr: jnp.ndarray
+    reg: jnp.ndarray
 
 
 class ForgettingConfig(NamedTuple):
@@ -172,9 +242,14 @@ class PolicyCtx(NamedTuple):
     fcfg: ForgettingConfig      # static: forgetting variant
     train_chunks: int           # static: TRAIN_CHUNK dispatches per slice
     batch_size: int             # static: replay minibatch size
+    pretrain_steps: int = 0     # static: offline SGD steps (pretrain hook)
 
 
 def _no_train(state, key, ctx):
+    return state, key
+
+
+def _no_pretrain(state, key, logged, ctx):
     return state, key
 
 
@@ -203,6 +278,7 @@ class BanditPolicy(NamedTuple):
     train: Callable = _no_train
     rebuild: Callable = _no_rebuild
     prepare: Callable = _no_prepare
+    pretrain: Callable = _no_pretrain
     availability_aware: bool = False
 
 
@@ -220,7 +296,10 @@ def _as_bandit_policy_cached(pol: DevicePolicy) -> BanditPolicy:
         return pol.init(key), key
 
     def decide(state, key, batch, ctx):
-        return pol.decide(state, key, batch), None
+        a = pol.decide(state, key, batch)
+        lp = (_zero_logp(a.shape[0]) if pol.logp is None
+              else pol.logp(a, batch))
+        return a, lp, None
 
     def update(state, batch, a, r, ctx, aux):
         return pol.update(state, batch, a, r, ctx.mask)
@@ -244,7 +323,10 @@ def random_policy(num_actions: int) -> DevicePolicy:
         B = batch["x_emb"].shape[0]
         return jax.random.randint(key, (B,), 0, num_actions, jnp.int32)
 
-    return DevicePolicy("random", init, decide, _dev_no_update)
+    def logp(actions, batch):
+        return _uniform_logp(actions.shape[0], num_actions, None)
+
+    return DevicePolicy("random", init, decide, _dev_no_update, logp)
 
 
 @functools.lru_cache(maxsize=None)
@@ -309,7 +391,7 @@ def dyn_min_cost_policy() -> BanditPolicy:
             c = jnp.where(ctx.avail > 0, c, jnp.inf)
         a = jnp.argmin(c).astype(jnp.int32)
         B = batch["x_emb"].shape[0]
-        return jnp.full((B,), a, jnp.int32), None
+        return jnp.full((B,), a, jnp.int32), _zero_logp(B), None
 
     def update(state, batch, a, r, ctx, aux):
         return state
@@ -351,7 +433,9 @@ def linucb_policy() -> BanditPolicy:
         scores = mu + ctx.hyp.alpha * jnp.sqrt(jnp.maximum(quad, 0.0))
         if ctx.avail is not None:
             scores = scores + jnp.where(ctx.avail > 0, 0.0, -jnp.inf)
-        return jnp.argmax(scores, axis=-1).astype(jnp.int32), g
+        a = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+        K = state["ainv"].shape[0]
+        return a, _smoothed_logp(a.shape[0], K, ctx.avail), g
 
     def update(state, batch, a, r, ctx, aux):
         g = aux
@@ -364,7 +448,41 @@ def linucb_policy() -> BanditPolicy:
         return {"ainv": ainv, "b": b}
 
     return BanditPolicy("linucb", init, decide, update,
+                        pretrain=_ridge_pretrain(),
                         availability_aware=True)
+
+
+def _ridge_pretrain(chunk: int = 256):
+    """Offline phase shared by LinUCB and the win-rate supervised router:
+    fold a whole logged corpus into the per-arm (A^-1, b) ridge state as
+    a scan of blocked Woodbury steps (``chunk`` rows per step, vmapped
+    over arms; zero-weight rows are no-ops)."""
+
+    def pretrain(state, key, logged, ctx):
+        g = _lin_features(logged["x_emb"])                     # (N, D)
+        K = state["ainv"].shape[0]
+        w = jax.nn.one_hot(logged["action"], K, dtype=jnp.float32) \
+            * logged["w"][:, None]                             # (N, K)
+        N, D = g.shape
+        pad = (-N) % chunk
+        gp = jnp.pad(g, ((0, pad), (0, 0)))
+        wp = jnp.pad(w, ((0, pad), (0, 0)))
+        rp = jnp.pad(logged["reward"], (0, pad))
+
+        def fold(ainv, xs):
+            gc, wc = xs
+            ainv = jax.vmap(
+                lambda ak, wk: NU.woodbury_update(ak, gc * wk[:, None]))(
+                    ainv, wc.T)
+            return ainv, None
+
+        ainv, _ = jax.lax.scan(
+            fold, state["ainv"],
+            (gp.reshape(-1, chunk, D), wp.reshape(-1, chunk, K)))
+        b = state["b"] + jnp.einsum("nk,nd->kd", wp, gp * rp[:, None])
+        return {"ainv": ainv, "b": b}, key
+
+    return pretrain
 
 
 # --------------------------------------------- shared neural scaffolding --
@@ -425,7 +543,8 @@ def _decide_warm(params, batch, key, cfg: UN.UtilityNetConfig, avail=None):
     a = _masked_uniform(key, B, cfg.num_actions, avail)
     _, h, _ = UN.utilitynet_apply(
         params, batch["x_emb"], batch["x_feat"], batch["domain"], a)
-    return a, NU.augment(h), jnp.zeros((B,), jnp.float32), jnp.float32(0.0)
+    return (a, _uniform_logp(B, cfg.num_actions, avail), NU.augment(h),
+            jnp.zeros((B,), jnp.float32), jnp.float32(0.0))
 
 
 def _decide_ucb(params, ainv, batch, beta, tau_g,
@@ -452,7 +571,8 @@ def _decide_ucb(params, ainv, batch, beta, tau_g,
     g = jnp.take_along_axis(
         g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
     mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
-    return a, g, mu_safe, jnp.float32(1.0)
+    lp = _smoothed_logp(a.shape[0], cfg.num_actions, avail)
+    return a, lp, g, mu_safe, jnp.float32(1.0)
 
 
 def _sample_valid(key, batch_size: int, cum0, count):
@@ -695,42 +815,102 @@ def _neural_prepare(tables, hyp):
     return _apply_cost_lambda(tables, hyp.cost_lambda)
 
 
+def _neural_pretrain(cfg: UN.UtilityNetConfig, with_ainv: bool):
+    """Offline phase of the neural zoo (DESIGN.md §13.3):
+    ``ctx.pretrain_steps`` AdamW steps on minibatches drawn with
+    replacement from the logged corpus (utility head only — the gate
+    needs an online safe-mean reference, so its loss weight is 0 and it
+    stays at initialization), then one weighted A^-1 rebuild over the
+    whole corpus with the pretrained features. The online scan fine-tunes
+    from here; the replay ring starts empty either way."""
+
+    def pretrain(state, key, logged, ctx):
+        N = logged["reward"].shape[0]
+        bs = ctx.batch_size
+        zeros = jnp.zeros((bs,), jnp.float32)
+
+        def step(carry, k):
+            params, opt = carry
+            i = jax.random.randint(k, (bs,), 0, N)
+            batch = {
+                "x_emb": logged["x_emb"][i],
+                "x_feat": logged["x_feat"][i],
+                "domain": logged["domain"][i],
+                "action": logged["action"][i],
+                "reward": logged["reward"][i],
+                "gate_label": zeros,
+                "w": logged["w"][i],
+                "gate_w": zeros,
+            }
+            (_, _), grads = jax.value_and_grad(
+                _weighted_loss, has_aux=True)(params, cfg, batch)
+            grads, _ = clip_by_global_norm(grads, 1.0)
+            params, opt = adamw_update(grads, opt, params, lr=ctx.hyp.lr,
+                                       weight_decay=1e-4)
+            return (params, opt), None
+
+        key, kp = jax.random.split(key)
+        (params, opt), _ = jax.lax.scan(
+            step, (state["params"], state["opt"]),
+            jax.random.split(kp, ctx.pretrain_steps))
+        state = dict(state, params=params, opt=opt)
+        if with_ainv:
+            _, h, _ = UN.utilitynet_apply(
+                params, logged["x_emb"], logged["x_feat"],
+                logged["domain"], logged["action"])
+            state["ainv"] = NU.rebuild_ainv(
+                NU.augment(h), ctx.hyp.ridge_lambda0, weights=logged["w"])
+        return state, key
+
+    return pretrain
+
+
 def _avail_neg(avail):
     return 0.0 if avail is None else jnp.where(avail > 0, 0.0, -jnp.inf)
 
 
 # ------------------------------------------------------------ neural zoo --
 @functools.lru_cache(maxsize=None)
-def neuralucb_policy(cfg: UN.UtilityNetConfig,
-                     backend: str = "jnp") -> BanditPolicy:
+def neuralucb_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
+                     warm_slice: bool = True) -> BanditPolicy:
     """The paper's policy (§3.3 + Algorithm 1) as a registered
     BanditPolicy — the richest member of the zoo: gated UCB decide,
-    buffer + Woodbury update, chunked replay train, Cholesky rebuild."""
+    buffer + Woodbury update, chunked replay train, Cholesky rebuild.
+    ``warm_slice=False`` drops the slice-0 uniform warm-up — the
+    pretrained (warm-start) variant routes by the offline net + A^-1
+    from the first request (DESIGN.md §13.3)."""
 
     def decide(state, key, batch, ctx):
         hyp = ctx.hyp
+
+        def ucb():
+            return _split_aux(_decide_ucb(state["params"], state["ainv"],
+                                          batch, hyp.beta, hyp.tau_g,
+                                          cfg, backend, ctx.avail))
+
+        if not warm_slice:
+            return ucb()
         return jax.lax.cond(
             ctx.t == 0,
             lambda: _split_aux(_decide_warm(state["params"], batch, key,
                                             cfg, ctx.avail)),
-            lambda: _split_aux(_decide_ucb(state["params"], state["ainv"],
-                                           batch, hyp.beta, hyp.tau_g,
-                                           cfg, backend, ctx.avail)))
+            ucb)
 
     return BanditPolicy(
         "neuralucb", _neural_init(cfg, True), decide,
         _neural_update(cfg, True), _neural_train(cfg), _neural_rebuild(cfg),
-        _neural_prepare, availability_aware=True)
+        _neural_prepare, pretrain=_neural_pretrain(cfg, True),
+        availability_aware=True)
 
 
 def _split_aux(dec):
-    a, g, mu_safe, gs = dec
-    return a, (g, mu_safe, gs)
+    a, lp, g, mu_safe, gs = dec
+    return a, lp, (g, mu_safe, gs)
 
 
 @functools.lru_cache(maxsize=None)
-def neural_ts_policy(cfg: UN.UtilityNetConfig,
-                     backend: str = "jnp") -> BanditPolicy:
+def neural_ts_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
+                     warm_slice: bool = True) -> BanditPolicy:
     """NeuralTS: Thompson sampling by posterior perturbation — score
     mu + nu * sigma * z with z ~ N(0, 1) per (sample, arm) and sigma the
     same sqrt(g^T A^-1 g) bonus NeuralUCB uses (the Pallas ``ucb_score``
@@ -761,8 +941,13 @@ def neural_ts_policy(cfg: UN.UtilityNetConfig,
             g = jnp.take_along_axis(
                 g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
             mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
-            return a, (g, mu_safe, jnp.float32(1.0))
+            # the TS perturbation makes the exact propensity an orthant
+            # integral; the declared smoothing scheme applies
+            lp = _smoothed_logp(a.shape[0], cfg.num_actions, ctx.avail)
+            return a, lp, (g, mu_safe, jnp.float32(1.0))
 
+        if not warm_slice:
+            return explore()
         return jax.lax.cond(
             ctx.t == 0,
             lambda: _split_aux(_decide_warm(state["params"], batch, key,
@@ -772,74 +957,199 @@ def neural_ts_policy(cfg: UN.UtilityNetConfig,
     return BanditPolicy(
         "neural-ts", _neural_init(cfg, True), decide,
         _neural_update(cfg, True), _neural_train(cfg), _neural_rebuild(cfg),
-        _neural_prepare, availability_aware=True)
+        _neural_prepare, pretrain=_neural_pretrain(cfg, True),
+        availability_aware=True)
 
 
 def _mean_greedy_decide(state, key, batch, ctx, cfg, pick):
     """Shared post-warm scaffold for the mean-based neural policies:
-    compute mu over all arms, let ``pick(mu, neg, key, B)`` choose, and
-    return the chosen features + safe-mean reference for the gate label."""
+    compute mu over all arms, let ``pick(mu, neg, key, B)`` choose (and
+    state its exact log-propensities), and return the chosen features +
+    safe-mean reference for the gate label."""
     mu, h, _ = UN.utilitynet_all_actions(
         state["params"], cfg, batch["x_emb"], batch["x_feat"],
         batch["domain"])
     g_all = NU.augment(h)
     neg = _avail_neg(ctx.avail)
     B = batch["x_emb"].shape[0]
-    a = pick(mu, neg, key, B).astype(jnp.int32)
+    a, lp = pick(mu, neg, key, B)
+    a = a.astype(jnp.int32)
     a_safe = jnp.argmax(mu + neg, axis=-1)
     g = jnp.take_along_axis(
         g_all, a[:, None, None].astype(jnp.int32), axis=1)[:, 0]
     mu_safe = jnp.take_along_axis(mu, a_safe[:, None], axis=1)[:, 0]
-    return a, (g, mu_safe, jnp.float32(1.0))
+    return a, lp, (g, mu_safe, jnp.float32(1.0))
 
 
 @functools.lru_cache(maxsize=None)
-def eps_greedy_policy(cfg: UN.UtilityNetConfig) -> BanditPolicy:
+def eps_greedy_policy(cfg: UN.UtilityNetConfig,
+                      warm_slice: bool = True) -> BanditPolicy:
     """Neural ε-greedy: argmax of the UtilityNet mean with probability
     1-ε, a uniform (availability-masked) arm otherwise. ε = 0 reproduces
     net-greedy. No A^-1 — the cheapest neural explorer (no per-slice
-    Cholesky rebuild), sharing the UtilityNet train path verbatim."""
+    Cholesky rebuild), sharing the UtilityNet train path verbatim.
+    Logged propensities are EXACT: ε/n_avail + (1-ε)·[a = greedy arm]."""
 
     def decide(state, key, batch, ctx):
         def pick(mu, neg, key, B):
             k_r, k_b = jax.random.split(key)
             a_rand = _masked_uniform(k_r, B, cfg.num_actions, ctx.avail)
             flip = jax.random.uniform(k_b, (B,)) < ctx.hyp.explore
-            return jnp.where(flip, a_rand, jnp.argmax(mu + neg, axis=-1))
+            a_greedy = jnp.argmax(mu + neg, axis=-1)
+            a = jnp.where(flip, a_rand, a_greedy)
+            nav = _n_avail(cfg.num_actions, ctx.avail)
+            p = ctx.hyp.explore / nav \
+                + (1.0 - ctx.hyp.explore) * (a == a_greedy)
+            return a, jnp.log(jnp.maximum(p, 1e-12))
 
+        def explore():
+            return _mean_greedy_decide(state, key, batch, ctx, cfg, pick)
+
+        if not warm_slice:
+            return explore()
         return jax.lax.cond(
             ctx.t == 0,
             lambda: _split_aux(_decide_warm(state["params"], batch, key,
                                             cfg, ctx.avail)),
-            lambda: _mean_greedy_decide(state, key, batch, ctx, cfg, pick))
+            explore)
 
     return BanditPolicy(
         "eps-greedy", _neural_init(cfg, False), decide,
         _neural_update(cfg, False), _neural_train(cfg),
-        prepare=_neural_prepare, availability_aware=True)
+        prepare=_neural_prepare, pretrain=_neural_pretrain(cfg, False),
+        availability_aware=True)
 
 
 @functools.lru_cache(maxsize=None)
-def boltzmann_policy(cfg: UN.UtilityNetConfig) -> BanditPolicy:
+def boltzmann_policy(cfg: UN.UtilityNetConfig,
+                     warm_slice: bool = True) -> BanditPolicy:
     """Neural Boltzmann / softmax-temperature exploration: sample arm a
     with probability softmax(mu / temperature). Temperature -> 0
-    approaches net-greedy. No A^-1; shares the UtilityNet train path."""
+    approaches net-greedy. No A^-1; shares the UtilityNet train path.
+    Logged propensities are EXACT: log_softmax of the sampled arm."""
 
     def decide(state, key, batch, ctx):
         def pick(mu, neg, key, B):
             logits = mu / jnp.maximum(ctx.hyp.explore, 1e-6) + neg
-            return jax.random.categorical(key, logits, axis=-1)
+            a = jax.random.categorical(key, logits, axis=-1)
+            lp = jnp.take_along_axis(
+                jax.nn.log_softmax(logits, axis=-1), a[:, None],
+                axis=1)[:, 0]
+            return a, lp
 
+        def explore():
+            return _mean_greedy_decide(state, key, batch, ctx, cfg, pick)
+
+        if not warm_slice:
+            return explore()
         return jax.lax.cond(
             ctx.t == 0,
             lambda: _split_aux(_decide_warm(state["params"], batch, key,
                                             cfg, ctx.avail)),
-            lambda: _mean_greedy_decide(state, key, batch, ctx, cfg, pick))
+            explore)
 
     return BanditPolicy(
         "boltzmann", _neural_init(cfg, False), decide,
         _neural_update(cfg, False), _neural_train(cfg),
-        prepare=_neural_prepare, availability_aware=True)
+        prepare=_neural_prepare, pretrain=_neural_pretrain(cfg, False),
+        availability_aware=True)
+
+
+# ------------------------------------------- supervised router family --
+@functools.lru_cache(maxsize=None)
+def sup_winrate_policy() -> BanditPolicy:
+    """Win-rate classifier router (DESIGN.md §13.3): a per-arm ridge
+    regression of realized reward on the LinUCB featurization, fitted
+    PURELY OFFLINE by :func:`_ridge_pretrain` and frozen — decide is the
+    argmax of the predicted win rate with no exploration bonus and no
+    online updates. The "what would a supervised router do with the same
+    log" baseline the bandits have to beat."""
+
+    def init(key, ctx):
+        K = ctx.tables["reward"].shape[1]
+        D = ctx.tables["x_emb"].shape[1] + 1
+        eye = jnp.eye(D, dtype=jnp.float32) / ctx.hyp.ridge
+        return {"ainv": jnp.repeat(eye[None], K, axis=0),
+                "b": jnp.zeros((K, D), jnp.float32)}, key
+
+    def decide(state, key, batch, ctx):
+        g = _lin_features(batch["x_emb"])
+        theta = jnp.einsum("kij,kj->ki", state["ainv"], state["b"])
+        mu = g @ theta.T + _avail_neg(ctx.avail)
+        a = jnp.argmax(mu, axis=-1).astype(jnp.int32)
+        return a, _zero_logp(a.shape[0]), None
+
+    def update(state, batch, a, r, ctx, aux):
+        return state
+
+    return BanditPolicy("sup-winrate", init, decide, update,
+                        pretrain=_ridge_pretrain(),
+                        availability_aware=True)
+
+
+@functools.lru_cache(maxsize=None)
+def sup_mf_policy(n_domains: int, num_actions: int,
+                  rank: int = 16) -> BanditPolicy:
+    """Matrix-factorization router: rewards factorize as
+    <U_domain, V_arm> + arm bias, fitted purely offline by AdamW on the
+    logged corpus and frozen online. Domain-level — requests from one
+    RouterBench domain share a row of U — the collaborative-filtering
+    counterpart of the per-request win-rate classifier."""
+
+    def init(key, ctx):
+        key, kp = jax.random.split(key)
+        ku, kv = jax.random.split(kp)
+        params = {
+            "U": 0.1 * jax.random.normal(ku, (n_domains, rank),
+                                         jnp.float32),
+            "V": 0.1 * jax.random.normal(kv, (num_actions, rank),
+                                         jnp.float32),
+            "ba": jnp.zeros((num_actions,), jnp.float32),
+        }
+        return {"params": params, "opt": adamw_init(params)}, key
+
+    def decide(state, key, batch, ctx):
+        p = state["params"]
+        mu = p["U"][batch["domain"]] @ p["V"].T + p["ba"]
+        mu = mu + _avail_neg(ctx.avail)
+        a = jnp.argmax(mu, axis=-1).astype(jnp.int32)
+        return a, _zero_logp(a.shape[0]), None
+
+    def update(state, batch, a, r, ctx, aux):
+        return state
+
+    def pretrain(state, key, logged, ctx):
+        N = logged["reward"].shape[0]
+        bs = ctx.batch_size
+
+        def loss(params, i):
+            dom = logged["domain"][i]
+            act = logged["action"][i]
+            pred = ((params["U"][dom] * params["V"][act]).sum(-1)
+                    + params["ba"][act])
+            w = logged["w"][i]
+            mse = (w * (pred - logged["reward"][i]) ** 2).sum() \
+                / jnp.maximum(w.sum(), 1.0)
+            reg = ctx.hyp.reg * (jnp.mean(params["U"] ** 2)
+                                 + jnp.mean(params["V"] ** 2))
+            return mse + reg
+
+        def step(carry, k):
+            params, opt = carry
+            i = jax.random.randint(k, (bs,), 0, N)
+            grads = jax.grad(loss)(params, i)
+            grads, _ = clip_by_global_norm(grads, 1.0)
+            params, opt = adamw_update(grads, opt, params, lr=ctx.hyp.lr)
+            return (params, opt), None
+
+        key, kp = jax.random.split(key)
+        (params, opt), _ = jax.lax.scan(
+            step, (state["params"], state["opt"]),
+            jax.random.split(kp, ctx.pretrain_steps))
+        return {"params": params, "opt": opt}, key
+
+    return BanditPolicy("sup-mf", init, decide, update, pretrain=pretrain,
+                        availability_aware=True)
 
 
 # --------------------------------------------------------------- registry --
@@ -923,27 +1233,41 @@ def _neural_hypers(explore, gate_margin=0.05, lr=1e-3, ridge_lambda0=1.0,
 def _b_neuralucb(env, cfg, beta: float = 1.0, tau_g: float = 0.5,
                  gate_margin: float = 0.05, lr: float = 1e-3,
                  ridge_lambda0: float = 1.0, cost_lambda=None,
-                 ucb_backend: str = "jnp"):
+                 ucb_backend: str = "jnp", warm_slice: bool = True):
     hyp = NeuralUCBHypers(
         beta=_f(beta), tau_g=_f(tau_g), gate_margin=_f(gate_margin),
         lr=_f(lr), ridge_lambda0=_f(ridge_lambda0),
         cost_lambda=_f(-1.0 if cost_lambda is None else cost_lambda))
-    return neuralucb_policy(cfg, ucb_backend), hyp
+    return neuralucb_policy(cfg, ucb_backend, warm_slice), hyp
 
 
 @register_policy("neural_ts")
 def _b_neural_ts(env, cfg, explore: float = 1.0,
-                 ucb_backend: str = "jnp", **kw):
-    return neural_ts_policy(cfg, ucb_backend), _neural_hypers(explore, **kw)
+                 ucb_backend: str = "jnp", warm_slice: bool = True, **kw):
+    return (neural_ts_policy(cfg, ucb_backend, warm_slice),
+            _neural_hypers(explore, **kw))
 
 
 @register_policy("eps_greedy")
 def _b_eps_greedy(env, cfg, explore: float = 0.1,
-                  ucb_backend: str = "jnp", **kw):
-    return eps_greedy_policy(cfg), _neural_hypers(explore, **kw)
+                  ucb_backend: str = "jnp", warm_slice: bool = True, **kw):
+    return eps_greedy_policy(cfg, warm_slice), _neural_hypers(explore, **kw)
 
 
 @register_policy("boltzmann")
 def _b_boltzmann(env, cfg, explore: float = 0.05,
-                 ucb_backend: str = "jnp", **kw):
-    return boltzmann_policy(cfg), _neural_hypers(explore, **kw)
+                 ucb_backend: str = "jnp", warm_slice: bool = True, **kw):
+    return boltzmann_policy(cfg, warm_slice), _neural_hypers(explore, **kw)
+
+
+@register_policy("sup_winrate")
+def _b_sup_winrate(env, cfg, ridge: float = 1.0, ucb_backend: str = "jnp"):
+    return sup_winrate_policy(), SupervisedHypers(ridge=_f(ridge))
+
+
+@register_policy("sup_mf")
+def _b_sup_mf(env, cfg, rank: int = 16, lr: float = 5e-2,
+              reg: float = 1e-4, ucb_backend: str = "jnp"):
+    n_dom = int(jnp.max(env.domain)) + 1
+    return (sup_mf_policy(n_dom, env.K, rank),
+            MFHypers(lr=_f(lr), reg=_f(reg)))

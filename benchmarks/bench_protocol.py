@@ -25,6 +25,11 @@ Five comparisons, recorded to ``BENCH_protocol.json`` at the repo root
   scenario_adaptivity      — what forgetting buys: vanilla vs the
       recency-forgetting variant (replay_rho=0.4) on the price_shock
       and arm_outage scenarios, seed-mean avg reward per config.
+  nucb_fused_decide        — the fused DECIDE op (kernels.nucb_decide)
+      per backend (jnp / pallas) with an analytic v5e roofline; off-TPU
+      the pallas entry records the self-dispatched jnp reference.
+  ainv_rebuild             — the streamed blocked-Cholesky A^-1 rebuild
+      (kernels.ainv_rebuild) per backend, same schema.
   policy_zoo_sweep         — the unified runtime's policy axis
       (DESIGN.md §10): a 5-policy × seed sweep as ONE sharded dispatch
       vs per-policy sweeps and sequential per-seed runs, with
@@ -96,6 +101,12 @@ from repro.sim.engine import (
     _policy_scan,
     _tables,
 )
+from repro.core import neuralucb as NU
+from repro.core.utilitynet import init_utilitynet
+from repro.kernels.ainv_rebuild import ainv_rebuild
+from repro.kernels.backend import PALLAS, resolve_backend
+from repro.roofline.model import roofline_terms
+from repro.sim.policies import _decide_ucb
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
                                          os.pardir))
@@ -316,6 +327,102 @@ def bench_policy_zoo(n_samples: int = 1200, n_slices: int = 8,
         "speedup_vs_sequential": sum_seq / zoo_s,
         "per_policy": per_policy,
     }}
+
+
+def bench_nucb_kernels(batch: int = 4096, buffer_rows: int = 8192,
+                       reps: int = 10) -> Dict:
+    """Per-backend microbenchmarks of the two fused neural hot-path ops
+    (DESIGN.md §14.1): the fused DECIDE (trunk forward → augment →
+    g^T A^-1 g bonus → gated masked argmax) and the streamed
+    blocked-Cholesky A^-1 REBUILD, each against the plain-XLA path, with
+    an analytic roofline per op (TPU v5e constants). Off-TPU the
+    "pallas" entries record what the self-dispatch resolves to — the
+    jnp reference (``mode: "reference"``); on TPU they are the compiled
+    kernels (``mode: "compiled"``). Interpret mode is never timed: it
+    measures the interpreter, not the kernel."""
+    cfg = UtilityNetConfig()
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = init_utilitynet(ks[0], cfg)
+    batch_in = {
+        "x_emb": jax.random.normal(ks[1], (batch, cfg.emb_dim)),
+        "x_feat": jax.random.normal(ks[2], (batch, cfg.feat_dim)),
+        "domain": jax.random.randint(ks[3], (batch,), 0,
+                                     cfg.num_domains),
+    }
+    F = cfg.ucb_feature_dim
+    ainv = jnp.eye(F) * 0.5
+    beta, tau_g = jnp.float32(1.0), jnp.float32(0.5)
+    pallas_mode = ("compiled" if resolve_backend(None) == PALLAS
+                   else "reference")
+
+    def decide(backend):
+        fn = jax.jit(lambda p, ai, b: _decide_ucb(p, ai, b, beta, tau_g,
+                                                  cfg, backend))
+        jax.block_until_ready(fn(params, ainv, batch_in))   # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(params, ainv, batch_in))
+        wall = (time.perf_counter() - t0) / reps
+        return {"decisions_per_s": batch / wall, "wall_s": wall}
+
+    dec = {"jnp": dict(decide("jnp"), mode="xla"),
+           "pallas": dict(decide("pallas"), mode=pallas_mode)}
+
+    # analytic decide roofline: one context GEMM + per-action trunk2 /
+    # u-head / quadratic form (C=d_text+d_feat, H=d_hidden, D=d_last)
+    C = cfg.d_text + cfg.d_feat
+    H, D, K = cfg.d_hidden, cfg.d_last, cfg.num_actions
+    dec_flops = 2.0 * batch * (C * H + K * (H * D + D * D + 4 * D))
+    dec_bytes = 4.0 * (batch * (cfg.emb_dim + cfg.feat_dim + C + F + 2)
+                       + C * H + K * H + H * D + F * F)
+
+    gs = jax.random.normal(jax.random.PRNGKey(7), (buffer_rows, F)) * 0.3
+    w = jnp.ones((buffer_rows,)).at[: buffer_rows // 4].set(0.0)
+
+    def rebuild(backend):
+        # gs / w stay jit ARGUMENTS — a zero-arg closure lets XLA
+        # constant-fold the whole rebuild at compile time
+        if backend == "pallas":
+            fn = jax.jit(lambda g, ww: ainv_rebuild(g, 1.0, weights=ww))
+        else:
+            fn = jax.jit(lambda g, ww: NU.rebuild_ainv(g, 1.0,
+                                                       weights=ww))
+        jax.block_until_ready(fn(gs, w))                    # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(gs, w))
+        wall = (time.perf_counter() - t0) / reps
+        return {"rebuilds_per_s": 1.0 / wall,
+                "rows_per_s": buffer_rows / wall, "wall_s": wall}
+
+    reb = {"jnp": dict(rebuild("jnp"), mode="xla"),
+           "pallas": dict(rebuild("pallas"), mode=pallas_mode)}
+
+    # Gram accumulation + blocked Cholesky + triangular inverse + L^-T L^-1
+    reb_flops = 2.0 * buffer_rows * F * F + 2.0 * F ** 3
+    reb_bytes = 4.0 * (buffer_rows * (F + 1) + 3 * F * F)
+
+    return {
+        "nucb_fused_decide": {
+            "batch": batch, "num_actions": K, "feature_dim": F,
+            "d_hidden": H, "d_last": D,
+            "backends": dec,
+            "speedup_pallas_vs_jnp": (dec["jnp"]["wall_s"]
+                                      / dec["pallas"]["wall_s"]),
+            "roofline": dict(
+                roofline_terms(dec_flops, dec_bytes, 0.0),
+                flops=dec_flops, bytes=dec_bytes),
+        },
+        "ainv_rebuild": {
+            "buffer_rows": buffer_rows, "feature_dim": F,
+            "backends": reb,
+            "speedup_pallas_vs_jnp": (reb["jnp"]["wall_s"]
+                                      / reb["pallas"]["wall_s"]),
+            "roofline": dict(
+                roofline_terms(reb_flops, reb_bytes, 0.0),
+                flops=reb_flops, bytes=reb_bytes),
+        },
+    }
 
 
 def bench_experiment_compile(n_samples: int = 1500,
@@ -550,6 +657,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
         nucb_batch)
     zoo_runs = bench_policy_zoo_subprocess(
         zoo_samples, zoo_slices, zoo_seeds, nucb_train_steps, nucb_batch)
+    kernel_runs = bench_nucb_kernels()
     compile_runs = bench_experiment_compile()
     pretrain_runs = bench_offline_pretrain(henv, denv)
 
@@ -566,6 +674,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
             "n_policies": n_policies,
             "n_devices": len(jax.local_devices()),
             "ucb_backend": nucb.ucb_backend,
+            "kernel_backends": ["jnp", "pallas"],
         },
         "baseline_protocol_single": {
             "host_s": host_single,
@@ -588,13 +697,14 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
         **nucb_runs,
         **scen_runs,
         **zoo_runs,
+        **kernel_runs,
         **compile_runs,
         **pretrain_runs,
     }
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine_v6", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v7", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -623,6 +733,12 @@ def run(refresh: bool = False, **kw):
         rows.append((f"zoo/{name}", round(p["sequential_s"], 4),
                      round(p["sweep_s"], 4),
                      f"{p['decisions_per_s']:.0f}/s"))
+    for sec in ("nucb_fused_decide", "ainv_rebuild"):
+        s = out[sec]
+        for bk, row in s["backends"].items():
+            rate = row.get("decisions_per_s", row.get("rows_per_s"))
+            rows.append((f"{sec}/{bk}", round(row["wall_s"], 5),
+                         f"{rate:.0f}/s", row["mode"]))
     for name, c in out["experiment_compile"].items():
         rows.append((f"spec_compile/{name}", round(c["compile_s"], 5),
                      f"{c['n_dispatches']} disp",

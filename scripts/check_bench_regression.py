@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Bench-regression guard: compare a fresh BENCH_protocol.json against a
+reference (by default ``git show HEAD:BENCH_protocol.json``) and fail on
+any >20% drop in a throughput/speedup metric.
+
+Rate-like leaves are discovered recursively: every numeric key ending in
+``_per_s`` is a higher-is-better HARD metric (>threshold drop fails);
+``speedup`` / ``speedup_vs_sequential`` / ``speedup_pallas_vs_jnp``
+leaves are RATIOS of two measured legs and only WARN on a drop — a
+ratio falls whenever its baseline denominator gets faster, which is an
+improvement, not a regression (e.g. the bucketed A^-1 rebuild sped the
+sequential legs more than the already-amortized vmapped legs).
+One absolute floor is enforced on top:
+``neuralucb_scan_vs_stepped.speedup`` must stay >= 1.0 — the scanned
+engine may never lose to its own stepped runner (DESIGN.md §8.4).
+Sections whose workload shape changed between the two files (any of
+the shape keys ``n_samples`` / ``n_slices`` / ``n_seeds`` /
+``train_steps`` / ``batch`` / ``buffer_rows`` differ) are skipped
+unless ``--strict`` — a reshaped bench is a re-baseline, not a
+regression.
+
+    python scripts/check_bench_regression.py [CURRENT] [--ref PATH|-]
+        [--threshold 0.2] [--strict]
+
+Exit 0 = no regression; 1 = at least one metric regressed past the
+threshold; 2 = usage/IO error (missing files, no reference).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, Iterator, List, Tuple
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                         os.pardir))
+DEFAULT_CURRENT = os.path.join(REPO_ROOT, "BENCH_protocol.json")
+
+SHAPE_KEYS = ("n_samples", "n_slices", "n_seeds", "train_steps",
+              "batch_size", "batch", "buffer_rows", "slice_width")
+RATIO_NAMES = ("speedup", "speedup_vs_sequential",
+               "speedup_pallas_vs_jnp")
+#: (path, floor) invariants checked on the CURRENT file alone
+FLOORS = ((("neuralucb_scan_vs_stepped", "speedup"), 1.0),)
+
+
+def _is_rate(key: str) -> bool:
+    return key.endswith("_per_s") or key in RATIO_NAMES
+
+
+def _walk(d, path=()) -> Iterator[Tuple[Tuple[str, ...], float]]:
+    if isinstance(d, dict):
+        for k, v in d.items():
+            if isinstance(v, dict):
+                yield from _walk(v, path + (k,))
+            elif _is_rate(k) and isinstance(v, (int, float)):
+                yield path + (k,), float(v)
+
+
+def _section_shape(d: Dict) -> Tuple:
+    return tuple((k, d.get(k)) for k in SHAPE_KEYS if k in d)
+
+
+def _lookup(d: Dict, path: Tuple[str, ...]):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def load_reference(ref: str) -> Dict:
+    """A file path, or '-' for the committed HEAD copy."""
+    if ref != "-":
+        with open(ref) as f:
+            return json.load(f)
+    out = subprocess.run(
+        ["git", "show", "HEAD:BENCH_protocol.json"], cwd=REPO_ROOT,
+        capture_output=True, text=True)
+    if out.returncode != 0:
+        raise FileNotFoundError(
+            "no BENCH_protocol.json at HEAD: " + out.stderr.strip())
+    return json.loads(out.stdout)
+
+
+def compare(cur: Dict, ref: Dict, threshold: float,
+            strict: bool) -> List[str]:
+    failures = []
+    skipped = set()
+    for path, ref_v in _walk(ref):
+        section = path[0]
+        if not strict and section in cur and isinstance(cur[section], dict) \
+                and isinstance(ref.get(section), dict) \
+                and _section_shape(cur[section]) != _section_shape(
+                    ref[section]):
+            if section not in skipped:
+                skipped.add(section)
+                print(f"  skip  {section}: workload shape changed "
+                      f"(re-baseline)")
+            continue
+        cur_v = _lookup(cur, path)
+        name = "/".join(path)
+        if cur_v is None:
+            # a metric may legitimately disappear in a schema change;
+            # never silently, though
+            print(f"  warn  {name}: missing from current file")
+            continue
+        if ref_v <= 0:
+            continue
+        drop = 1.0 - float(cur_v) / ref_v
+        hard = path[-1].endswith("_per_s")
+        if drop > threshold and hard:
+            failures.append(f"{name}: {ref_v:.4g} -> {float(cur_v):.4g} "
+                            f"({drop:+.1%} drop)")
+            status = "FAIL"
+        elif drop > threshold:
+            status = "warn"  # ratio leaf: denominator may have improved
+        else:
+            status = "ok"
+        if drop > threshold / 2:
+            print(f"  {status:4s}  {name}: {ref_v:.4g} -> "
+                  f"{float(cur_v):.4g} ({-drop:+.1%})")
+    for path, floor in FLOORS:
+        v = _lookup(cur, path)
+        if isinstance(v, (int, float)) and v < floor:
+            failures.append(f"{'/'.join(path)}: {v:.4g} below the "
+                            f"{floor:g} floor")
+            print(f"  FAIL  {'/'.join(path)}: {v:.4g} < floor {floor:g}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", nargs="?", default=DEFAULT_CURRENT)
+    ap.add_argument("--ref", default="-",
+                    help="reference JSON path, or '-' for the HEAD copy")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max allowed fractional drop (default 0.2)")
+    ap.add_argument("--strict", action="store_true",
+                    help="compare even when a section's workload shape "
+                         "changed")
+    args = ap.parse_args()
+    try:
+        with open(args.current) as f:
+            cur = json.load(f)
+        ref = load_reference(args.ref)
+    except (OSError, FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"check_bench_regression: {e}", file=sys.stderr)
+        return 2
+    failures = compare(cur, ref, args.threshold, args.strict)
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed more than "
+              f"{args.threshold:.0%}:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("bench regression guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

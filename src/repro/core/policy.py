@@ -26,9 +26,10 @@ from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
 
 def default_ucb_backend() -> str:
-    """'pallas' on TPU (native Pallas kernel), 'jnp' elsewhere. The kernel
-    also runs in interpret mode off-TPU, but interpretation is strictly
-    slower than the jnp einsum path, so it is opt-in (backend='pallas')."""
+    """'pallas' on TPU (native Pallas kernel), 'jnp' elsewhere. The ops
+    in repro.kernels self-dispatch the same way (kernels.backend), so
+    backend='pallas' is safe everywhere — off-TPU it runs each op's jnp
+    reference, never the interpreter."""
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
@@ -38,11 +39,10 @@ def _decide_jit(params, cfg: UN.UtilityNetConfig, ainv, beta, tau_g,
     mu, h, gate_p = UN.utilitynet_all_actions(params, cfg, x_emb, x_feat, domain)
     g = NU.augment(h)                                   # (B, K, F)
     if backend == "pallas":
-        # serving path: (B*K, F) quadratic forms as one MXU GEMM sweep with
-        # A^-1 VMEM-resident (repro.kernels.ucb_score); interpret mode keeps
-        # the same code path testable on CPU.
-        interpret = jax.default_backend() != "tpu"
-        scores = ucb_score(g, ainv, mu, beta, interpret=interpret)
+        # serving path: (B*K, F) quadratic forms as one MXU GEMM sweep
+        # with A^-1 VMEM-resident (repro.kernels.ucb_score); the op
+        # picks compiled-vs-reference itself (kernels.backend)
+        scores = ucb_score(g, ainv, mu, beta)
     else:
         bonus = NU.ucb_bonus(ainv, g)                   # (B, K)
         scores = mu + beta * bonus
@@ -67,9 +67,7 @@ def _score_jit(params, cfg: UN.UtilityNetConfig, ainv, x_emb, x_feat,
                                               domain)
     g = NU.augment(h)
     if backend == "pallas":
-        interpret = jax.default_backend() != "tpu"
-        bonus = ucb_score(g, ainv, jnp.zeros_like(mu), 1.0,
-                          interpret=interpret)
+        bonus = ucb_score(g, ainv, jnp.zeros_like(mu), 1.0)
     else:
         bonus = NU.ucb_bonus(ainv, g)
     return mu, bonus, gate_p, g

@@ -13,9 +13,10 @@ Two halves:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -112,10 +113,12 @@ def sweep_lane_sharding(n_items: int):
 def shard_sweep_axis(tree, n_items: Optional[int] = None):
     """Shard the leading (sweep) axis of every leaf across local devices.
 
-    Used by the protocol engine's sweep harnesses (DESIGN.md §8.4/§10):
-    the vmapped (grid x seed) lane axis is data-parallel across whatever
-    local devices exist. Identity on a single device (CPU CI) so callers
-    need no gating.
+    Legacy path (kept for external callers): when no device count > 1
+    divides the axis this silently degrades toward 1 device. The engine's
+    sweep runner now pads the lane axis instead — see
+    :func:`sweep_lane_layout` / :func:`pad_sweep_lanes` — so every local
+    device always carries an equal lane shard. Identity on a single
+    device (CPU CI) so callers need no gating.
     """
     leaves = jax.tree.leaves(tree)
     if not leaves:
@@ -125,6 +128,68 @@ def shard_sweep_axis(tree, n_items: Optional[int] = None):
     if sharding is None:
         return tree
     return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
+
+
+class SweepLaneLayout(NamedTuple):
+    """How a flattened (grid x seed) lane axis maps onto a sweep mesh:
+    ``n_lanes`` real lanes + ``pad`` dead lanes = a multiple of the
+    ``grid * seed`` device count, so the lane shard per device is always
+    equal-sized (no silent degrade to fewer devices). Dead lanes replay
+    lane 0 and are sliced off before any result leaves the runner."""
+    n_lanes: int
+    pad: int
+    grid: int
+    seed: int
+
+    @property
+    def total(self) -> int:
+        return self.n_lanes + self.pad
+
+    @property
+    def n_devices(self) -> int:
+        return self.grid * self.seed
+
+    def manifest(self) -> Dict[str, object]:
+        """JSON-ready layout record for sweep result manifests."""
+        return {"n_lanes": int(self.n_lanes), "pad": int(self.pad),
+                "n_devices": int(self.n_devices),
+                "mesh": {"grid": int(self.grid), "seed": int(self.seed)}}
+
+
+def sweep_lane_layout(n_lanes: int, mesh=None) -> SweepLaneLayout:
+    """Layout for ``n_lanes`` sweep lanes on ``mesh`` (a ("grid","seed")
+    mesh from :func:`repro.launch.mesh.make_sweep_mesh`; None = all
+    local devices on a 1 x nd seed row)."""
+    if mesh is not None:
+        g, s = (int(d) for d in mesh.devices.shape)
+    else:
+        g, s = 1, len(jax.local_devices())
+    nd = g * s
+    return SweepLaneLayout(n_lanes=int(n_lanes),
+                           pad=(-int(n_lanes)) % nd, grid=g, seed=s)
+
+
+def pad_sweep_lanes(tree, pad: int):
+    """Append ``pad`` dead lanes to every leaf's leading axis (each a
+    broadcast copy of lane 0, so the padded program computes real —
+    discarded — work instead of tracing a second shape)."""
+    if pad <= 0:
+        return tree
+
+    def one(x):
+        x = jnp.asarray(x)
+        return jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])], axis=0)
+    return jax.tree.map(one, tree)
+
+
+def shard_sweep_lanes(tree, mesh):
+    """Shard every leaf's (padded) leading lane axis over both mesh axes
+    (``P(("grid", "seed"))``). Identity on a 1-device mesh."""
+    if mesh is None or int(np.prod(mesh.devices.shape)) <= 1:
+        return tree
+    sh = jax.sharding.NamedSharding(mesh, P(("grid", "seed")))
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
 
 
 # ---------------------------------------------------------------------------

@@ -159,14 +159,27 @@ def compile_spec(spec: ExperimentSpec, *,
     cfg = UtilityNetConfig(emb_dim=env.x_emb.shape[1],
                            num_actions=env.K)
 
+    def _mk(policy: str, **kw):
+        """make_policy with the spec's backend + train precision. The
+        precision kwarg is only offered when non-default and dropped for
+        builders without a train path (they have nothing to cast)."""
+        if spec.train.precision != "f32":
+            try:
+                return make_policy(policy, env, cfg,
+                                   ucb_backend=spec.ucb_backend,
+                                   train_precision=spec.train.precision,
+                                   **kw)
+            except TypeError:
+                pass
+        return make_policy(policy, env, cfg,
+                           ucb_backend=spec.ucb_backend, **kw)
+
     resolved = []   # (label, fspec, policy, grid_hypers, points)
     pretrain_labels: Dict[str, bool] = {}
     any_train = False
     for ps in spec.policies:
         try:
-            pol, hyp = make_policy(ps.policy, env, cfg,
-                                   ucb_backend=spec.ucb_backend,
-                                   **dict(ps.overrides))
+            pol, hyp = _mk(ps.policy, **dict(ps.overrides))
         except TypeError as e:
             # a misspelled builder override must fail loudly, with the
             # spec entry named, not as a bare TypeError
@@ -193,10 +206,8 @@ def compile_spec(spec: ExperimentSpec, *,
             use_pol, use_hyp = pol, hyp
             if w:
                 try:
-                    use_pol, use_hyp = make_policy(
-                        ps.policy, env, cfg,
-                        ucb_backend=spec.ucb_backend,
-                        warm_slice=False, **dict(ps.overrides))
+                    use_pol, use_hyp = _mk(ps.policy, warm_slice=False,
+                                           **dict(ps.overrides))
                 except TypeError:
                     pass
             grid_hyp, points = _axis_grid(label, use_hyp, ps.axes)

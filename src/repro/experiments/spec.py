@@ -74,11 +74,15 @@ class ForgettingSpec:
 class TrainSpec:
     """Per-slice replay-SGD schedule for policies with a train hook.
     ``train_steps=None`` derives the fixed per-slice budget from
-    ``epochs`` (``repro.sim.neuralucb_train_schedule``)."""
+    ``epochs`` (``repro.sim.neuralucb_train_schedule``).
+    ``precision`` selects the forward/backward compute dtype of the
+    train path ("f32" | "bf16"); losses, gradients, and optimizer state
+    stay f32 either way (DESIGN.md §14.2)."""
 
     epochs: int = 5
     train_steps: Optional[int] = None
     batch_size: int = 256
+    precision: str = "f32"
 
     def __post_init__(self):
         if self.epochs <= 0 or self.batch_size <= 0:
@@ -87,6 +91,9 @@ class TrainSpec:
         if self.train_steps is not None and self.train_steps <= 0:
             raise ValueError("TrainSpec: train_steps must be positive "
                              "or None")
+        if self.precision not in ("f32", "bf16"):
+            raise ValueError(f"TrainSpec: precision must be 'f32' or "
+                             f"'bf16', got {self.precision!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -338,6 +345,14 @@ class ExperimentSpec:
 
 
 # ------------------------------------------------------------ JSON codec --
+def _train_to_json(train: TrainSpec) -> Dict[str, Any]:
+    tr = dataclasses.asdict(train)
+    if tr.get("precision") == "f32":
+        # default elided, so pre-mixed-precision specs keep their hashes
+        tr.pop("precision")
+    return tr
+
+
 def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
     """Spec -> plain JSON-serializable dict (schema-versioned). Inverse
     of :func:`spec_from_json`: round-trips are identity."""
@@ -358,7 +373,7 @@ def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
         ],
         "scenarios": list(spec.scenarios),
         "seeds": list(spec.seeds),
-        "train": dataclasses.asdict(spec.train),
+        "train": _train_to_json(spec.train),
         "forgetting": dataclasses.asdict(spec.forgetting),
         "ucb_backend": spec.ucb_backend,
         "summarize": dataclasses.asdict(spec.summarize),

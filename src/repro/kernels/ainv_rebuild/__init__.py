@@ -1,0 +1,4 @@
+from repro.kernels.ainv_rebuild.ops import ainv_rebuild
+from repro.kernels.ainv_rebuild.ref import ainv_rebuild_ref
+
+__all__ = ["ainv_rebuild", "ainv_rebuild_ref"]

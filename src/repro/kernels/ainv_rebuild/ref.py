@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the A^-1 rebuild kernel: the repo's existing
+Cholesky-solve path (`core.neuralucb.rebuild_ainv`) IS the reference —
+the kernel must match it, not the other way round."""
+from __future__ import annotations
+
+from repro.core import neuralucb as NU
+
+
+def ainv_rebuild_ref(gs, ridge_lambda0=1.0, weights=None):
+    """gs: (N, F); weights: (N,) or None. Returns A^-1 (F, F) f32."""
+    return NU.rebuild_ainv(gs, ridge_lambda0, weights=weights)

@@ -1,0 +1,39 @@
+"""One backend gate for every Pallas op in the repo.
+
+Every ``ops.py`` entry point takes ``interpret=None`` and resolves it
+here instead of hard-coding its own ``jax.default_backend() != "tpu"``
+check (the pre-PR-8 state: ``ucb_score`` defaulted to ``interpret=True``
+— the slow Pallas interpreter — even on TPU, and two call sites in
+``sim/policies.py`` plus two in ``core/policy.py`` each carried their
+own copy of the gate).
+
+Resolution of ``interpret``:
+
+* ``None``  (the default) — auto: run the compiled Pallas kernel on
+  TPU, dispatch to the op's pure-jnp ``ref.py`` everywhere else. The
+  interpreter is never chosen implicitly; it exists for tests.
+* ``True``  — force the Pallas interpreter (kernel parity tests on CPU
+  exercise the actual kernel body this way).
+* ``False`` — force the compiled Pallas kernel (TPU only).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+#: resolve_backend() return values
+REF = "ref"            # pure-jnp reference (ref.py)
+PALLAS = "pallas"      # compiled Pallas kernel
+INTERPRET = "interpret"  # Pallas interpreter (kernel body on CPU)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(interpret: Optional[bool]) -> str:
+    """Map an op's ``interpret`` flag to one of REF/PALLAS/INTERPRET."""
+    if interpret is None:
+        return PALLAS if on_tpu() else REF
+    return INTERPRET if interpret else PALLAS

@@ -1,0 +1,4 @@
+from repro.kernels.nucb_decide.ops import nucb_decide, prepare_decide_inputs
+from repro.kernels.nucb_decide.ref import nucb_decide_ref
+
+__all__ = ["nucb_decide", "nucb_decide_ref", "prepare_decide_inputs"]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused NeuralUCB decide kernel.
+
+Operates on the same preprocessed inputs as the kernel (context GEMM
+split out of trunk1, per-action bias rows ``act1``) so kernel parity
+tests compare like against like; ``sim.policies._decide_ucb`` with
+``backend="jnp"`` is the independent end-to-end reference (same math
+through ``utilitynet_all_actions``, different op order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nucb_decide_ref(ctx, w1ctx, act1, w2, b2, wu, bu, ainv, gate_p,
+                    avail, beta, tau_g):
+    """ctx (B, C); w1ctx (C, H); act1 (K, H); w2 (H, D); b2, wu (D,);
+    bu, beta, tau_g scalars; ainv (F, F) with F == D + 1; gate_p (B,);
+    avail (K,) f32 or None. Returns (a (B,) i32, g (B, F) f32,
+    mu_safe (B,) f32)."""
+    f32 = jnp.float32
+    base = ctx.astype(f32) @ w1ctx.astype(f32)               # (B, H)
+    h1 = jax.nn.gelu(base[:, None, :] + act1.astype(f32)[None])
+    h = jax.nn.gelu(h1 @ w2.astype(f32) + b2.astype(f32))    # (B, K, D)
+    mu = jnp.sum(h * wu.astype(f32), axis=-1) + bu           # (B, K)
+    hn = h / jnp.maximum(
+        jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    ones = jnp.ones(hn.shape[:-1] + (1,), hn.dtype)
+    g_all = jnp.concatenate([hn, ones], axis=-1) / jnp.sqrt(2.0)
+    quad = jnp.einsum("bkf,fe,bke->bk", g_all, ainv.astype(f32), g_all)
+    scores = mu + beta * jnp.sqrt(jnp.maximum(quad, 0.0))
+    if avail is not None:
+        neg = jnp.where(avail > 0, 0.0, -jnp.inf)
+        scores = scores + neg
+        mu_m = mu + neg
+    else:
+        mu_m = mu
+    a_ucb = jnp.argmax(scores, axis=-1)
+    a_safe = jnp.argmax(mu_m, axis=-1)
+    a = jnp.where(gate_p >= tau_g, a_ucb, a_safe).astype(jnp.int32)
+    g = jnp.take_along_axis(g_all, a[:, None, None], axis=1)[:, 0]
+    mu_safe = jnp.take_along_axis(mu_m, a_safe[:, None], axis=1)[:, 0]
+    return a, g, mu_safe

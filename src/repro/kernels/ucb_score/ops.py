@@ -1,23 +1,41 @@
-"""Public NeuralUCB scoring op: pads rows/features, runs the kernel."""
+"""Public NeuralUCB scoring op: pads rows/features, runs the kernel.
+
+Backend selection is centralized in :mod:`repro.kernels.backend`:
+``interpret=None`` (the default) runs the compiled kernel on TPU and
+the jnp reference everywhere else, so call sites never carry their own
+``jax.default_backend()`` gate and never fall into the interpreter by
+accident. Pass ``interpret=True`` to force the interpreter (tests).
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import REF, resolve_backend
 from repro.kernels.ucb_score.kernel import ucb_score_padded
+from repro.kernels.ucb_score.ref import ucb_score_ref
 
 
-@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
 def ucb_score(g, ainv, mu, beta, *, block_r: int = 512,
-              interpret: bool = True):
+              interpret: Optional[bool] = None):
     """g: (..., F); ainv: (F, F); mu: (...,); beta scalar.
     Returns UCB scores with g's leading shape, f32.
 
     Feature padding is safe: padded g columns are zero, and padding A^-1
     with zeros (not identity) keeps the quadratic form unchanged.
     """
+    if resolve_backend(interpret) == REF:
+        return ucb_score_ref(g, ainv, mu, beta)
+    return _ucb_score_pallas(g, ainv, mu, beta, block_r=block_r,
+                             interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def _ucb_score_pallas(g, ainv, mu, beta, *, block_r: int,
+                      interpret: bool):
     lead = g.shape[:-1]
     F = g.shape[-1]
     R = 1

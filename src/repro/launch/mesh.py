@@ -9,7 +9,10 @@ touches jax device state.
 """
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,3 +26,25 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     mp = min(model_parallel, n)
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_sweep_mesh(n_grid: int = 1, n_seeds: int = 1,
+                    n_devices=None):
+    """("grid", "seed") mesh over local devices for the protocol-engine
+    lane sweeps (DESIGN.md §14.3).
+
+    The flattened (grid x seed) lane axis is sharded over BOTH axes —
+    ``P(("grid", "seed"))`` — so the factorization only steers locality:
+    the grid axis takes the largest device factor that divides the
+    caller's hyper-grid size (lanes of one grid point then land on one
+    grid row of devices, seed-major), and the seed axis absorbs the
+    rest. The policy axis of the zoo sweep stays a static program axis
+    (heterogeneous state pytrees can't share one mesh dim); every
+    policy's lane tree is laid out over this same mesh. Degenerates to a
+    1x1 mesh on a single device (CPU CI), so callers need no gating."""
+    devs = jax.local_devices()
+    nd = len(devs) if n_devices is None else max(
+        1, min(int(n_devices), len(devs)))
+    g = math.gcd(nd, max(1, int(n_grid)))
+    return jax.sharding.Mesh(
+        np.asarray(devs[:nd]).reshape(g, nd // g), ("grid", "seed"))

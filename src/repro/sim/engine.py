@@ -11,10 +11,11 @@ Public runners:
 
 * :func:`run_policy_device` — one policy, all T slices, one dispatch.
 * :func:`run_policy_sweep` — a POLICY AXIS of (grid × seed) lane vmaps:
-  every policy's lanes are sharded across local devices
-  (``shard_sweep_axis``) and ALL policies execute inside one jitted
-  dispatch, so a (policy × hypers × seed × scenario) study is one
-  compiled program per scenario.
+  every policy's lanes are padded to a device-count multiple and
+  sharded over a ("grid", "seed") mesh (``launch.mesh.make_sweep_mesh``
+  + ``distributed.sharding.sweep_lane_layout``), and ALL policies
+  execute inside one jitted dispatch, so a (policy × hypers × seed ×
+  scenario) study is one compiled program per scenario.
 * :func:`run_baseline_device` / :func:`run_baseline_sweep` — thin
   wrappers lifting legacy :class:`DevicePolicy` triples; the sweep now
   emits the same grid-annotated ``(G, n_seeds, T, ...)`` schema as
@@ -38,6 +39,7 @@ from __future__ import annotations
 
 import functools
 import itertools
+import math
 import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -49,7 +51,13 @@ from repro.core import neuralucb as NU
 from repro.core import utilitynet as UN
 from repro.core.policy import default_ucb_backend
 from repro.core.reward import normalize_cost
-from repro.distributed.sharding import shard_sweep_axis
+from repro.distributed.sharding import (
+    pad_sweep_lanes,
+    shard_sweep_axis,  # noqa: F401  (re-export: legacy callers import here)
+    shard_sweep_lanes,
+    sweep_lane_layout,
+)
+from repro.launch.mesh import make_sweep_mesh
 from repro.sim.env import DeviceReplayEnv
 from repro.sim.policies import (
     TRAIN_CHUNK,
@@ -446,10 +454,18 @@ def run_policy_sweep(env: DeviceReplayEnv,
     one state per policy, broadcast across its lanes.
 
     Returns {name: sweep} in the unified annotated schema: metric leaves
-    (G, n_seeds, T, ...), plus ``seeds``, ``train_steps``, and ``grid``
-    (each hypers field as a (G,) array) — every cell feeds
+    (G, n_seeds, T, ...), plus ``seeds``, ``train_steps``, ``grid``
+    (each hypers field as a (G,) array), and ``layout`` (the lane→device
+    manifest, :meth:`SweepLaneLayout.manifest`) — every cell feeds
     ``core.protocol.summarize`` via :func:`sweep_point_results`, and the
-    whole sweep feeds ``core.protocol.summarize_sweep``."""
+    whole sweep feeds ``core.protocol.summarize_sweep``.
+
+    Device layout (DESIGN.md §14.3): every policy's lane axis is PADDED
+    with dead lanes (broadcast copies of lane 0) up to a device-count
+    multiple and sharded over a ("grid", "seed") mesh — all local
+    devices always participate, where the legacy ``shard_sweep_axis``
+    silently fell back toward 1 device on non-dividing lane counts. Dead
+    lanes are sliced off before results leave this function."""
     seeds = list(seeds)
     n_seeds = len(seeds)
     env, scn, delay = resolve_scenario(env, scenario)
@@ -458,18 +474,22 @@ def run_policy_sweep(env: DeviceReplayEnv,
         train_steps = neuralucb_train_schedule(env, epochs, batch_size)
     chunks = -(-int(train_steps) // TRAIN_CHUNK) if any_train else 1
     base_keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    names, pols, keys_t, hyp_t, grids, gsizes = [], [], [], [], [], []
-    for name, (pol, grid) in policies.items():
-        G = _grid_size(grid)
+    gsizes = [_grid_size(grid) for _, grid in policies.values()]
+    mesh = make_sweep_mesh(functools.reduce(math.gcd, gsizes, 0) or 1,
+                           n_seeds)
+    names, pols, keys_t, hyp_t, grids, layouts = [], [], [], [], [], []
+    for (name, (pol, grid)), G in zip(policies.items(), gsizes):
         hyp = _flatten_lanes(grid, G, n_seeds)
         keys = jnp.tile(base_keys, (G, 1))
-        keys, hyp = shard_sweep_axis((keys, hyp), G * n_seeds)
+        layout = sweep_lane_layout(G * n_seeds, mesh)
+        keys, hyp = pad_sweep_lanes((keys, hyp), layout.pad)
+        keys, hyp = shard_sweep_lanes((keys, hyp), mesh)
         names.append(name)
         pols.append(pol)
         keys_t.append(keys)
         hyp_t.append(hyp)
         grids.append(grid)
-        gsizes.append(G)
+        layouts.append(layout)
     init_tup = None
     if init_states:
         init_tup = tuple(init_states.get(n) for n in names)
@@ -478,8 +498,12 @@ def run_policy_sweep(env: DeviceReplayEnv,
                             tuple(pols), scn, delay, forgetting, chunks,
                             batch_size, init_tup=init_tup)
     out = {}
-    for name, pol, G, grid, ms in zip(names, pols, gsizes, grids, ms_t):
-        d = {k: np.asarray(v).reshape((G, n_seeds) + v.shape[1:])
+    for name, pol, G, grid, layout, ms in zip(names, pols, gsizes, grids,
+                                              layouts, ms_t):
+        # dead pad lanes are dropped HERE, before any consumer
+        # (sweep_point_results / summarize_sweep) can see them
+        d = {k: np.asarray(v)[:layout.n_lanes].reshape(
+                 (G, n_seeds) + v.shape[1:])
              for k, v in ms.items()}
         d["seeds"] = np.asarray(seeds)
         # annotate the steps that actually RAN: a sweep of train-less
@@ -490,6 +514,7 @@ def run_policy_sweep(env: DeviceReplayEnv,
             f: np.asarray(jnp.broadcast_to(jnp.asarray(v), (G,)))
             for f, v in (zip(grid._fields, grid)
                          if hasattr(grid, "_fields") else ())}
+        d["layout"] = layout.manifest()
         out[name] = d
     return out
 
@@ -582,10 +607,13 @@ def run_neuralucb_sweep(env: DeviceReplayEnv, cfg: UN.UtilityNetConfig, *,
     cost_lambdas`` (G points, ``itertools.product`` order, recorded in the
     returned ``beta`` / ``tau_g`` / ``cost_lambda`` arrays); metric leaves
     come back with shape (G, n_seeds, T, ...). The flattened (grid x
-    seed) lane axis is sharded across local devices when more than one is
-    present. The default UCB backend is the portable jnp path — the
-    Pallas kernel is the single-run serving path and is not batched under
-    the sweep vmap.
+    seed) lane axis is padded to a device-count multiple and sharded
+    over the ("grid", "seed") sweep mesh. The default UCB backend is the
+    portable jnp path; ``ucb_backend="pallas"`` routes DECIDE through
+    the fused decide kernel and REBUILD through the blocked-Cholesky
+    kernel (`repro.kernels`) — off-TPU these self-dispatch to their jnp
+    references, so the option is safe (if slower to trace) under the
+    sweep vmap everywhere.
     """
     grid = list(itertools.product(betas, tau_gs, cost_lambdas))
     G = len(grid)
@@ -664,7 +692,7 @@ _nucb_train = jax.jit(
     _train_chunk,
     static_argnames=("cfg", "num_steps", "batch_size", "fcfg", "delayed"))
 
-_nucb_rebuild = jax.jit(_rebuild_impl, static_argnames=("cfg",))
+_nucb_rebuild = jax.jit(_rebuild_impl, static_argnames=("cfg", "backend"))
 
 
 class DeviceNeuralUCB:
@@ -796,7 +824,7 @@ class DeviceNeuralUCB:
             self.ainv = _nucb_rebuild(
                 self.params, tables, env.idx, self.bufs["action"],
                 self.bufs["w"], self.cfg, jnp.float32(self.ridge_lambda0),
-                row_w)
+                row_w, backend=self.ucb_backend)
             jax.block_until_ready(self.ainv)
             per_slice.append(m)
             wall.append(time.perf_counter() - t0)

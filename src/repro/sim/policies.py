@@ -72,6 +72,8 @@ import jax.numpy as jnp
 from repro.core import neuralucb as NU
 from repro.core import utilitynet as UN
 from repro.core.reward import normalize_cost
+from repro.kernels.ainv_rebuild import ainv_rebuild
+from repro.kernels.nucb_decide import nucb_decide
 from repro.kernels.ucb_score.ops import ucb_score
 from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
@@ -492,11 +494,27 @@ def _ridge_pretrain(chunk: int = 256):
 TRAIN_CHUNK = 32
 
 
-def _weighted_loss(params, cfg: UN.UtilityNetConfig, batch):
+#: train-path precision names -> network compute dtype. "bf16" casts the
+#: params and float network inputs to bfloat16 for the forward/backward
+#: GEMMs while the loss, gradients, AdamW moments, and master params all
+#: stay f32 (mixed precision with f32 accumulators); "f32" is the
+#: bit-exact default (golden snapshots pin it).
+TRAIN_PRECISIONS = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def _weighted_loss(params, cfg: UN.UtilityNetConfig, batch,
+                   precision: str = "f32"):
     """Replay loss with per-row validity weights (padded rows carry w=0)."""
+    dtype = TRAIN_PRECISIONS[precision]
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(dtype), params)
+        batch = dict(batch, x_emb=batch["x_emb"].astype(dtype),
+                     x_feat=batch["x_feat"].astype(dtype))
     mu, _, gate_p = UN.utilitynet_apply(
         params, batch["x_emb"], batch["x_feat"], batch["domain"],
         batch["action"])
+    mu = mu.astype(jnp.float32)
+    gate_p = gate_p.astype(jnp.float32)
     w = batch["w"]
     l_u = (UN.huber(mu, batch["reward"], cfg.huber_delta) * w
            ).sum() / jnp.maximum(w.sum(), 1.0)
@@ -551,15 +569,23 @@ def _decide_ucb(params, ainv, batch, beta, tau_g,
                 cfg: UN.UtilityNetConfig, backend: str, avail=None):
     """Gated UCB decision over all actions (paper §3.3). Unavailable
     arms (scenario avail mask) are excluded from BOTH the UCB argmax and
-    the safe mean-greedy argmax."""
+    the safe mean-greedy argmax.
+
+    ``backend="pallas"`` routes through the fused decide op
+    (`kernels.nucb_decide`): trunk forward, augment, A^-1 bonus, and the
+    gated masked argmax in one kernel launch on TPU (its jnp reference
+    elsewhere — backend auto-detection lives in `kernels.backend`, not
+    here). ``backend="jnp"`` is the plain-XLA reference path."""
+    if backend == "pallas":
+        a, g, mu_safe, _ = nucb_decide(
+            params, cfg, batch["x_emb"], batch["x_feat"],
+            batch["domain"], ainv, beta, tau_g, avail)
+        lp = _smoothed_logp(a.shape[0], cfg.num_actions, avail)
+        return a, lp, g, mu_safe, jnp.float32(1.0)
     mu, h, gate_p = UN.utilitynet_all_actions(
         params, cfg, batch["x_emb"], batch["x_feat"], batch["domain"])
     g_all = NU.augment(h)                                  # (B, K, F)
-    if backend == "pallas":
-        interpret = jax.default_backend() != "tpu"
-        scores = ucb_score(g_all, ainv, mu, beta, interpret=interpret)
-    else:
-        scores = mu + beta * NU.ucb_bonus(ainv, g_all)
+    scores = mu + beta * NU.ucb_bonus(ainv, g_all)
     mu_sel = mu
     if avail is not None:
         neg = jnp.where(avail > 0, 0.0, -jnp.inf)
@@ -617,14 +643,17 @@ def _sample_recency(key, batch_size: int, cum0, t_vis, rho: float):
 def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
                  cfg: UN.UtilityNetConfig, num_steps: int, batch_size: int,
                  t_vis=None, fcfg: ForgettingConfig = VANILLA_FORGETTING,
-                 delayed: bool = False):
+                 delayed: bool = False, precision: str = "f32"):
     """``num_steps`` SGD steps on sampled replay minibatches, all on
     device; ``count`` (traced) is the number of VISIBLE buffered samples.
     Shared verbatim by the host-stepped and scanned runners so identical
     keys give identical training trajectories. ``fcfg`` (static) selects
     uniform vs recency-weighted sampling; ``delayed`` (static) zeroes the
     loss weights of rows past the visibility horizon ``t_vis`` (a
-    delayed-feedback slice's rows are written but not yet learnable)."""
+    delayed-feedback slice's rows are written but not yet learnable);
+    ``precision`` (static, see :data:`TRAIN_PRECISIONS`) selects the
+    network compute dtype — gradients arrive back in f32 through the
+    cast, and AdamW keeps f32 moments and master params either way."""
 
     def step(carry, k):
         params, opt = carry
@@ -651,7 +680,7 @@ def _train_chunk(params, opt, tables, env_idx, bufs, key, cum0, count, lr,
             "gate_w": gw,
         }
         (_, _), grads = jax.value_and_grad(
-            _weighted_loss, has_aux=True)(params, cfg, batch)
+            _weighted_loss, has_aux=True)(params, cfg, batch, precision)
         grads, _ = clip_by_global_norm(grads, 1.0)
         params, opt = adamw_update(grads, opt, params, lr=lr,
                                    weight_decay=1e-4)
@@ -679,12 +708,17 @@ def _slice_weights(T: int, t, delay: int, fcfg: ForgettingConfig):
 
 
 def _rebuild_impl(params, tables, env_idx, action_buf, w_buf,
-                  cfg: UN.UtilityNetConfig, ridge_lambda0, row_w=None):
+                  cfg: UN.UtilityNetConfig, ridge_lambda0, row_w=None,
+                  backend: str = "jnp"):
     """Recompute g for every buffered pair with the fresh net; one masked
-    full-capacity pass (unwritten/padded rows have w=0 and vanish from
-    A = lambda0 I + sum w_i g_i g_i^T), then one Cholesky solve.
-    ``row_w`` (T,) optionally reweights whole slices — the forgetting /
-    delayed-visibility hook (:func:`_slice_weights`)."""
+    pass over the given buffer rows (unwritten/padded rows have w=0 and
+    vanish from A = lambda0 I + sum w_i g_i g_i^T), then one Cholesky
+    solve. ``row_w`` (T,) optionally reweights whole slices — the
+    forgetting / delayed-visibility hook (:func:`_slice_weights`).
+    ``backend="pallas"`` swaps the solve for the streamed blocked-
+    Cholesky kernel (`kernels.ainv_rebuild`) on TPU; callers pass only
+    the valid buffer prefix (:func:`_neural_rebuild` buckets it) so the
+    feature recompute stops round-tripping full capacity every slice."""
     if row_w is not None:
         w_buf = w_buf * row_w[:, None]
     sid = env_idx.reshape(-1)
@@ -693,6 +727,8 @@ def _rebuild_impl(params, tables, env_idx, action_buf, w_buf,
     _, h, _ = UN.utilitynet_apply(
         params, tables["x_emb"][sid], tables["x_feat"][sid],
         tables["domain"][sid], a)
+    if backend == "pallas":
+        return ainv_rebuild(NU.augment(h), ridge_lambda0, weights=w)
     return NU.rebuild_ainv(NU.augment(h), ridge_lambda0, weights=w)
 
 
@@ -770,10 +806,15 @@ def _neural_update(cfg: UN.UtilityNetConfig, with_ainv: bool):
     return update
 
 
-def _neural_train(cfg: UN.UtilityNetConfig):
+def _neural_train(cfg: UN.UtilityNetConfig, precision: str = "f32"):
     """Chunked replay SGD (shared UtilityNet train path). Key discipline:
     one split per chunk from the runner-carried stream — identical to
-    the pre-unification scan and the host-stepped parity reference."""
+    the pre-unification scan and the host-stepped parity reference.
+    ``precision`` selects the network compute dtype for the SGD steps
+    (:data:`TRAIN_PRECISIONS`); f32 is the bit-exact default."""
+    if precision not in TRAIN_PRECISIONS:
+        raise KeyError(f"unknown train precision {precision!r}; "
+                       f"known: {sorted(TRAIN_PRECISIONS)}")
 
     def train(state, key, ctx):
         t_vis = ctx.t - ctx.delay
@@ -787,7 +828,7 @@ def _neural_train(cfg: UN.UtilityNetConfig):
             params, opt = _train_chunk(
                 params, opt, ctx.tables, ctx.env_idx, bufs, kc, ctx.cum0,
                 count, ctx.hyp.lr, cfg, TRAIN_CHUNK, ctx.batch_size,
-                t_vis, ctx.fcfg, ctx.delay > 0)
+                t_vis, ctx.fcfg, ctx.delay > 0, precision)
             return (params, opt, key), None
 
         (params, opt, key), _ = jax.lax.scan(
@@ -798,15 +839,42 @@ def _neural_train(cfg: UN.UtilityNetConfig):
     return train
 
 
-def _neural_rebuild(cfg: UN.UtilityNetConfig):
+def _rebuild_buckets(T: int):
+    """Static quarter-capacity prefix buckets for the end-of-slice
+    rebuild. Only slices 0..t are ever written, so rebuilding over the
+    smallest bucket covering t+1 rows skips the feature recompute for
+    the untouched tail — dropped rows all carry w=0, i.e. they appended
+    exact zero products to the Gram accumulation, so every bucket yields
+    the same A^-1 the full-capacity pass does (the scanned-vs-stepped
+    parity and golden suites pin this). Average cost over a run: ~62.5%
+    of the full-capacity rebuild FLOPs."""
+    return sorted({max(1, (T * m) // 4) for m in (1, 2, 3)} | {T})
+
+
+def _neural_rebuild(cfg: UN.UtilityNetConfig, backend: str = "jnp"):
     def rebuild(state, ctx):
+        T = ctx.env_idx.shape[0]
         row_w = None
         if ctx.delay > 0 or not ctx.fcfg.is_vanilla:
-            row_w = _slice_weights(ctx.env_idx.shape[0], ctx.t, ctx.delay,
-                                   ctx.fcfg)
-        ainv = _rebuild_impl(state["params"], ctx.tables, ctx.env_idx,
-                             state["bufs"]["action"], state["bufs"]["w"],
-                             cfg, ctx.hyp.ridge_lambda0, row_w)
+            row_w = _slice_weights(T, ctx.t, ctx.delay, ctx.fcfg)
+        bufs = state["bufs"]
+        buckets = _rebuild_buckets(T)
+
+        def branch(b: int):
+            def f():
+                return _rebuild_impl(
+                    state["params"], ctx.tables, ctx.env_idx[:b],
+                    bufs["action"][:b], bufs["w"][:b], cfg,
+                    ctx.hyp.ridge_lambda0,
+                    None if row_w is None else row_w[:b], backend)
+            return f
+
+        if len(buckets) == 1:
+            ainv = branch(buckets[0])()
+        else:
+            needed = jnp.clip(ctx.t + 1, 1, T)
+            idx = jnp.sum(needed > jnp.asarray(buckets, jnp.int32))
+            ainv = jax.lax.switch(idx, [branch(b) for b in buckets])
         return dict(state, ainv=ainv)
     return rebuild
 
@@ -872,13 +940,17 @@ def _avail_neg(avail):
 # ------------------------------------------------------------ neural zoo --
 @functools.lru_cache(maxsize=None)
 def neuralucb_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
-                     warm_slice: bool = True) -> BanditPolicy:
+                     warm_slice: bool = True,
+                     precision: str = "f32") -> BanditPolicy:
     """The paper's policy (§3.3 + Algorithm 1) as a registered
     BanditPolicy — the richest member of the zoo: gated UCB decide,
     buffer + Woodbury update, chunked replay train, Cholesky rebuild.
     ``warm_slice=False`` drops the slice-0 uniform warm-up — the
     pretrained (warm-start) variant routes by the offline net + A^-1
-    from the first request (DESIGN.md §13.3)."""
+    from the first request (DESIGN.md §13.3). ``backend="pallas"``
+    swaps decide and rebuild onto the fused kernels
+    (`kernels.nucb_decide` / `kernels.ainv_rebuild`); ``precision``
+    selects the train-path compute dtype (:data:`TRAIN_PRECISIONS`)."""
 
     def decide(state, key, batch, ctx):
         hyp = ctx.hyp
@@ -898,7 +970,8 @@ def neuralucb_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
 
     return BanditPolicy(
         "neuralucb", _neural_init(cfg, True), decide,
-        _neural_update(cfg, True), _neural_train(cfg), _neural_rebuild(cfg),
+        _neural_update(cfg, True), _neural_train(cfg, precision),
+        _neural_rebuild(cfg, backend),
         _neural_prepare, pretrain=_neural_pretrain(cfg, True),
         availability_aware=True)
 
@@ -910,7 +983,8 @@ def _split_aux(dec):
 
 @functools.lru_cache(maxsize=None)
 def neural_ts_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
-                     warm_slice: bool = True) -> BanditPolicy:
+                     warm_slice: bool = True,
+                     precision: str = "f32") -> BanditPolicy:
     """NeuralTS: Thompson sampling by posterior perturbation — score
     mu + nu * sigma * z with z ~ N(0, 1) per (sample, arm) and sigma the
     same sqrt(g^T A^-1 g) bonus NeuralUCB uses (the Pallas ``ucb_score``
@@ -927,10 +1001,10 @@ def neural_ts_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
                 batch["domain"])
             g_all = NU.augment(h)
             if backend == "pallas":
-                interpret = jax.default_backend() != "tpu"
+                # backend auto-detection (compiled on TPU, jnp ref
+                # elsewhere) lives inside the op — no gate here
                 sigma = ucb_score(g_all, state["ainv"],
-                                  jnp.zeros_like(mu), 1.0,
-                                  interpret=interpret)
+                                  jnp.zeros_like(mu), 1.0)
             else:
                 sigma = NU.ucb_bonus(state["ainv"], g_all)
             z = jax.random.normal(key, mu.shape)
@@ -956,7 +1030,8 @@ def neural_ts_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
 
     return BanditPolicy(
         "neural-ts", _neural_init(cfg, True), decide,
-        _neural_update(cfg, True), _neural_train(cfg), _neural_rebuild(cfg),
+        _neural_update(cfg, True), _neural_train(cfg, precision),
+        _neural_rebuild(cfg, backend),
         _neural_prepare, pretrain=_neural_pretrain(cfg, True),
         availability_aware=True)
 
@@ -982,8 +1057,8 @@ def _mean_greedy_decide(state, key, batch, ctx, cfg, pick):
 
 
 @functools.lru_cache(maxsize=None)
-def eps_greedy_policy(cfg: UN.UtilityNetConfig,
-                      warm_slice: bool = True) -> BanditPolicy:
+def eps_greedy_policy(cfg: UN.UtilityNetConfig, warm_slice: bool = True,
+                      precision: str = "f32") -> BanditPolicy:
     """Neural ε-greedy: argmax of the UtilityNet mean with probability
     1-ε, a uniform (availability-masked) arm otherwise. ε = 0 reproduces
     net-greedy. No A^-1 — the cheapest neural explorer (no per-slice
@@ -1015,14 +1090,14 @@ def eps_greedy_policy(cfg: UN.UtilityNetConfig,
 
     return BanditPolicy(
         "eps-greedy", _neural_init(cfg, False), decide,
-        _neural_update(cfg, False), _neural_train(cfg),
+        _neural_update(cfg, False), _neural_train(cfg, precision),
         prepare=_neural_prepare, pretrain=_neural_pretrain(cfg, False),
         availability_aware=True)
 
 
 @functools.lru_cache(maxsize=None)
-def boltzmann_policy(cfg: UN.UtilityNetConfig,
-                     warm_slice: bool = True) -> BanditPolicy:
+def boltzmann_policy(cfg: UN.UtilityNetConfig, warm_slice: bool = True,
+                     precision: str = "f32") -> BanditPolicy:
     """Neural Boltzmann / softmax-temperature exploration: sample arm a
     with probability softmax(mu / temperature). Temperature -> 0
     approaches net-greedy. No A^-1; shares the UtilityNet train path.
@@ -1050,7 +1125,7 @@ def boltzmann_policy(cfg: UN.UtilityNetConfig,
 
     return BanditPolicy(
         "boltzmann", _neural_init(cfg, False), decide,
-        _neural_update(cfg, False), _neural_train(cfg),
+        _neural_update(cfg, False), _neural_train(cfg, precision),
         prepare=_neural_prepare, pretrain=_neural_pretrain(cfg, False),
         availability_aware=True)
 
@@ -1233,31 +1308,39 @@ def _neural_hypers(explore, gate_margin=0.05, lr=1e-3, ridge_lambda0=1.0,
 def _b_neuralucb(env, cfg, beta: float = 1.0, tau_g: float = 0.5,
                  gate_margin: float = 0.05, lr: float = 1e-3,
                  ridge_lambda0: float = 1.0, cost_lambda=None,
-                 ucb_backend: str = "jnp", warm_slice: bool = True):
+                 ucb_backend: str = "jnp", warm_slice: bool = True,
+                 train_precision: str = "f32"):
     hyp = NeuralUCBHypers(
         beta=_f(beta), tau_g=_f(tau_g), gate_margin=_f(gate_margin),
         lr=_f(lr), ridge_lambda0=_f(ridge_lambda0),
         cost_lambda=_f(-1.0 if cost_lambda is None else cost_lambda))
-    return neuralucb_policy(cfg, ucb_backend, warm_slice), hyp
+    return neuralucb_policy(cfg, ucb_backend, warm_slice,
+                            train_precision), hyp
 
 
 @register_policy("neural_ts")
 def _b_neural_ts(env, cfg, explore: float = 1.0,
-                 ucb_backend: str = "jnp", warm_slice: bool = True, **kw):
-    return (neural_ts_policy(cfg, ucb_backend, warm_slice),
+                 ucb_backend: str = "jnp", warm_slice: bool = True,
+                 train_precision: str = "f32", **kw):
+    return (neural_ts_policy(cfg, ucb_backend, warm_slice,
+                             train_precision),
             _neural_hypers(explore, **kw))
 
 
 @register_policy("eps_greedy")
 def _b_eps_greedy(env, cfg, explore: float = 0.1,
-                  ucb_backend: str = "jnp", warm_slice: bool = True, **kw):
-    return eps_greedy_policy(cfg, warm_slice), _neural_hypers(explore, **kw)
+                  ucb_backend: str = "jnp", warm_slice: bool = True,
+                  train_precision: str = "f32", **kw):
+    return (eps_greedy_policy(cfg, warm_slice, train_precision),
+            _neural_hypers(explore, **kw))
 
 
 @register_policy("boltzmann")
 def _b_boltzmann(env, cfg, explore: float = 0.05,
-                 ucb_backend: str = "jnp", warm_slice: bool = True, **kw):
-    return boltzmann_policy(cfg, warm_slice), _neural_hypers(explore, **kw)
+                 ucb_backend: str = "jnp", warm_slice: bool = True,
+                 train_precision: str = "f32", **kw):
+    return (boltzmann_policy(cfg, warm_slice, train_precision),
+            _neural_hypers(explore, **kw))
 
 
 @register_policy("sup_winrate")

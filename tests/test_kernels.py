@@ -105,7 +105,10 @@ def test_ucb_score_sweep(T, K, F, beta):
     Lm = jax.random.normal(ks[1], (F, F)) * 0.1
     ainv = Lm @ Lm.T + jnp.eye(F)
     mu = jax.random.normal(ks[2], (T, K))
-    out = ucb_score(g, ainv, mu, beta, block_r=128)
+    # interpret=True pins the Pallas path: the default now self-resolves
+    # to the jnp ref off-TPU (repro.kernels.backend), which would make
+    # this parity check vacuous on CPU CI
+    out = ucb_score(g, ainv, mu, beta, block_r=128, interpret=True)
     ref = ucb_score_ref(g, ainv, mu, beta)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
                                rtol=1e-4)

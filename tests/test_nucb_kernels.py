@@ -1,0 +1,214 @@
+"""Parity suites for the fused NeuralUCB hot-path kernels
+(`kernels.nucb_decide`, `kernels.ainv_rebuild`) vs their jnp references,
+plus the bf16 mixed-precision train path (DESIGN.md §14).
+
+On CPU CI the Pallas legs run in interpret mode; on TPU they compile —
+``INTERPRET`` pins whichever leg is NOT the default dispatch so the
+parity checks never degenerate to ref-vs-ref.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — fall back to the local stub
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import neuralucb as NU
+from repro.core import utilitynet as UN
+from repro.kernels.ainv_rebuild import ainv_rebuild, ainv_rebuild_ref
+from repro.kernels.backend import on_tpu
+from repro.kernels.nucb_decide import (
+    nucb_decide,
+    nucb_decide_ref,
+    prepare_decide_inputs,
+)
+from repro.sim.policies import _decide_ucb, _weighted_loss
+
+INTERPRET = not on_tpu()
+#: two-tier tolerances: f32 kernels are near-bit-exact vs the jnp refs;
+#: the bf16 compute tier absorbs mantissa loss in the trunk GEMMs
+ATOL = {jnp.float32: 3e-5, jnp.bfloat16: 5e-2}
+
+
+def _cfg(**kw):
+    return UN.UtilityNetConfig(**kw)
+
+
+def _decide_case(seed, B, cfg):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    params = UN.init_utilitynet(ks[0], cfg)
+    x_emb = jax.random.normal(ks[1], (B, cfg.emb_dim))
+    x_feat = jax.random.normal(ks[2], (B, cfg.feat_dim))
+    domain = jax.random.randint(ks[3], (B,), 0, cfg.num_domains)
+    F = cfg.ucb_feature_dim
+    Lm = jax.random.normal(jax.random.PRNGKey(seed + 7), (F, F)) * 0.05
+    ainv = Lm @ Lm.T + jnp.eye(F) * 0.5
+    return params, x_emb, x_feat, domain, ainv
+
+
+@pytest.mark.parametrize("B", [5, 37, 256])
+@pytest.mark.parametrize("beta,tau_g", [(0.0, 0.5), (1.3, 0.5),
+                                        (2.0, 1.1)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_nucb_decide_matches_ref(B, beta, tau_g, masked):
+    cfg = _cfg()
+    params, x_emb, x_feat, domain, ainv = _decide_case(0, B, cfg)
+    avail = None
+    if masked:
+        avail = jnp.ones((cfg.num_actions,)).at[jnp.asarray([1, 4])].set(0.0)
+    a_k, g_k, mu_k, gp_k = nucb_decide(
+        params, cfg, x_emb, x_feat, domain, ainv, jnp.float32(beta),
+        jnp.float32(tau_g), avail, block_b=64, interpret=INTERPRET)
+    # the jnp oracle, platform-independent (interpret=None would resolve
+    # to the compiled kernel on TPU)
+    pre = prepare_decide_inputs(params, x_emb, x_feat, domain)
+    ctx, gp_r = pre[0], pre[1]
+    a_r, g_r, mu_r = nucb_decide_ref(
+        ctx, *pre[2:], ainv, gp_r,
+        None if avail is None else avail.astype(jnp.float32),
+        jnp.float32(beta), jnp.float32(tau_g))
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    tol = ATOL[jnp.float32]
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(mu_k), np.asarray(mu_r),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(gp_k), np.asarray(gp_r),
+                               atol=tol, rtol=tol)
+    if masked:
+        assert not np.isin(np.asarray(a_k), [1, 4]).any()
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_nucb_decide_matches_decide_ucb_jnp(masked):
+    """End-to-end contract: the fused op must reproduce the policy
+    zoo's jnp DECIDE (`_decide_ucb(backend="jnp")`) — action, chosen-arm
+    feature, and safe-greedy mean."""
+    cfg = _cfg()
+    B = 96
+    params, x_emb, x_feat, domain, ainv = _decide_case(3, B, cfg)
+    batch = {"x_emb": x_emb, "x_feat": x_feat, "domain": domain}
+    avail = None
+    if masked:
+        avail = jnp.ones((cfg.num_actions,)).at[0].set(0.0)
+    beta, tau_g = jnp.float32(1.1), jnp.float32(0.5)
+    a_j, lp_j, g_j, mu_j, _ = _decide_ucb(params, ainv, batch, beta,
+                                          tau_g, cfg, "jnp", avail)
+    a_k, g_k, mu_k, _ = nucb_decide(params, cfg, x_emb, x_feat, domain,
+                                    ainv, beta, tau_g, avail,
+                                    interpret=INTERPRET)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_j))
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_j),
+                               atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(mu_k), np.asarray(mu_j),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_nucb_decide_bf16_compute_tier():
+    """bf16 trunk compute stays within the loose tier: scores move by at
+    most bf16 rounding, so the argmax agrees except near exact ties."""
+    cfg = _cfg()
+    B = 128
+    params, x_emb, x_feat, domain, ainv = _decide_case(5, B, cfg)
+    beta, tau_g = jnp.float32(1.0), jnp.float32(0.5)
+    a_r, g_r, mu_r, _ = nucb_decide(params, cfg, x_emb, x_feat, domain,
+                                    ainv, beta, tau_g)
+    a_b, g_b, mu_b, _ = nucb_decide(params, cfg, x_emb, x_feat, domain,
+                                    ainv, beta, tau_g, interpret=True,
+                                    compute_dtype=jnp.bfloat16)
+    tol = ATOL[jnp.bfloat16]
+    assert float(np.mean(np.asarray(a_b) == np.asarray(a_r))) >= 0.9
+    agree = np.asarray(a_b) == np.asarray(a_r)
+    np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu_r),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(g_b)[agree],
+                               np.asarray(g_r)[agree],
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("N,F", [(40, 129), (256, 129), (1024, 129),
+                                 (64, 257), (7, 33)])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_ainv_rebuild_matches_ref(N, F, weighted):
+    ks = jax.random.split(jax.random.PRNGKey(N + F), 2)
+    gs = jax.random.normal(ks[0], (N, F)) * 0.3
+    w = None
+    if weighted:
+        w = jax.random.uniform(ks[1], (N,))
+        w = w.at[: N // 3].set(0.0)          # dead buffer rows
+    out = ainv_rebuild(gs, 1.3, weights=w, block_r=128,
+                       interpret=INTERPRET)
+    ref = ainv_rebuild_ref(gs, 1.3, weights=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+    # SPD sanity: symmetric, positive diagonal
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out).T,
+                               atol=1e-5)
+    assert (np.diag(np.asarray(out)) > 0).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(min_value=2, max_value=48),
+       lam=st.floats(min_value=0.25, max_value=4.0),
+       zero_frac=st.floats(min_value=0.0, max_value=1.0))
+def test_ainv_rebuild_property(n, lam, zero_frac):
+    """Property: for any buffer size, ridge strength, and dead-row
+    fraction — INCLUDING all rows zero-weighted, where A^-1 must come
+    back exactly (lambda0 I)^-1 — the kernel matches
+    ``NU.rebuild_ainv``."""
+    d = 17
+    gs = jax.random.normal(jax.random.PRNGKey(n), (n, d)) * 0.5
+    nz = int(round(zero_frac * n))
+    w = jnp.ones((n,)).at[:nz].set(0.0)
+    out = ainv_rebuild(gs, lam, weights=w, block_r=16, interpret=True)
+    ref = NU.rebuild_ainv(gs, lam, weights=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+    if nz == n:
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.eye(d) / lam, atol=1e-5)
+
+
+def test_weighted_loss_bf16_parity_and_f32_state():
+    """bf16 train compute: loss within the bf16 tier of the f32 path,
+    gradients finite and still f32 (master params / accumulators never
+    leave f32 — DESIGN.md §14.2)."""
+    cfg = _cfg()
+    B = 64
+    ks = jax.random.split(jax.random.PRNGKey(11), 6)
+    params = UN.init_utilitynet(ks[0], cfg)
+    batch = {
+        "x_emb": jax.random.normal(ks[1], (B, cfg.emb_dim)),
+        "x_feat": jax.random.normal(ks[2], (B, cfg.feat_dim)),
+        "domain": jax.random.randint(ks[3], (B,), 0, cfg.num_domains),
+        "action": jax.random.randint(ks[4], (B,), 0, cfg.num_actions),
+        "reward": jax.random.uniform(ks[5], (B,)),
+        "gate_label": (jax.random.uniform(ks[5], (B,)) > 0.5
+                       ).astype(jnp.float32),
+        "w": jnp.ones((B,)),
+        "gate_w": jnp.ones((B,)),
+    }
+    vg = jax.value_and_grad(_weighted_loss, has_aux=True)
+    (l32, _), g32 = vg(params, cfg, batch, "f32")
+    (l16, _), g16 = vg(params, cfg, batch, "bf16")
+    tol = ATOL[jnp.bfloat16]
+    np.testing.assert_allclose(float(l16), float(l32), atol=tol, rtol=tol)
+    for leaf in jax.tree.leaves(g16):
+        assert leaf.dtype == jnp.float32
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_neuralucb_precision_threads_through_registry():
+    """The precision knob reaches every neural builder via make_policy
+    (the experiments compiler passes ``train_precision`` when a spec
+    sets TrainSpec.precision != "f32"); unknown values fail loudly."""
+    from repro.sim.policies import make_policy
+    cfg = _cfg()
+    for name in ("neuralucb", "neural_ts", "eps_greedy", "boltzmann"):
+        pol, hyp = make_policy(name, None, cfg, train_precision="bf16")
+        assert pol.train is not None
+    with pytest.raises(KeyError):
+        make_policy("neuralucb", None, cfg,
+                    train_precision="fp8")  # not in TRAIN_PRECISIONS

@@ -160,11 +160,26 @@ keys = jnp.stack([jax.random.PRNGKey(s) for s in range(4)])
 sk = shard_sweep_axis(keys)
 assert len(sk.sharding.device_set) == 2, sk.sharding
 odd = shard_sweep_axis(jnp.arange(3.0))        # 3 lanes on 2 devices
-assert len(odd.sharding.device_set) == 1       # falls back, never rejects
+assert len(odd.sharding.device_set) == 1       # legacy path falls back
+# the engine's sweep runner now PADS instead of degrading: 3 lanes on 2
+# devices get one dead lane and still shard 2-ways
+from repro.distributed.sharding import pad_sweep_lanes, sweep_lane_layout
+from repro.launch.mesh import make_sweep_mesh
+mesh = make_sweep_mesh(1, 3)
+lay = sweep_lane_layout(3, mesh)
+assert (lay.pad, lay.n_devices, lay.total) == (1, 2, 4), lay
+padded = pad_sweep_lanes(jnp.arange(1.0, 4.0), lay.pad)
+assert padded.shape == (4,) and float(padded[3]) == 1.0  # lane-0 copy
 henv = RouterBenchSim(seed=0, n_samples=600, n_slices=3)
 denv = DeviceReplayEnv.from_host(henv)
 out = run_baseline_sweep(denv, random_policy(denv.K), seeds=range(4))
 assert out["avg_reward"].shape == (1, 4, 3)     # annotated (G, seeds, T)
+assert out["layout"] == {"n_lanes": 4, "pad": 0, "n_devices": 2,
+                         "mesh": {"grid": 1, "seed": 2}}
+# non-dividing lane count: dead lane dropped from results, layout says so
+out3 = run_baseline_sweep(denv, random_policy(denv.K), seeds=range(3))
+assert out3["avg_reward"].shape == (1, 3, 3)
+assert out3["layout"]["pad"] == 1 and out3["layout"]["n_devices"] == 2
 # the policy AXIS shares the same lane sharding: a 2-policy zoo sweep
 # executes as one dispatch with each policy's 4 lanes split 2-ways
 from repro.sim import make_policy, run_policy_sweep

@@ -30,6 +30,9 @@ Five comparisons, recorded to ``BENCH_protocol.json`` at the repo root
       the pallas entry records the self-dispatched jnp reference.
   ainv_rebuild             — the streamed blocked-Cholesky A^-1 rebuild
       (kernels.ainv_rebuild) per backend, same schema.
+  nucb_fused_update        — the fused rank-k Woodbury A^-1 update
+      (kernels.nucb_update, single launch, A^-1 VMEM-resident) per
+      backend, same schema.
   policy_zoo_sweep         — the unified runtime's policy axis
       (DESIGN.md §10): a 5-policy × seed sweep as ONE sharded dispatch
       vs per-policy sweeps and sequential per-seed runs, with
@@ -104,6 +107,7 @@ from repro.sim.engine import (
 from repro.core import neuralucb as NU
 from repro.core.utilitynet import init_utilitynet
 from repro.kernels.ainv_rebuild import ainv_rebuild
+from repro.kernels.nucb_update import nucb_update
 from repro.kernels.backend import PALLAS, resolve_backend
 from repro.roofline.model import roofline_terms
 from repro.sim.policies import _decide_ucb
@@ -402,6 +406,33 @@ def bench_nucb_kernels(batch: int = 4096, buffer_rows: int = 8192,
     reb_flops = 2.0 * buffer_rows * F * F + 2.0 * F ** 3
     reb_bytes = 4.0 * (buffer_rows * (F + 1) + 3 * F * F)
 
+    # the fused rank-k Woodbury UPDATE (kernels.nucb_update): one slice's
+    # worth of rows folded into A^-1 in a single launch, A^-1 resident
+    gs_upd = gs[:batch]
+
+    def update(backend):
+        if backend == "pallas":
+            fn = jax.jit(lambda ai, g: nucb_update(ai, g))
+        else:
+            fn = jax.jit(lambda ai, g: NU.woodbury_update(ai, g))
+        jax.block_until_ready(fn(ainv, gs_upd))             # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(ainv, gs_upd))
+        wall = (time.perf_counter() - t0) / reps
+        return {"updates_per_s": 1.0 / wall,
+                "rows_per_s": batch / wall, "wall_s": wall}
+
+    upd = {"jnp": dict(update("jnp"), mode="xla"),
+           "pallas": dict(update("pallas"), mode=pallas_mode)}
+
+    # per 128-row block of k rows: u = G A^-1 (2kF^2), S = I + u G^T
+    # (2k^2 F), Cholesky k^3/3, x = S^-1 u (2k^2 F), downdate u^T x
+    # (2kF^2) -> aggregated over batch rows
+    bk = 128.0
+    upd_flops = batch * (4.0 * F * F + 4.0 * bk * F + bk * bk / 3.0)
+    upd_bytes = 4.0 * (batch * F + 2.0 * F * F)
+
     return {
         "nucb_fused_decide": {
             "batch": batch, "num_actions": K, "feature_dim": F,
@@ -421,6 +452,15 @@ def bench_nucb_kernels(batch: int = 4096, buffer_rows: int = 8192,
             "roofline": dict(
                 roofline_terms(reb_flops, reb_bytes, 0.0),
                 flops=reb_flops, bytes=reb_bytes),
+        },
+        "nucb_fused_update": {
+            "update_rows": batch, "feature_dim": F, "block_k": int(bk),
+            "backends": upd,
+            "speedup_pallas_vs_jnp": (upd["jnp"]["wall_s"]
+                                      / upd["pallas"]["wall_s"]),
+            "roofline": dict(
+                roofline_terms(upd_flops, upd_bytes, 0.0),
+                flops=upd_flops, bytes=upd_bytes),
         },
     }
 
@@ -639,16 +679,25 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
     host_step_s = (time.perf_counter() - t0) / 5
 
     nucb = DeviceNeuralUCB(denv, cfg, seed=0)
-    step_args = (nucb.params, nucb.ainv, tables, nucb.bufs, jnp.int32(1),
-                 denv.idx[1], denv.mask[1], jax.random.PRNGKey(0),
-                 jnp.float32(1.0), jnp.float32(0.5), jnp.float32(0.05))
-    jax.block_until_ready(
-        _nucb_slice_step(*step_args, cfg, nucb.ucb_backend, False)[0])
+
+    # ainv/bufs are donated by _nucb_slice_step — thread the returned
+    # buffers through the timing loop exactly like the stepped runner does
+    def dev_step(ainv, bufs):
+        ainv, bufs, _ = _nucb_slice_step(
+            nucb.params, ainv, tables, bufs, jnp.int32(1),
+            denv.idx[1], denv.mask[1], jax.random.PRNGKey(0),
+            jnp.float32(1.0), jnp.float32(0.5), jnp.float32(0.05),
+            cfg, nucb.ucb_backend, False)
+        return ainv, bufs
+
+    ainv, bufs = dev_step(nucb.ainv, nucb.bufs)
+    jax.block_until_ready(ainv)
     t0 = time.perf_counter()
     for _ in range(5):
-        jax.block_until_ready(
-            _nucb_slice_step(*step_args, cfg, nucb.ucb_backend, False)[0])
+        ainv, bufs = dev_step(ainv, bufs)
+        jax.block_until_ready(ainv)
     dev_step_s = (time.perf_counter() - t0) / 5
+    nucb.ainv, nucb.bufs = ainv, bufs
 
     nucb_runs = bench_neuralucb_subprocess(
         nucb_samples, nucb_slices, nucb_seeds, nucb_train_steps, nucb_batch)
@@ -704,7 +753,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine_v7", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v8", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -733,7 +782,7 @@ def run(refresh: bool = False, **kw):
         rows.append((f"zoo/{name}", round(p["sequential_s"], 4),
                      round(p["sweep_s"], 4),
                      f"{p['decisions_per_s']:.0f}/s"))
-    for sec in ("nucb_fused_decide", "ainv_rebuild"):
+    for sec in ("nucb_fused_decide", "ainv_rebuild", "nucb_fused_update"):
         s = out[sec]
         for bk, row in s["backends"].items():
             rate = row.get("decisions_per_s", row.get("rows_per_s"))

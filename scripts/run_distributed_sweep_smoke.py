@@ -1,0 +1,161 @@
+#!/usr/bin/env python
+"""2-process ``jax.distributed`` CPU sweep smoke (DESIGN.md §15.3).
+
+Driver mode (default): spawn 2 worker processes that form a
+``jax.distributed`` cluster on localhost (1 forced host CPU device
+each), each running its :func:`repro.distributed.run_sweep_multihost`
+slice of a LinUCB hyper-grid sweep and dumping its artifact to JSON.
+The driver then runs the SAME sweep single-process through the plain
+`run_policy_sweep` engine and asserts:
+
+* the two workers' grid spans partition the grid exactly;
+* every worker lane is BIT-identical to the corresponding lane of the
+  single-process reference (lane-parity: a sweep lane's trajectory must
+  not depend on which host computed it);
+* both workers emit byte-identical layout manifests recording the
+  2-host global topology (host-invariant manifests).
+
+Execution is process-local by design — sweep lanes are independent, and
+the CPU backend cannot run cross-process programs anyway — so this
+smoke pins exactly the contract multi-host sweeps rely on.
+
+Worker mode (internal): ``--worker P --nproc N --port PORT --out F``.
+
+Exit status 0 = parity holds (the CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+SEEDS = range(3)
+ALPHAS = (0.5, 1.5)     # the 2-point grid split across the 2 workers
+COMPARE = ("avg_reward", "avg_cost", "action_hist")
+
+
+def _zoo(env):
+    import jax.numpy as jnp
+
+    from repro.sim import make_policy
+    from repro.sim.policies import LinUCBHypers
+
+    pol, _ = make_policy("linucb", env)
+    hyp = LinUCBHypers(alpha=jnp.asarray(ALPHAS, jnp.float32),
+                       ridge=jnp.ones(len(ALPHAS), jnp.float32))
+    return {"linucb": (pol, hyp)}
+
+
+def _env():
+    from repro.data.routerbench import RouterBenchSim
+    from repro.sim import DeviceReplayEnv
+
+    return DeviceReplayEnv.from_host(
+        RouterBenchSim(seed=0, n_samples=600, n_slices=3))
+
+
+def worker(proc: int, nproc: int, port: int, out_path: str) -> None:
+    import jax
+
+    jax.distributed.initialize(
+        coordinator_address=f"127.0.0.1:{port}",
+        num_processes=nproc, process_id=proc)
+    assert jax.process_count() == nproc, jax.process_count()
+    from repro.distributed import run_sweep_multihost
+
+    res = run_sweep_multihost(_env(), _zoo(_env()), seeds=SEEDS)["linucb"]
+    doc = {k: (res[k].tolist() if k in res else None) for k in COMPARE}
+    doc.update(layout=res["layout"], grid_span=res["grid_span"],
+               lane_span=res["lane_span"],
+               n_grid_total=res["n_grid_total"])
+    with open(out_path, "w") as f:
+        json.dump(doc, f, sort_keys=True)
+    print(f"[worker {proc}] grid_span={res['grid_span']} "
+          f"hosts={res['layout']['hosts']}", flush=True)
+
+
+def driver(tmpdir: str) -> int:
+    import numpy as np
+
+    port = _free_port()
+    outs = [os.path.join(tmpdir, f"worker{p}.json") for p in range(2)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep * bool(env.get("PYTHONPATH")) \
+        + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+    procs = [
+        subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__), "--worker", str(p),
+             "--nproc", "2", "--port", str(port), "--out", outs[p]],
+            env=env)
+        for p in range(2)
+    ]
+    codes = [p.wait(timeout=600) for p in procs]
+    if any(codes):
+        print(f"FAIL: worker exit codes {codes}")
+        return 1
+    docs = [json.load(open(o)) for o in outs]
+
+    # reference: the same sweep, single process, plain engine path
+    ref = _reference()
+
+    spans = [tuple(d["grid_span"]) for d in docs]
+    assert spans[0][0] == 0 and spans[-1][1] == len(ALPHAS), spans
+    assert spans[0][1] == spans[1][0], spans
+    assert docs[0]["layout"] == docs[1]["layout"], \
+        "layout manifests differ across hosts"
+    hosts = docs[0]["layout"]["hosts"]
+    assert hosts == {"n_hosts": 2, "devices_per_host": 1}, hosts
+    for d in docs:
+        gs, ge = d["grid_span"]
+        for k in COMPARE:
+            got = np.asarray(d[k])
+            want = ref[k][gs:ge]
+            assert got.shape == want.shape, (k, got.shape, want.shape)
+            assert np.array_equal(got, want), \
+                f"lane parity broken for {k} in grid span [{gs}, {ge})"
+    print("DISTRIBUTED_SWEEP_SMOKE_OK: 2-process lanes bit-identical to "
+          "single-process reference; manifests host-invariant")
+    return 0
+
+
+def _reference():
+    import numpy as np
+
+    from repro.sim import run_policy_sweep
+
+    res = run_policy_sweep(_env(), _zoo(_env()), seeds=SEEDS)["linucb"]
+    return {k: np.asarray(res[k]) for k in COMPARE}
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--worker", type=int, default=None)
+    ap.add_argument("--nproc", type=int, default=2)
+    ap.add_argument("--port", type=int, default=None)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+    sys.path.insert(0, SRC)
+    if args.worker is not None:
+        worker(args.worker, args.nproc, args.port, args.out)
+        return 0
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        return driver(td)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -85,12 +85,30 @@ def woodbury_update(ainv: jax.Array, gs: jax.Array,
     (k, k) system solved per step; 0 picks ``max(128, d)`` — the (k, k)
     solve is O(k^3) while the GEMMs are O(k d^2), so blocks much wider
     than the feature dim make the solve dominate and can end up slower
-    than the sequential path it replaces."""
+    than the sequential path it replaces.
+
+    Multi-block updates run as ONE ``lax.fori_loop`` over equal-sized
+    blocks with a zero-padded tail (a zero row contributes an identity
+    row/column to S and a zero row to G A^-1, i.e. an exact no-op), so
+    the trace holds one block body however many blocks stream through it
+    — the old host loop re-sliced per block and inlined ceil(n / block)
+    copies, recompiling the enclosing program for every distinct replay
+    size."""
     n, d = gs.shape
+    if n == 0:
+        return ainv
     block = block_size if block_size > 0 else max(128, d)
-    for i in range(0, n, block):
-        ainv = _woodbury_block(ainv, gs[i:i + block])
-    return ainv
+    if n <= block:
+        # single block: keep the unpadded shape (bit-exact with the
+        # pre-loop path, which the golden suites pin)
+        return _woodbury_block(ainv, gs)
+    nb = -(-n // block)
+    pad = nb * block - n
+    if pad:
+        gs = jnp.pad(gs, ((0, pad), (0, 0)))
+    blocks = gs.reshape(nb, block, d)
+    return jax.lax.fori_loop(
+        0, nb, lambda i, a: _woodbury_block(a, blocks[i]), ainv)
 
 
 @jax.jit

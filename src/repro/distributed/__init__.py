@@ -4,6 +4,7 @@ from repro.distributed.api import (
     logical_to_spec,
     current_rules,
     current_mesh,
+    run_sweep_multihost,
 )
 
 __all__ = [
@@ -12,4 +13,5 @@ __all__ = [
     "logical_to_spec",
     "current_rules",
     "current_mesh",
+    "run_sweep_multihost",
 ]

@@ -6,14 +6,27 @@ re-implemented on plain pjit since flax is unavailable.
 Logical axes used across the zoo:
   batch, seq, kv_seq, d_model, heads, kv_heads, head_dim, ffn, vocab,
   experts, expert_ffn, ssm_heads, ssm_state, frames, patches, layers
+
+Plus the multi-HOST sweep entry point (DESIGN.md §15.3):
+:func:`run_sweep_multihost` runs the protocol-engine policy sweep under
+``jax.distributed`` — each process executes its contiguous slice of the
+hyper grid on its LOCAL ("grid", "seed") mesh, while the artifact's
+layout manifest describes the GLOBAL topology mesh. Sweep lanes are
+fully independent (no cross-lane collectives anywhere in the scan), so
+per-process execution is semantically exact, works on backends without
+cross-process programs (the CPU smoke in CI), and still removes every
+inter-host communication from the hot loop on real pods.
 """
 from __future__ import annotations
 
+import functools
+import math
 import threading
 from contextlib import contextmanager
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 _state = threading.local()
@@ -79,3 +92,77 @@ def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
         return jax.lax.with_sharding_constraint(
             x, jax.sharding.NamedSharding(mesh, spec))
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# multi-host protocol sweeps
+# ---------------------------------------------------------------------------
+
+
+def _slice_grid(grid: Any, G: int, gs: int, ge: int) -> Any:
+    """Slice a hypers grid pytree to grid points [gs, ge): (G,) leaves
+    are sliced, scalar (broadcast) leaves pass through untouched — the
+    same broadcast rule `sim.engine._flatten_lanes` applies."""
+    def one(x):
+        x = jnp.asarray(x)
+        if x.ndim >= 1 and x.shape[0] == G:
+            return x[gs:ge]
+        return x
+    return jax.tree.map(one, grid)
+
+
+def run_sweep_multihost(env, policies: Dict[str, Tuple[Any, Any]], *,
+                        seeds: Sequence[int], **kwargs) -> Dict[str, Dict]:
+    """`sim.engine.run_policy_sweep` across every ``jax.distributed``
+    process: this process runs ONLY its :func:`process_lane_slice` of
+    each policy's hyper grid (whole grid points, seed-major lanes), on
+    its local mesh. Single-process (``jax.process_count() == 1``) this
+    degenerates to a plain full-grid sweep with the same annotations.
+
+    Returns the `run_policy_sweep` schema per policy, with metric leaves
+    shaped ``(g_stop - g_start, n_seeds, T, ...)`` — this worker's grid
+    rows — plus the multi-host annotations:
+
+    * ``layout`` — the GLOBAL topology mesh manifest (host-invariant:
+      every worker and an equivalent single-host run emit the same
+      bytes; `scripts/run_distributed_sweep_smoke.py` pins this);
+    * ``grid_span`` / ``lane_span`` — the [start, stop) grid-point and
+      flattened-lane spans this artifact holds (host-variant by
+      construction: they say which rows these are);
+    * ``n_grid_total`` — the full grid size, so a driver can
+      concatenate worker artifacts back into the single-host layout.
+
+    A process whose span is empty (more processes than grid points)
+    returns metric-less stubs carrying only the annotations."""
+    from repro.launch.mesh import make_sweep_mesh
+    from repro.distributed.sharding import (process_lane_slice,
+                                            sweep_lane_layout)
+    from repro.sim.engine import _grid_size, run_policy_sweep
+
+    proc, nproc = jax.process_index(), jax.process_count()
+    seeds = list(seeds)
+    n_seeds = len(seeds)
+    gsizes = {name: _grid_size(grid) for name, (_, grid) in policies.items()}
+    # one topology mesh for the whole study, same gcd factorization rule
+    # as the execution mesh run_policy_sweep builds locally
+    gmesh = make_sweep_mesh(
+        functools.reduce(math.gcd, gsizes.values(), 0) or 1, n_seeds,
+        span="global")
+    spans, sliced = {}, {}
+    for name, (pol, grid) in policies.items():
+        span = process_lane_slice(gsizes[name], n_seeds, nproc, proc)
+        spans[name] = span
+        if span[1] > span[0]:
+            sliced[name] = (pol, _slice_grid(grid, gsizes[name],
+                                             span[0], span[1]))
+    out = (run_policy_sweep(env, sliced, seeds=seeds, **kwargs)
+           if sliced else {})
+    for name in policies:
+        d = out.setdefault(name, {})
+        gs, ge, ls, le = spans[name]
+        d["layout"] = sweep_lane_layout(gsizes[name] * n_seeds,
+                                        gmesh).manifest()
+        d["grid_span"] = [int(gs), int(ge)]
+        d["lane_span"] = [int(ls), int(le)]
+        d["n_grid_total"] = int(gsizes[name])
+    return out

@@ -135,11 +135,18 @@ class SweepLaneLayout(NamedTuple):
     ``n_lanes`` real lanes + ``pad`` dead lanes = a multiple of the
     ``grid * seed`` device count, so the lane shard per device is always
     equal-sized (no silent degrade to fewer devices). Dead lanes replay
-    lane 0 and are sliced off before any result leaves the runner."""
+    lane 0 and are sliced off before any result leaves the runner.
+
+    ``hosts`` records how many ``jax.distributed`` processes contribute
+    devices to the mesh (1 off-cluster) — host TOPOLOGY only, never
+    which host produced the artifact, so manifests from every worker of
+    a multi-host sweep and from an equivalent single-host run with the
+    same mesh are byte-identical (DESIGN.md §15.3)."""
     n_lanes: int
     pad: int
     grid: int
     seed: int
+    hosts: int = 1
 
     @property
     def total(self) -> int:
@@ -153,20 +160,46 @@ class SweepLaneLayout(NamedTuple):
         """JSON-ready layout record for sweep result manifests."""
         return {"n_lanes": int(self.n_lanes), "pad": int(self.pad),
                 "n_devices": int(self.n_devices),
-                "mesh": {"grid": int(self.grid), "seed": int(self.seed)}}
+                "mesh": {"grid": int(self.grid), "seed": int(self.seed)},
+                "hosts": {"n_hosts": int(self.hosts),
+                          "devices_per_host":
+                              int(self.n_devices) // int(self.hosts)}}
 
 
 def sweep_lane_layout(n_lanes: int, mesh=None) -> SweepLaneLayout:
     """Layout for ``n_lanes`` sweep lanes on ``mesh`` (a ("grid","seed")
     mesh from :func:`repro.launch.mesh.make_sweep_mesh`; None = all
-    local devices on a 1 x nd seed row)."""
+    local devices on a 1 x nd seed row). Host topology is read off the
+    mesh's device set, so a ``span="global"`` mesh yields a multi-host
+    layout and a local mesh always yields ``hosts=1``."""
     if mesh is not None:
         g, s = (int(d) for d in mesh.devices.shape)
+        hosts = len({d.process_index for d in mesh.devices.flat})
     else:
         g, s = 1, len(jax.local_devices())
+        hosts = 1
     nd = g * s
-    return SweepLaneLayout(n_lanes=int(n_lanes),
-                           pad=(-int(n_lanes)) % nd, grid=g, seed=s)
+    return SweepLaneLayout(n_lanes=int(n_lanes), pad=(-int(n_lanes)) % nd,
+                           grid=g, seed=s, hosts=max(1, hosts))
+
+
+def process_lane_slice(n_grid: int, n_seeds: int, n_procs: int,
+                       proc: int) -> Tuple[int, int, int, int]:
+    """Contiguous work span owned by one process of a multi-host sweep.
+
+    Returns ``(g_start, g_stop, lane_start, lane_stop)``: process ``p``
+    of ``h`` owns grid points ``[p*G//h, (p+1)*G//h)`` — whole grid
+    points, never split seeds, so every process's slice is a clean
+    (g, n_seeds, ...) block — which in the seed-major flattened lane
+    axis is lanes ``[g_start*n_seeds, g_stop*n_seeds)``. Spans are
+    contiguous, disjoint, cover the grid exactly, and are empty (start
+    == stop) for trailing processes when ``n_grid < n_procs``."""
+    if not 0 <= proc < n_procs:
+        raise ValueError(f"process_lane_slice: proc {proc} outside "
+                         f"[0, {n_procs})")
+    gs = proc * n_grid // n_procs
+    ge = (proc + 1) * n_grid // n_procs
+    return gs, ge, gs * n_seeds, ge * n_seeds
 
 
 def pad_sweep_lanes(tree, pad: int):

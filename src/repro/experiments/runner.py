@@ -106,7 +106,8 @@ def _run_serving_cell(plan: ExperimentPlan, *,
         pol, hyp, _tables(plan.env), seed=spec.seeds[0],
         slice_width=sv.decide_batch, capacity_slices=capacity,
         batch_size=spec.train.batch_size, train_chunks=chunks, fcfg=fcfg,
-        pretrained_state=pretrained_state)
+        pretrained_state=pretrained_state,
+        max_train_lag=sv.max_train_lag)
     metrics = run_storm(
         plan.env, router, requests=sv.requests, waves=sv.waves,
         pattern=sv.pattern, outages=sv.outages,

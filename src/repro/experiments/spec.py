@@ -170,6 +170,7 @@ class ServingSpec:
     outages: Tuple[Tuple[int, int, int], ...] = ()
     fail_decide_calls: Tuple[int, ...] = ()
     train_every: int = 0
+    max_train_lag: int = 0
     p99_decide_ms: Optional[float] = None
     max_shed_fraction: float = 1.0
     require_zero_lost: bool = True
@@ -193,6 +194,9 @@ class ServingSpec:
                                  f"(need arm >= 0, 0 <= start < end)")
         if self.train_every < 0:
             raise ValueError("ServingSpec: train_every must be >= 0")
+        if self.max_train_lag < 0:
+            raise ValueError("ServingSpec: max_train_lag must be >= 0 "
+                             "(0 = synchronous end-of-slice train)")
         if self.p99_decide_ms is not None and self.p99_decide_ms <= 0:
             raise ValueError("ServingSpec: p99_decide_ms must be "
                              "positive or None")
@@ -383,6 +387,10 @@ def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
         sv = dataclasses.asdict(spec.serving)
         sv["outages"] = [list(o) for o in spec.serving.outages]
         sv["fail_decide_calls"] = list(spec.serving.fail_decide_calls)
+        if sv["max_train_lag"] == 0:
+            # elide the default so pre-overlap serving specs keep their
+            # hashes (same contract as _train_to_json's precision pop)
+            sv.pop("max_train_lag")
         j["serving"] = sv
     if spec.pretrain is not None:
         # same emit-only-when-set contract: pre-lifecycle specs keep

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.ainv_rebuild.kernel import ainv_rebuild_padded
 from repro.kernels.ainv_rebuild.ref import ainv_rebuild_ref
-from repro.kernels.backend import REF, resolve_backend
+from repro.kernels.backend import INTERPRET, REF, resolve_backend
 
 
 def ainv_rebuild(gs, ridge_lambda0=1.0, weights=None, *,
@@ -23,13 +23,14 @@ def ainv_rebuild(gs, ridge_lambda0=1.0, weights=None, *,
     contribution to A = lambda0 I + sum_i w_i g_i g_i^T linearly (rows
     are scaled by sqrt(w) inside the kernel). Returns A^-1 (F, F) f32.
     """
-    if resolve_backend(interpret) == REF:
+    backend = resolve_backend(interpret)
+    if backend == REF:
         return ainv_rebuild_ref(gs, ridge_lambda0, weights=weights)
     if weights is None:
         weights = jnp.ones((gs.shape[0],), jnp.float32)
     return _ainv_rebuild_pallas(
         gs, weights, jnp.asarray(ridge_lambda0, jnp.float32).reshape(1),
-        block_r=block_r, interpret=bool(interpret))
+        block_r=block_r, interpret=backend == INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))

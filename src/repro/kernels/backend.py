@@ -15,9 +15,16 @@ Resolution of ``interpret``:
 * ``True``  — force the Pallas interpreter (kernel parity tests on CPU
   exercise the actual kernel body this way).
 * ``False`` — force the compiled Pallas kernel (TPU only).
+
+The ``REPRO_KERNEL_BACKEND`` environment variable overrides the
+``interpret=None`` auto-detection for EVERY op at once (``pallas`` /
+``jnp`` / ``interpret``), so CI and users can force interpret-mode
+parity runs without code edits. Explicit ``interpret=True/False`` at a
+call site still wins — the override only replaces the default.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -27,6 +34,9 @@ REF = "ref"            # pure-jnp reference (ref.py)
 PALLAS = "pallas"      # compiled Pallas kernel
 INTERPRET = "interpret"  # Pallas interpreter (kernel body on CPU)
 
+#: REPRO_KERNEL_BACKEND values -> resolve_backend() results
+_ENV_BACKENDS = {"pallas": PALLAS, "jnp": REF, "interpret": INTERPRET}
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
@@ -35,5 +45,13 @@ def on_tpu() -> bool:
 def resolve_backend(interpret: Optional[bool]) -> str:
     """Map an op's ``interpret`` flag to one of REF/PALLAS/INTERPRET."""
     if interpret is None:
+        env = os.environ.get("REPRO_KERNEL_BACKEND")
+        if env:
+            try:
+                return _ENV_BACKENDS[env.strip().lower()]
+            except KeyError:
+                raise ValueError(
+                    f"REPRO_KERNEL_BACKEND={env!r} is not a known backend; "
+                    f"use one of {sorted(_ENV_BACKENDS)}") from None
         return PALLAS if on_tpu() else REF
     return INTERPRET if interpret else PALLAS

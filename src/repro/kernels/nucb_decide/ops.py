@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import utilitynet as UN
-from repro.kernels.backend import REF, resolve_backend
+from repro.kernels.backend import INTERPRET, REF, resolve_backend
 from repro.kernels.nucb_decide.kernel import nucb_decide_padded
 from repro.kernels.nucb_decide.ref import nucb_decide_ref
 
@@ -53,7 +53,8 @@ def nucb_decide(params, cfg: UN.UtilityNetConfig, x_emb, x_feat, domain,
         params, x_emb, x_feat, domain)
     if avail is not None:
         avail = avail.astype(jnp.float32)
-    if resolve_backend(interpret) == REF:
+    backend = resolve_backend(interpret)
+    if backend == REF:
         a, g, mu_safe = nucb_decide_ref(
             ctx, w1ctx, act1, w2, b2, wu, bu, ainv,
             gate_p, avail, beta, tau_g)
@@ -65,7 +66,7 @@ def nucb_decide(params, cfg: UN.UtilityNetConfig, x_emb, x_feat, domain,
         jnp.asarray(beta, jnp.float32).reshape(()),
         jnp.asarray(tau_g, jnp.float32).reshape(()),
         num_actions=cfg.num_actions, block_b=block_b,
-        interpret=bool(interpret), compute_dtype=compute_dtype)
+        interpret=backend == INTERPRET, compute_dtype=compute_dtype)
     return a, g[:, :cfg.ucb_feature_dim], mu_safe, gate_p
 
 

@@ -1,0 +1,4 @@
+from repro.kernels.nucb_update.ops import nucb_update
+from repro.kernels.nucb_update.ref import nucb_update_ref
+
+__all__ = ["nucb_update", "nucb_update_ref"]

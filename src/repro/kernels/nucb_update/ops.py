@@ -1,0 +1,69 @@
+"""Public entry point for the fused rank-k Woodbury A^-1 update.
+
+``nucb_update(ainv, gs)`` is a drop-in for
+``core.neuralucb.woodbury_update(ainv, gs)`` behind the one backend
+gate in `kernels/backend.py`: the jnp backend delegates to it verbatim
+(bit-identical in f32), the Pallas backends pad to TPU tiles and run
+the single-launch kernel with A^-1 VMEM-resident across row blocks.
+
+Padding contract (all zeros, all exact no-ops):
+
+* feature dim F -> Fp, the next 128 multiple; A^-1 is zero-padded (NOT
+  identity-padded like the rebuild kernel's lambda0 diagonal) so the
+  padded block stays identically zero through every Woodbury step and
+  the ``[:F, :F]`` slice is exact;
+* row count N -> the next ``block_k`` multiple; a zero feature row
+  contributes an identity row/column to S and a zero row to G A^-1.
+
+bf16 features are accepted and cast to f32 at the kernel boundary —
+A^-1 is f32 statistics state on every path (DESIGN.md §14).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backend import INTERPRET, REF, resolve_backend
+from repro.kernels.nucb_update.kernel import nucb_update_padded
+from repro.kernels.nucb_update.ref import nucb_update_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def _nucb_update_pallas(ainv, gs, *, block_k: int, interpret: bool):
+    n, f = gs.shape
+    gs = gs.astype(jnp.float32)
+    ainv = ainv.astype(jnp.float32)
+    pad_f = -f % 128
+    if pad_f:
+        gs = jnp.pad(gs, ((0, 0), (0, pad_f)))
+        ainv = jnp.pad(ainv, ((0, pad_f), (0, pad_f)))
+    bk = min(block_k, max(8, n))
+    pad_n = -n % bk
+    if pad_n:
+        gs = jnp.pad(gs, ((0, pad_n), (0, 0)))
+    # in-kernel Cholesky panel width must divide the row block; a short
+    # final bk (< block_k, only when n < block_k) becomes its own panel
+    bs = 128 if bk % 128 == 0 else bk
+    out = nucb_update_padded(gs, ainv, block_k=bk, block_s=bs,
+                             interpret=interpret)
+    return out[:f, :f]
+
+
+def nucb_update(ainv: jax.Array, gs: jax.Array, *, block_k: int = 128,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Rank-k Woodbury update of A^-1 (F, F) with features gs (N, F).
+
+    ``interpret`` resolves via `kernels.backend.resolve_backend`:
+    None -> compiled kernel on TPU, jnp reference elsewhere (or the
+    ``REPRO_KERNEL_BACKEND`` override); True -> Pallas interpreter.
+    """
+    backend = resolve_backend(interpret)
+    if backend == REF:
+        return nucb_update_ref(ainv, gs)
+    if gs.shape[0] == 0:
+        return ainv.astype(jnp.float32)
+    return _nucb_update_pallas(ainv, gs, block_k=block_k,
+                               interpret=backend == INTERPRET)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused rank-k Woodbury update kernel: the
+repo's existing blocked update (`core.neuralucb.woodbury_update`) IS
+the reference — on the jnp backend `nucb_update` must be bit-identical
+to it in f32, not merely close."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import neuralucb as NU
+
+
+def nucb_update_ref(ainv, gs, block_size: int = 0):
+    """ainv (F, F), gs (N, F). Returns the updated A^-1 (F, F) f32."""
+    return NU.woodbury_update(ainv.astype(jnp.float32),
+                              gs.astype(jnp.float32), block_size)

@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import REF, resolve_backend
+from repro.kernels.backend import INTERPRET, REF, resolve_backend
 from repro.kernels.ucb_score.kernel import ucb_score_padded
 from repro.kernels.ucb_score.ref import ucb_score_ref
 
@@ -27,10 +27,11 @@ def ucb_score(g, ainv, mu, beta, *, block_r: int = 512,
     Feature padding is safe: padded g columns are zero, and padding A^-1
     with zeros (not identity) keeps the quadratic form unchanged.
     """
-    if resolve_backend(interpret) == REF:
+    backend = resolve_backend(interpret)
+    if backend == REF:
         return ucb_score_ref(g, ainv, mu, beta)
     return _ucb_score_pallas(g, ainv, mu, beta, block_r=block_r,
-                             interpret=bool(interpret))
+                             interpret=backend == INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))

@@ -29,9 +29,9 @@ def make_host_mesh(model_parallel: int = 1):
 
 
 def make_sweep_mesh(n_grid: int = 1, n_seeds: int = 1,
-                    n_devices=None):
-    """("grid", "seed") mesh over local devices for the protocol-engine
-    lane sweeps (DESIGN.md §14.3).
+                    n_devices=None, *, span: str = "local"):
+    """("grid", "seed") mesh for the protocol-engine lane sweeps
+    (DESIGN.md §14.3, §15.3).
 
     The flattened (grid x seed) lane axis is sharded over BOTH axes —
     ``P(("grid", "seed"))`` — so the factorization only steers locality:
@@ -41,8 +41,22 @@ def make_sweep_mesh(n_grid: int = 1, n_seeds: int = 1,
     rest. The policy axis of the zoo sweep stays a static program axis
     (heterogeneous state pytrees can't share one mesh dim); every
     policy's lane tree is laid out over this same mesh. Degenerates to a
-    1x1 mesh on a single device (CPU CI), so callers need no gating."""
-    devs = jax.local_devices()
+    1x1 mesh on a single device (CPU CI), so callers need no gating.
+
+    ``span`` picks the device pool: ``"local"`` (default) spans this
+    process's devices — the EXECUTION mesh; ``"global"`` spans every
+    ``jax.distributed`` process's devices in process order — the
+    TOPOLOGY mesh multi-host sweeps describe their layout with
+    (`distributed.api.run_sweep_multihost` slices the grid per process
+    and executes each slice on the local mesh, since sweep lanes are
+    fully independent)."""
+    if span == "local":
+        devs = jax.local_devices()
+    elif span == "global":
+        devs = list(jax.devices())
+    else:
+        raise ValueError(f"make_sweep_mesh: unknown span {span!r} "
+                         f"(use 'local' or 'global')")
     nd = len(devs) if n_devices is None else max(
         1, min(int(n_devices), len(devs)))
     g = math.gcd(nd, max(1, int(n_grid)))

@@ -73,7 +73,8 @@ def _srv_decide(policy: BanditPolicy, state, key, tables, hyp, ids, avail,
     return policy.decide(state, key, batch, ctx)
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC)
+@functools.partial(jax.jit, static_argnames=_STATIC,
+                   donate_argnames=("state", "env_idx"))
 def _srv_update(policy: BanditPolicy, state, env_idx, tables, hyp, row,
                 ids, a, r, mask, perm, aux, fcfg=VANILLA_FORGETTING,
                 train_chunks=1, batch_size=256):
@@ -81,7 +82,9 @@ def _srv_update(policy: BanditPolicy, state, env_idx, tables, hyp, row,
     compacts learnable rows to the row prefix (ring rows keep the
     prefix-validity layout `_sample_valid` assumes); identity when
     nothing was remapped or shed, so the permuted gather is a no-op and
-    the sim-parity path stays bit-exact."""
+    the sim-parity path stays bit-exact. ``state`` and ``env_idx`` are
+    donated — the router rebinds both from the outputs every wave, so
+    the ring buffers and A^-1 update in place."""
     n = perm.shape[0]
     ids, a, r, mask = ids[perm], a[perm], r[perm], mask[perm]
     aux = jax.tree_util.tree_map(
@@ -96,15 +99,64 @@ def _srv_update(policy: BanditPolicy, state, env_idx, tables, hyp, row,
     return state, env_idx
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC)
+@functools.partial(jax.jit, static_argnames=_STATIC,
+                   donate_argnames=("state",))
 def _srv_train(policy: BanditPolicy, state, key, tables, hyp, env_idx,
                cum0, t, fcfg=VANILLA_FORGETTING, train_chunks=1,
                batch_size=256):
+    """``state`` is donated: the sync path rebinds it immediately, and
+    the overlapped path (``max_train_lag > 0``) feeds a device-side copy
+    so the committed state decide reads stays live."""
     ctx = _ctx(tables, hyp, env_idx=env_idx, cum0=cum0, t=t, fcfg=fcfg,
                train_chunks=train_chunks, batch_size=batch_size)
     state, key = policy.train(state, key, ctx)
     state = policy.rebuild(state, ctx)
     return state, key
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC,
+                   donate_argnames=("state",))
+def _srv_train_sgd(policy: BanditPolicy, state, key, tables, hyp, env_idx,
+                   cum0, t, fcfg=VANILLA_FORGETTING, train_chunks=1,
+                   batch_size=256):
+    """Replay-SGD stage only — the overlapped path dispatches this and
+    `_srv_rebuild` as SEPARATE device programs so an interleaved decide
+    queues behind at most one stage, not the whole train (the fused
+    `_srv_train` would head-of-line-block the decide stream for its full
+    duration on a busy device)."""
+    ctx = _ctx(tables, hyp, env_idx=env_idx, cum0=cum0, t=t, fcfg=fcfg,
+               train_chunks=train_chunks, batch_size=batch_size)
+    return policy.train(state, key, ctx)
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC,
+                   donate_argnames=("state",))
+def _srv_rebuild(policy: BanditPolicy, state, tables, hyp, env_idx, cum0,
+                 t, fcfg=VANILLA_FORGETTING, train_chunks=1,
+                 batch_size=256):
+    """A^-1 rebuild stage of the staged overlapped train."""
+    ctx = _ctx(tables, hyp, env_idx=env_idx, cum0=cum0, t=t, fcfg=fcfg,
+               train_chunks=train_chunks, batch_size=batch_size)
+    return policy.rebuild(state, ctx)
+
+
+def _merge_trained(new, cur):
+    """Commit a finished train into the live router state: trained
+    leaves come from ``new``, but the outcome ring keeps the LIVE
+    ``cur["bufs"]`` — waves absorbed while the train was in flight must
+    not be rolled back to the dispatch-time snapshot (train/rebuild
+    never write bufs, so ``new["bufs"]`` is exactly that stale
+    snapshot). Non-dict or ring-less states commit wholesale."""
+    if (isinstance(new, dict) and isinstance(cur, dict)
+            and "bufs" in new and "bufs" in cur):
+        return dict(new, bufs=cur["bufs"])
+    return new
+
+
+def _tree_ready(tree) -> bool:
+    return all(leaf.is_ready()
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "is_ready"))
 
 
 class DevicePolicyRouter:
@@ -114,7 +166,19 @@ class DevicePolicyRouter:
     ``slice_width`` is the microbatch capacity S (decide pads shorter
     batches); ``capacity_slices`` is the ring depth T. The PRNG
     discipline mirrors the scanned runner exactly: one split per decide
-    call, train splitting further from the carried stream."""
+    call, train splitting further from the carried stream.
+
+    ``max_train_lag`` bounds the zero-sync train overlap (DESIGN.md
+    §15.2). 0 (default): ``end_slice`` blocks until train + rebuild
+    finish — bit-identical to the sim scan. N > 0: ``end_slice``
+    dispatches train on a device-side copy of the freshest state and
+    returns immediately; decide keeps reading the last COMMITTED state
+    while at most N trains are in flight (dispatching the (N+1)-th
+    blocks on the oldest). Finished trains commit lazily before each
+    decide — trained params/opt/A^-1 land atomically while the live
+    outcome ring (which kept absorbing waves) is preserved, so feedback
+    is never lost and decide staleness is bounded by
+    ``train_epoch - committed_epoch <= max_train_lag``."""
 
     serving_v2 = True
 
@@ -123,7 +187,8 @@ class DevicePolicyRouter:
                  capacity_slices: int = 256, batch_size: int = 256,
                  train_chunks: int = 1,
                  fcfg: ForgettingConfig = VANILLA_FORGETTING,
-                 pretrained_state: Any = None, log_capacity: int = 0):
+                 pretrained_state: Any = None, log_capacity: int = 0,
+                 max_train_lag: int = 0):
         self.policy = policy
         self.hyp = hypers
         self.S = int(slice_width)
@@ -140,10 +205,20 @@ class DevicePolicyRouter:
             # warm start (DESIGN.md §13.3): the offline phase's state
             # (sim.pretrain_policy_state) replaces the fresh init; the
             # PRNG stream is untouched, matching the scanned runner's
-            # init_state injection
-            self.state = jax.tree_util.tree_map(jnp.asarray,
-                                                pretrained_state)
+            # init_state injection. A REAL copy (not asarray's identity
+            # on device arrays): update/train donate their state args,
+            # and the caller's checkpoint must survive that.
+            self.state = jax.tree_util.tree_map(
+                lambda x: jnp.array(x), pretrained_state)
         self._env_idx = env_idx
+        # zero-sync train overlap (max_train_lag > 0): FIFO of dispatched
+        # but uncommitted (epoch, state) train results
+        self.max_train_lag = int(max_train_lag)
+        if self.max_train_lag < 0:
+            raise ValueError("max_train_lag must be >= 0")
+        self._pending: list = []
+        self.train_epoch = 0       # trains dispatched
+        self.committed_epoch = 0   # trains visible to decide
         self._counts = np.zeros(self.T, np.int64)  # learned rows per ring row
         self.wave = 0          # microbatches absorbed (ring write cursor)
         self.slices = 0        # end_slice count (0 = warm)
@@ -157,6 +232,58 @@ class DevicePolicyRouter:
     def _statics(self):
         return dict(fcfg=self.fcfg, train_chunks=self.train_chunks,
                     batch_size=self.batch_size)
+
+    # --------------------------------------------- train-overlap plumbing --
+    @property
+    def decide_staleness(self) -> int:
+        """Trains dispatched but not yet visible to decide; bounded by
+        ``max_train_lag`` at every point (tests/test_serving_async.py)."""
+        return self.train_epoch - self.committed_epoch
+
+    def _commit(self, epoch, out) -> None:
+        self.state = _merge_trained(out, self.state)
+        self.committed_epoch = epoch
+
+    def _dispatch_rebuild(self, entry) -> None:
+        """Advance a pending train from its finished SGD stage to the
+        rebuild stage (one async dispatch). The SGD output is donated
+        into the rebuild but stays referenced as the entry's keep-alive:
+        dropping the last reference to a donated array blocks the host
+        until the consuming computation finishes."""
+        _epoch, _stage, s1, _keep, (env_c, cum0, t) = entry
+        s2 = _srv_rebuild(self.policy, s1, self.tables, self.hyp,
+                          env_c, cum0, t, **self._statics())
+        entry[1] = "rebuild"
+        entry[2] = s2
+        entry[3] = s1
+
+    def _advance(self) -> None:
+        """Non-blocking pipeline tick (called before each decide reads
+        the state and at every slice boundary): dispatch the rebuild
+        stage for any train whose SGD finished, then commit every
+        train whose rebuild finished, oldest first."""
+        for entry in self._pending:
+            if entry[1] == "sgd" and _tree_ready(entry[2]):
+                self._dispatch_rebuild(entry)
+        while (self._pending and self._pending[0][1] == "rebuild"
+               and _tree_ready(self._pending[0][2])):
+            entry = self._pending.pop(0)
+            self._commit(entry[0], entry[2])
+
+    def _force_oldest(self) -> None:
+        """Blockingly drive the oldest in-flight train to commit."""
+        entry = self._pending.pop(0)
+        if entry[1] == "sgd":
+            jax.block_until_ready(entry[2])
+            self._dispatch_rebuild(entry)
+        jax.block_until_ready(entry[2])
+        self._commit(entry[0], entry[2])
+
+    def _flush(self) -> None:
+        """Block until every in-flight train is committed — snapshot,
+        log-export, and restore paths need the fully-settled state."""
+        while self._pending:
+            self._force_oldest()
 
     def warmup(self) -> None:
         """Compile both decide variants (mask-free fast path and masked
@@ -187,6 +314,10 @@ class DevicePolicyRouter:
         av = None
         if avail is not None and not np.all(np.asarray(avail) > 0):
             av = jnp.asarray(avail, jnp.float32)
+        if self._pending:
+            # overlapped mode: tick the train pipeline (SGD -> rebuild
+            # -> commit) — decide reads the freshest COMMITTED state
+            self._advance()
         self._key, k = jax.random.split(self._key)
         a, logp, aux = _srv_decide(
             self.policy, self.state, k, self.tables, self.hyp,
@@ -273,22 +404,63 @@ class DevicePolicyRouter:
         """Replay-SGD + A^-1 rebuild over the ring (one jitted dispatch);
         ends the warm phase. ``epochs`` is accepted for interface parity
         with the host router — the SGD budget here is the constructor's
-        static ``train_chunks``."""
+        static ``train_chunks``.
+
+        ``max_train_lag == 0``: dispatch and BLOCK (the train pause owns
+        its own wall time instead of bleeding into the next decide's
+        latency sample — and the next decide reads the trained state,
+        bit-identical to the sim scan). ``max_train_lag > 0``: dispatch
+        on a copy of the freshest state and return without syncing; the
+        host thread goes straight back to admitting and deciding the
+        next microbatches while the device grinds the train program."""
         del epochs
         if self.wave > 0:
             t = min(self.wave, self.T) - 1
             cum0 = jnp.asarray(np.concatenate(
                 [[0], np.cumsum(self._counts)]).astype(np.int32))
-            self.state, self._key = _srv_train(
-                self.policy, self.state, self._key, self.tables, self.hyp,
-                self._env_idx, cum0, jnp.int32(t), **self._statics())
-            # sync here: the train pause owns its own wall time, instead
-            # of bleeding into the next decide's latency sample
-            jax.block_until_ready(self.state)
+            if self.max_train_lag == 0:
+                self.state, self._key = _srv_train(
+                    self.policy, self.state, self._key, self.tables,
+                    self.hyp, self._env_idx, cum0, jnp.int32(t),
+                    **self._statics())
+                self.train_epoch += 1
+                self.committed_epoch = self.train_epoch
+                jax.block_until_ready(self.state)
+            else:
+                # bounded staleness: dispatching the (lag+1)-th in-flight
+                # train blocks on the oldest, so decide never lags the
+                # freshest dispatched train by more than max_train_lag
+                self._advance()
+                while len(self._pending) >= self.max_train_lag:
+                    self._force_oldest()
+                base = (_merge_trained(self._pending[-1][2], self.state)
+                        if self._pending else self.state)
+                # donate a device-side copy: `base` aliases the committed
+                # state (and possibly a pending commit target) that
+                # decide keeps reading while this train is in flight.
+                # env_idx is copied too — the live buffer is donated away
+                # by the next update_wave, and the rebuild stage reads it
+                # later than this dispatch.
+                tin = jax.tree_util.tree_map(jnp.copy, base)
+                env_c = jnp.copy(self._env_idx)
+                t32 = jnp.int32(t)
+                s1, self._key = _srv_train_sgd(
+                    self.policy, tin, self._key, self.tables, self.hyp,
+                    env_c, cum0, t32, **self._statics())
+                self.train_epoch += 1
+                # `tin` rides along as a keep-alive: dropping the last
+                # reference to a DONATED array blocks the host until the
+                # consuming computation finishes (which would make this
+                # "zero-sync" dispatch silently synchronous). It is
+                # released when the stage completes, when deletion is
+                # free. Entry: [epoch, stage, output, keep, rebuild ctx].
+                self._pending.append(
+                    [self.train_epoch, "sgd", s1, tin, (env_c, cum0, t32)])
         self.slices += 1
 
     # --------------------------------------------------------- SNAPSHOT --
     def state_dict(self) -> Dict:
+        self._flush()
         return {
             "arrays": {
                 "state": jax.tree_util.tree_map(np.asarray, self.state),
@@ -301,6 +473,9 @@ class DevicePolicyRouter:
 
     def load_state_dict(self, d: Dict) -> None:
         arrays = d["arrays"]
+        # in-flight trains describe the state being replaced — discard
+        self._pending = []
+        self.committed_epoch = self.train_epoch
         self.state = jax.tree_util.tree_map(jnp.asarray, arrays["state"])
         self._key = jnp.asarray(arrays["key"])
         self._env_idx = jnp.asarray(arrays["env_idx"])

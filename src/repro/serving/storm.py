@@ -62,6 +62,11 @@ def run_storm(env, router, *, requests: int, waves: int,
     sum_reward = sum_quality = sum_cost = 0.0
     n_ok = 0
     per_wave_shed = np.zeros(waves, np.int64)
+    # slice-boundary train stalls: (index of the first decide call AFTER
+    # the stall, stall seconds) — the request-visible decide path waits
+    # behind a blocking end_slice, so p99 over walls+stalls is the tail
+    # a caller actually sees (the overlap bench compares this)
+    stalls: list = []
     t0 = time.perf_counter()
     for w in range(waves):
         faults.apply_wave(engine, w)
@@ -81,11 +86,19 @@ def run_storm(env, router, *, requests: int, waves: int,
         per_wave_shed[w] = (engine.counters["shed_queue_full"]
                             + engine.counters["shed_no_arm"]) - shed0
         if train_every and (w + 1) % train_every == 0:
+            ts = time.perf_counter()
             engine.end_slice(epochs)
+            stalls.append((len(engine.decide_wall_s),
+                           time.perf_counter() - ts))
     wall = time.perf_counter() - t0
     acct = engine.check_accounting()
 
     walls_us = np.asarray(engine.decide_wall_s) * 1e6
+    path_us = walls_us.copy()
+    stall_us = np.asarray([s for _, s in stalls]) * 1e6
+    for idx, s in stalls:
+        if idx < path_us.size:
+            path_us[idx] += s * 1e6
     c = engine.counters
     shed = c["shed_queue_full"] + c["shed_no_arm"]
     return {
@@ -102,6 +115,11 @@ def run_storm(env, router, *, requests: int, waves: int,
         "decide_p50_per_req_us": float(
             np.percentile(walls_us, 50) / decide_batch)
         if walls_us.size else 0.0,
+        "decide_path_p99_us": float(np.percentile(path_us, 99))
+        if path_us.size else 0.0,
+        "train_stall_p99_us": float(np.percentile(stall_us, 99))
+        if stall_us.size else 0.0,
+        "train_stall_total_s": float(stall_us.sum() / 1e6),
         "completed": int(c["completed"]), "shed": int(shed),
         "shed_queue_full": int(c["shed_queue_full"]),
         "shed_no_arm": int(c["shed_no_arm"]),

@@ -57,6 +57,7 @@ from repro.distributed.sharding import (
     shard_sweep_lanes,
     sweep_lane_layout,
 )
+from repro.kernels.nucb_update import nucb_update
 from repro.launch.mesh import make_sweep_mesh
 from repro.sim.env import DeviceReplayEnv
 from repro.sim.policies import (
@@ -661,13 +662,17 @@ def sweep_point_results(sweep: Dict[str, np.ndarray], g: int,
 
 
 # -------------------------------------------- host-stepped parity runner --
-@functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "warm"),
+                   donate_argnames=("ainv", "bufs"))
 def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
                      beta, tau_g, gate_margin,
                      cfg: UN.UtilityNetConfig, backend: str, warm: bool):
     """DECIDE -> feedback lookup -> buffer write -> rank-k UPDATE, fused.
     Host-stepped entry point: ``warm`` is static (one trace per phase).
-    Stationary tables only — scenarios are a scanned-runner feature."""
+    Stationary tables only — scenarios are a scanned-runner feature.
+    A^-1 and the ring buffers are donated — the caller threads them
+    through every slice and never reads the stale copy, so XLA updates
+    them in place instead of double-buffering (F, F) + (T, S) state."""
     batch = _context(tables, idx)
     if warm:
         a, _, g, mu_safe, gs = _decide_warm(params, batch, key, cfg)
@@ -684,14 +689,23 @@ def _nucb_slice_step(params, ainv, tables, bufs, t, idx, mask, key,
         "gate_w": bufs["gate_w"].at[t].set(mask * gs),
     }
     # padded rows are zeroed -> contribute nothing to the rank-k update
-    ainv = NU.woodbury_update(ainv, g * mask[:, None])
+    if backend == "pallas":
+        ainv = nucb_update(ainv, g * mask[:, None])
+    else:
+        ainv = NU.woodbury_update(ainv, g * mask[:, None])
     return ainv, bufs, _slice_metrics(tables, None, idx, mask, a)
 
 
+# params/opt are donated: the stepped runner overwrites its references
+# with the returned leaves, so the pre-step weights and AdamW moments
+# never need to coexist with the post-step ones in HBM.
 _nucb_train = jax.jit(
     _train_chunk,
-    static_argnames=("cfg", "num_steps", "batch_size", "fcfg", "delayed"))
+    static_argnames=("cfg", "num_steps", "batch_size", "fcfg", "delayed"),
+    donate_argnames=("params", "opt"))
 
+# NOT donated: every input (params, buffers, tables) outlives the call —
+# the rebuild reads the replay buffers it does not own (DESIGN.md §15).
 _nucb_rebuild = jax.jit(_rebuild_impl, static_argnames=("cfg", "backend"))
 
 

@@ -74,6 +74,7 @@ from repro.core import utilitynet as UN
 from repro.core.reward import normalize_cost
 from repro.kernels.ainv_rebuild import ainv_rebuild
 from repro.kernels.nucb_decide import nucb_decide
+from repro.kernels.nucb_update import nucb_update
 from repro.kernels.ucb_score.ops import ucb_score
 from repro.training.optim import adamw_init, adamw_update, clip_by_global_norm
 
@@ -765,12 +766,18 @@ def _neural_init(cfg: UN.UtilityNetConfig, with_ainv: bool):
     return init
 
 
-def _neural_update(cfg: UN.UtilityNetConfig, with_ainv: bool):
+def _neural_update(cfg: UN.UtilityNetConfig, with_ainv: bool,
+                   backend: str = "jnp"):
     """Feedback write + A^-1 maintenance shared by the neural zoo: the
     slice's outcomes land in the (T, S) buffers, then the online rank-k
     Woodbury update applies — the current slice when feedback is
     immediate, the newly-VISIBLE slice (t - delay, features recomputed
-    with current params) under a delayed-feedback scenario."""
+    with current params) under a delayed-feedback scenario.
+    ``backend="pallas"`` routes the Woodbury step through the fused
+    single-launch kernel (`kernels.nucb_update`, A^-1 VMEM-resident
+    across row blocks); ``"jnp"`` is the blocked-XLA reference."""
+    wood = (nucb_update if backend == "pallas"
+            else lambda ainv, gs: NU.woodbury_update(ainv, gs))
 
     def update(state, batch, a, r, ctx, aux):
         g, mu_safe, gate_scale = aux
@@ -789,7 +796,7 @@ def _neural_update(cfg: UN.UtilityNetConfig, with_ainv: bool):
             return state
         if ctx.delay == 0:
             # padded rows are zeroed -> contribute nothing to the update
-            ainv = NU.woodbury_update(state["ainv"], g * mask[:, None])
+            ainv = wood(state["ainv"], g * mask[:, None])
         else:
             t_vis = t - ctx.delay
             tv = jnp.maximum(t_vis, 0)
@@ -799,8 +806,7 @@ def _neural_update(cfg: UN.UtilityNetConfig, with_ainv: bool):
                 ctx.tables["x_feat"][vid], ctx.tables["domain"][vid],
                 bufs["action"][tv])
             vw = bufs["w"][tv] * (t_vis >= 0).astype(jnp.float32)
-            ainv = NU.woodbury_update(state["ainv"],
-                                      NU.augment(h) * vw[:, None])
+            ainv = wood(state["ainv"], NU.augment(h) * vw[:, None])
         return dict(state, ainv=ainv)
 
     return update
@@ -970,7 +976,7 @@ def neuralucb_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
 
     return BanditPolicy(
         "neuralucb", _neural_init(cfg, True), decide,
-        _neural_update(cfg, True), _neural_train(cfg, precision),
+        _neural_update(cfg, True, backend), _neural_train(cfg, precision),
         _neural_rebuild(cfg, backend),
         _neural_prepare, pretrain=_neural_pretrain(cfg, True),
         availability_aware=True)
@@ -1030,7 +1036,7 @@ def neural_ts_policy(cfg: UN.UtilityNetConfig, backend: str = "jnp",
 
     return BanditPolicy(
         "neural-ts", _neural_init(cfg, True), decide,
-        _neural_update(cfg, True), _neural_train(cfg, precision),
+        _neural_update(cfg, True, backend), _neural_train(cfg, precision),
         _neural_rebuild(cfg, backend),
         _neural_prepare, pretrain=_neural_pretrain(cfg, True),
         availability_aware=True)

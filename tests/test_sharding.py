@@ -175,7 +175,8 @@ denv = DeviceReplayEnv.from_host(henv)
 out = run_baseline_sweep(denv, random_policy(denv.K), seeds=range(4))
 assert out["avg_reward"].shape == (1, 4, 3)     # annotated (G, seeds, T)
 assert out["layout"] == {"n_lanes": 4, "pad": 0, "n_devices": 2,
-                         "mesh": {"grid": 1, "seed": 2}}
+                         "mesh": {"grid": 1, "seed": 2},
+                         "hosts": {"n_hosts": 1, "devices_per_host": 2}}
 # non-dividing lane count: dead lane dropped from results, layout says so
 out3 = run_baseline_sweep(denv, random_policy(denv.K), seeds=range(3))
 assert out3["avg_reward"].shape == (1, 3, 3)
@@ -190,6 +191,50 @@ for d in sw.values():
     assert d["avg_reward"].shape == (1, 4, 3)
 print("SWEEP_SUBPROC_OK")
 """
+
+
+def test_process_lane_slice_partition():
+    """Per-process grid spans partition [0, G) contiguously, disjointly
+    and completely for any (G, hosts) shape, with seed-major lane spans
+    scaled by n_seeds; out-of-range process indices raise."""
+    from repro.distributed.sharding import process_lane_slice
+
+    for G, h, S in [(4, 2, 3), (5, 2, 1), (1, 4, 2), (7, 3, 2)]:
+        spans = [process_lane_slice(G, S, h, p) for p in range(h)]
+        assert spans[0][0] == 0 and spans[-1][1] == G
+        for (gs, ge, ls, le), nxt in zip(spans, spans[1:]):
+            assert ge == nxt[0]                 # contiguous + disjoint
+        for gs, ge, ls, le in spans:
+            assert (ls, le) == (gs * S, ge * S)
+    with pytest.raises(ValueError):
+        process_lane_slice(4, 1, 2, 2)
+
+
+def test_run_sweep_multihost_single_process_degenerate():
+    """Single-process `run_sweep_multihost` == plain `run_policy_sweep`
+    on the metrics, plus the multi-host annotations (full grid span,
+    1-host topology manifest)."""
+    import numpy as np
+
+    from repro.data.routerbench import RouterBenchSim
+    from repro.distributed import run_sweep_multihost
+    from repro.sim import DeviceReplayEnv, make_policy, run_policy_sweep
+    from repro.sim.policies import LinUCBHypers
+
+    env = DeviceReplayEnv.from_host(
+        RouterBenchSim(seed=0, n_samples=300, n_slices=3))
+    pol, _ = make_policy("linucb", env)
+    hyp = LinUCBHypers(alpha=jax.numpy.asarray([0.5, 1.5]),
+                       ridge=jax.numpy.ones(2))
+    zoo = {"linucb": (pol, hyp)}
+    ref = run_policy_sweep(env, zoo, seeds=range(2))["linucb"]
+    got = run_sweep_multihost(env, zoo, seeds=range(2))["linucb"]
+    for k in ("avg_reward", "avg_cost", "action_hist"):
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(ref[k]), err_msg=k)
+    assert got["grid_span"] == [0, 2] and got["n_grid_total"] == 2
+    assert got["lane_span"] == [0, 4]
+    assert got["layout"]["hosts"]["n_hosts"] == 1
 
 
 def test_sweep_sharding_multi_device_subprocess():

@@ -41,6 +41,13 @@ Five comparisons, recorded to ``BENCH_protocol.json`` at the repo root
       overhead (DESIGN.md §11): spec→plan compile wall time and the
       planned device-dispatch count vs the minimal hand-wired count
       (must be 0 extra dispatches) for the driver presets.
+  physical_pool            — the arm pool's measured-vs-analytic
+      calibration (DESIGN.md §16.3): REAL jitted decode steps for the
+      two smallest zoo configs vs the host roofline lower bound, the
+      measured/analytic ratio recorded per backend, plus the
+      physical_pool preset's pool-compile stats and provenance
+      (checksum, chips, $/token). ``--pool-tiny`` swaps in the reduced
+      configs (CI-sized; the ``reduced`` flag marks the reshape).
 
 The sweep-shaped sections (neuralucb_sweep, policy_zoo_sweep) are
 expressed through the same ExperimentSpec presets the driver runs
@@ -51,7 +58,8 @@ exact code path a ``--preset`` invocation takes.
       [--seeds S] [--nucb-samples N] [--nucb-slices T] [--nucb-seeds S]
       [--nucb-train-steps K] [--nucb-batch B] [--scen-samples N]
       [--scen-slices T] [--scen-seeds S] [--zoo-samples N]
-      [--zoo-slices T] [--zoo-seeds S] [--out PATH]
+      [--zoo-slices T] [--zoo-seeds S] [--pool-only] [--pool-tiny]
+      [--out PATH]
 """
 from __future__ import annotations
 
@@ -465,6 +473,52 @@ def bench_nucb_kernels(batch: int = 4096, buffer_rows: int = 8192,
     }
 
 
+def bench_physical_pool(configs=("mamba2_130m", "whisper_medium"),
+                        batch: int = 4, steps: int = 6,
+                        tiny: bool = False) -> Dict:
+    """Physical-arm-pool calibration + compile stats (DESIGN.md §16.3).
+
+    For the two smallest real configs, times REAL jitted decode steps
+    (the serving engine's own decode program) against the host
+    roofline's analytic lower bound; ``measured_over_analytic`` is the
+    per-backend efficiency de-rating that ``ArmPoolSpec(calibrate=True)``
+    folds into the pool tables. Also compiles the ``physical_pool``
+    preset's pool and records its wall time + provenance manifest
+    (the crc32 checksum is the cross-process determinism pin)."""
+    from repro.armpool import build_pool_env, measured_ratio
+    from repro.configs import get_config
+
+    backend = jax.default_backend()
+    calibration: Dict[str, Dict] = {}
+    for name in configs:
+        cfg = get_config(name)
+        if tiny:
+            cfg = cfg.reduced()
+        r = measured_ratio(cfg, batch, steps=steps)
+        calibration[name] = {
+            "params_b": cfg.param_count() / 1e9,
+            "backends": {backend: {
+                "measured_step_s": r["step_s"],
+                "analytic_step_s": r["analytic_step_s"],
+                "measured_over_analytic": r["ratio"],
+                "init_s": r["init_s"],
+                "compile_s": r["compile_s"],
+            }},
+        }
+
+    spec = make_preset("physical_pool")
+    t0 = time.perf_counter()
+    henv, pool = build_pool_env(spec.armpool, spec.data)
+    pool_compile_s = time.perf_counter() - t0
+    return {"physical_pool": {
+        "backend": backend, "batch": batch, "steps": steps,
+        "reduced": bool(tiny),
+        "calibration": calibration,
+        "pool": dict(pool.manifest(), n_samples=int(henv.n),
+                     compile_s=pool_compile_s),
+    }}
+
+
 def bench_experiment_compile(n_samples: int = 1500,
                              n_slices: int = 3) -> Dict:
     """The ExperimentSpec layer's cost (DESIGN.md §11): per driver
@@ -618,7 +672,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
                    nucb_batch: int = 32, scen_samples: int = 6000,
                    scen_slices: int = 12, scen_seeds: int = 6,
                    zoo_samples: int = 1200, zoo_slices: int = 8,
-                   zoo_seeds: int = 4) -> Dict:
+                   zoo_seeds: int = 4, pool_tiny: bool = False) -> Dict:
     henv = RouterBenchSim(seed=0, n_samples=n_samples, n_slices=n_slices)
     denv = DeviceReplayEnv.from_host(henv)
     tables, xs = _tables(denv), denv.slice_xs()
@@ -709,6 +763,7 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
     kernel_runs = bench_nucb_kernels()
     compile_runs = bench_experiment_compile()
     pretrain_runs = bench_offline_pretrain(henv, denv)
+    pool_runs = bench_physical_pool(tiny=pool_tiny)
 
     return {
         # headline: protocol-engine throughput on the paper-style workload
@@ -749,11 +804,12 @@ def bench_protocol(n_samples: int = 36_497, n_slices: int = 20,
         **kernel_runs,
         **compile_runs,
         **pretrain_runs,
+        **pool_runs,
     }
 
 
 def run(refresh: bool = False, **kw):
-    out = cached("protocol_engine_v8", lambda: bench_protocol(**kw), refresh)
+    out = cached("protocol_engine_v9", lambda: bench_protocol(**kw), refresh)
     with open(ROOT_OUT, "w") as f:
         json.dump(out, f, indent=1, default=float)
     rows = [("bench_protocol/section", "host_s", "device_s", "speedup")]
@@ -797,6 +853,18 @@ def run(refresh: bool = False, **kw):
                      f"{p['early_cum_reward_warm']:.0f}w/"
                      f"{p['early_cum_reward_cold']:.0f}c",
                      f"{p['early_delta']:+.0f}"))
+    if "physical_pool" in out:
+        pp = out["physical_pool"]
+        for name, c in pp["calibration"].items():
+            for bk, row in c["backends"].items():
+                rows.append((f"pool_calib/{name}/{bk}",
+                             round(row["measured_step_s"], 5),
+                             round(row["analytic_step_s"], 6),
+                             f"x{row['measured_over_analytic']:.1f}"))
+        rows.append(("pool_compile",
+                     round(pp["pool"]["compile_s"], 4),
+                     f"{len(pp['pool']['arms'])} arms",
+                     f"crc {pp['pool']['checksum']}"))
     rows.append(("sweep_device_decisions_per_s",
                  round(out["baseline_sweep"]["device_decisions_per_s"]),
                  "", ""))
@@ -828,8 +896,23 @@ def main() -> None:
     ap.add_argument("--zoo-only", action="store_true",
                     help="internal: run only the policy-zoo sweep section "
                          "and print its JSON (the subprocess entry point)")
+    ap.add_argument("--pool-only", action="store_true",
+                    help="run only the physical_pool calibration section "
+                         "and print its JSON")
+    ap.add_argument("--pool-tiny", action="store_true",
+                    help="calibrate the REDUCED configs (CI-sized; marks "
+                         "the section reduced=true so the regression "
+                         "guard treats it as a reshape)")
+    ap.add_argument("--pool-batch", type=int, default=4)
+    ap.add_argument("--pool-steps", type=int, default=6)
     ap.add_argument("--out", default=ROOT_OUT)
     args = ap.parse_args()
+    if args.pool_only:
+        out = bench_physical_pool(batch=args.pool_batch,
+                                  steps=args.pool_steps,
+                                  tiny=args.pool_tiny)
+        print(json.dumps(out, default=float))
+        return
     if args.nucb_only:
         out = bench_neuralucb_runs(
             args.nucb_samples, args.nucb_slices, args.nucb_seeds,
@@ -854,7 +937,7 @@ def main() -> None:
                          args.nucb_batch, args.scen_samples,
                          args.scen_slices, args.scen_seeds,
                          args.zoo_samples, args.zoo_slices,
-                         args.zoo_seeds)
+                         args.zoo_seeds, pool_tiny=args.pool_tiny)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, default=float)
     print(json.dumps(out, indent=1, default=float))

@@ -39,9 +39,14 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__),
 DEFAULT_CURRENT = os.path.join(REPO_ROOT, "BENCH_protocol.json")
 
 SHAPE_KEYS = ("n_samples", "n_slices", "n_seeds", "train_steps",
-              "batch_size", "batch", "buffer_rows", "slice_width")
+              "batch_size", "batch", "buffer_rows", "slice_width",
+              "steps", "reduced")
 RATIO_NAMES = ("speedup", "speedup_vs_sequential",
-               "speedup_pallas_vs_jnp")
+               "speedup_pallas_vs_jnp",
+               # physical_pool calibration: measured decode wall over the
+               # analytic roofline lower bound — the measured leg is
+               # machine-load dependent, so it never fails hard
+               "measured_over_analytic")
 #: (path, floor) invariants checked on the CURRENT file alone
 FLOORS = ((("neuralucb_scan_vs_stepped", "speedup"), 1.0),)
 

@@ -305,12 +305,17 @@ def main(argv=None) -> int:
     # env once and inject it into every section's compile
     shared_data = shared_henv = shared_denv = None
     for section, spec in sections:
-        if spec.data != shared_data:
-            shared_henv, shared_denv = build_env(spec.data)
-            shared_data = spec.data
         try:
-            plan = compile_spec(spec, env=shared_denv,
-                                host_env=shared_henv)
+            if spec.armpool is not None:
+                # a physical pool compiles its own env from the pool
+                # tables — never the shared replay env
+                plan = compile_spec(spec)
+            else:
+                if spec.data != shared_data:
+                    shared_henv, shared_denv = build_env(spec.data)
+                    shared_data = spec.data
+                plan = compile_spec(spec, env=shared_denv,
+                                    host_env=shared_henv)
         except ValueError as e:
             ap.error(str(e))
         result = run_plan(plan, verbose=not args.quiet)

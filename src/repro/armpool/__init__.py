@@ -1,0 +1,59 @@
+"""Physical arm pool (DESIGN.md §16): real ``ModelConfig`` arms with
+roofline-derived cost/latency on a declared hardware target, quality
+from RouterBench tables via an explicit arm mapping, compiled into
+replay-compatible tables plus semi-real serving engines.
+
+    pool.py     — hardware targets, mapping + loud validation, per-arm
+                  roofline derivation
+    compile.py  — CompiledArmPool / compile_pool / build_pool_env
+    calibrate.py— measured-vs-analytic decode-step calibration
+    serving.py  — DecodeArmEngine (real jitted decode) /
+                  RooflineArmEngine (clocked) / build_arm_engines
+"""
+from repro.armpool.calibrate import (
+    analytic_host_step_s,
+    measured_decode_step_s,
+    measured_ratio,
+)
+from repro.armpool.compile import (
+    CompiledArmPool,
+    build_pool_env,
+    compile_pool,
+)
+from repro.armpool.pool import (
+    DEFAULT_RB_MAPPING,
+    HARDWARE_TARGETS,
+    HardwareTarget,
+    arm_roofline,
+    canonical_arm,
+    get_hardware_target,
+    resolve_arms,
+    resolve_mapping,
+)
+from repro.armpool.serving import (
+    DecodeArmEngine,
+    RooflineArmEngine,
+    build_arm_engines,
+    engine_decode_steps,
+)
+
+__all__ = [
+    "DEFAULT_RB_MAPPING",
+    "HARDWARE_TARGETS",
+    "CompiledArmPool",
+    "DecodeArmEngine",
+    "HardwareTarget",
+    "RooflineArmEngine",
+    "analytic_host_step_s",
+    "arm_roofline",
+    "build_arm_engines",
+    "build_pool_env",
+    "canonical_arm",
+    "compile_pool",
+    "engine_decode_steps",
+    "get_hardware_target",
+    "measured_decode_step_s",
+    "measured_ratio",
+    "resolve_arms",
+    "resolve_mapping",
+]

@@ -1,0 +1,75 @@
+"""Measured-vs-analytic decode calibration (DESIGN.md §16.3).
+
+The roofline step time is a LOWER bound; real kernels run at some
+efficiency below it. This module times REAL jitted decode steps (the
+same ``repro.models.model.decode_step`` program the serving engine
+runs) and reports the measured/analytic ratio against the host's
+roofline model — the ``physical_pool`` bench section records it per
+backend, and ``ArmPoolSpec(calibrate=True)`` folds it into the pool's
+cost/latency tables as an efficiency de-rating for every arm small
+enough to measure.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.roofline.model import HW_CPU_HOST, decode_step_costs, \
+    roofline_terms
+
+
+def measured_decode_step_s(cfg: ModelConfig, *, batch: int = 4,
+                           steps: int = 6, seed: int = 0) -> Dict:
+    """Time ``steps`` real jitted decode steps of ``cfg`` at ``batch``.
+
+    Uses the serving engine's own decode program (prefill primes the
+    cache, one warm step flushes compilation), so the number is the
+    per-step wall the storm's real-decode arms actually pay."""
+    from repro.serving.engine import ServingEngine
+
+    t0 = time.perf_counter()
+    eng = ServingEngine(cfg, seed=seed, max_seq=max(steps + 4, 16))
+    init_s = time.perf_counter() - t0
+
+    toks = jnp.ones((batch, 1), jnp.int32)
+    t0 = time.perf_counter()
+    _, cache = eng.prefill(toks)
+    cur = jnp.ones((batch, 1), jnp.int32)
+    out, cache = eng._decode(eng.params, cache, cur)   # warm step
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+
+    walls = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        out, cache = eng._decode(eng.params, cache, cur)
+        jax.block_until_ready(out)
+        walls.append(time.perf_counter() - t0)
+    walls.sort()
+    return {"step_s": walls[len(walls) // 2], "batch": int(batch),
+            "steps": int(steps), "init_s": init_s,
+            "compile_s": compile_s, "backend": jax.default_backend()}
+
+
+def analytic_host_step_s(cfg: ModelConfig, batch: int,
+                         context: int = 8) -> float:
+    """Roofline step-time lower bound for ``cfg`` on THIS host's
+    order-of-magnitude hardware model (the denominator of the
+    calibration ratio — same backend as the measurement)."""
+    costs = decode_step_costs(cfg, batch, context)
+    return roofline_terms(costs["flops"], costs["hbm_bytes"], 0.0,
+                          HW_CPU_HOST)["step_lower_bound_s"]
+
+
+def measured_ratio(cfg: ModelConfig, batch: int, *,
+                   steps: int = 6) -> Dict:
+    """measured/analytic step-time ratio for one config on this
+    backend — the ``compile_pool`` calibration hook."""
+    m = measured_decode_step_s(cfg, batch=batch, steps=steps)
+    analytic = analytic_host_step_s(cfg, batch)
+    return {**m, "analytic_step_s": analytic,
+            "ratio": m["step_s"] / max(analytic, 1e-12)}

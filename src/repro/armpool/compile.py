@@ -1,0 +1,209 @@
+"""Pool compilation: arms + replay tables -> device-consumable
+``(K,)`` / ``(n, K)`` cost/latency/quality tables (DESIGN.md §16).
+
+``compile_pool`` is pure table algebra over a generated RouterBench
+replay dict: quality columns are selected through the explicit arm
+mapping, per-sample completion lengths are backed out of the mapped
+column's cost (cost = price * (prompt + completion) / 1000), and the
+roofline-derived $/token re-prices every request on the declared
+hardware. The result drops into ``RouterBenchSim(data=...)`` unchanged,
+so the scenario engine, ``run_policy_sweep``, and the serving storm all
+consume the physical pool exactly as they consume the replay tables —
+an ``arm_outage`` is now a pool member going down, a ``price_shock`` a
+hardware/batch-shape re-derivation.
+
+Determinism contract: compiling the same (spec, data) twice — in the
+same process or across processes — yields bit-identical tables; the
+``checksum`` field (crc32 over the table bytes + arm names, NOT
+``hash()``) is what the cross-process test pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.armpool.pool import (
+    arm_roofline,
+    get_hardware_target,
+    resolve_arms,
+    resolve_mapping,
+)
+from repro.data.routerbench import model_prices
+
+COMPLETION_CAP = 2048   # tokens; guards a degenerate backed-out length
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledArmPool:
+    """The device-ready pool: per-arm scalars + (n, K) tables."""
+
+    hardware: str
+    arms: Tuple[str, ...]
+    rb_models: Tuple[str, ...]
+    cols: Tuple[int, ...]
+    quality: np.ndarray          # (n, K)
+    cost: np.ndarray             # (n, K) $ per request
+    latency_s: np.ndarray        # (n, K) roofline seconds per request
+    usd_per_token: np.ndarray    # (K,)
+    sec_per_token: np.ndarray    # (K,)
+    step_s: np.ndarray           # (K,)
+    chips: np.ndarray            # (K,) int
+    dominant: Tuple[str, ...]
+    params_b: np.ndarray         # (K,) total params, billions
+    decode_batch: int
+    context: int
+    cost_source: str
+    checksum: int
+    calibration: Optional[Dict[str, Any]] = None
+
+    @property
+    def K(self) -> int:
+        return len(self.arms)
+
+    def validate_against(self, K: int, what: str = "table") -> None:
+        """Loud K-mismatch guard (satellite: no silent positional
+        pairing between a pool and a differently-sized table/env)."""
+        if K != self.K:
+            raise ValueError(f"arm pool K mismatch: pool has {self.K} "
+                             f"arms {list(self.arms)} but the {what} "
+                             f"has K={K}")
+
+    def as_data(self, base: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Replay-data dict with the pool's columns swapped in — the
+        ``RouterBenchSim(data=...)`` payload. Features (topic/domain/
+        x_feat) are untouched, so a pool whose costs are forced back to
+        the RouterBench tables reproduces the replay sweep bit-exactly
+        over its mapped columns (the parity test's contract)."""
+        data = dict(base)
+        data["quality"] = self.quality
+        data["cost"] = self.cost
+        data["latency_s"] = self.latency_s
+        data["model_names"] = np.array(self.arms)
+        return data
+
+    def manifest(self) -> Dict[str, Any]:
+        """Provenance block for artifacts / bench sections."""
+        m: Dict[str, Any] = {
+            "hardware": self.hardware,
+            "arms": list(self.arms),
+            "rb_models": list(self.rb_models),
+            "decode_batch": self.decode_batch,
+            "context": self.context,
+            "cost_source": self.cost_source,
+            "checksum": int(self.checksum),
+            "params_b": [round(float(p), 4) for p in self.params_b],
+            "chips": [int(c) for c in self.chips],
+            "dominant": list(self.dominant),
+            "usd_per_token": [float(u) for u in self.usd_per_token],
+            "sec_per_token": [float(s) for s in self.sec_per_token],
+        }
+        if self.calibration is not None:
+            m["calibration"] = self.calibration
+        return m
+
+
+def _table_checksum(pool_tables, arms) -> int:
+    crc = zlib.crc32("|".join(arms).encode())
+    for t in pool_tables:
+        a = np.ascontiguousarray(t)
+        crc = zlib.crc32(a.tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
+def compile_pool(aspec, data: Dict[str, np.ndarray], *,
+                 calibrate_fn=None) -> CompiledArmPool:
+    """Compile ``aspec`` (an ``ArmPoolSpec``-shaped object) against a
+    generated replay dict. ``calibrate_fn(cfg, batch)`` overrides the
+    measurement hook (tests inject a stub; the default times real
+    jitted decode steps via ``repro.armpool.calibrate``)."""
+    target = get_hardware_target(aspec.hardware)
+    resolved = resolve_arms(aspec.arms)
+    names = [n for n, _ in resolved]
+    cols = resolve_mapping(names, data["model_names"],
+                           getattr(aspec, "mapping", ()))
+
+    prices = model_prices()
+    prompt = np.asarray(data["prompt_tokens"], np.float64)
+    rb_cost = np.asarray(data["cost"], np.float64)
+    rb_names = [str(m) for m in data["model_names"]]
+
+    calibration: Optional[Dict[str, Any]] = None
+    if aspec.calibrate:
+        if calibrate_fn is None:
+            from repro.armpool.calibrate import measured_ratio
+            calibrate_fn = measured_ratio
+        calibration = {}
+
+    K = len(names)
+    per_arm = []
+    comp = np.empty((prompt.size, K), np.float64)
+    for a, (name, cfg) in enumerate(resolved):
+        rl = arm_roofline(cfg, target, batch=aspec.decode_batch,
+                          context=aspec.context)
+        if calibration is not None \
+                and cfg.param_count() <= aspec.calibrate_max_params:
+            info = calibrate_fn(cfg, aspec.decode_batch)
+            ratio = float(info["ratio"])
+            for k in ("step_s", "sec_per_token", "usd_per_token"):
+                rl[k] *= ratio
+            rl["tokens_per_s"] /= ratio
+            calibration[name] = info
+        per_arm.append(rl)
+        # completion length the mapped model produced for each sample:
+        # cost = price * (prompt + completion) / 1000
+        price = prices.get(rb_names[cols[a]])
+        if price is None:
+            raise ValueError(f"no price for table model "
+                             f"{rb_names[cols[a]]!r} (arm {name!r}); "
+                             f"known: {sorted(prices)}")
+        comp[:, a] = np.clip(rb_cost[:, cols[a]] * 1000.0 / price - prompt,
+                             1.0, COMPLETION_CAP)
+
+    usd_tok = np.array([r["usd_per_token"] for r in per_arm], np.float64)
+    sec_tok = np.array([r["sec_per_token"] for r in per_arm], np.float64)
+    tokens = prompt[:, None] + comp
+    if aspec.cost_source == "roofline":
+        cost = (usd_tok[None, :] * tokens).astype(np.float32)
+    else:   # "routerbench": the parity leg — replay-table costs as-is
+        cost = rb_cost[:, cols].astype(np.float32)
+    latency = (sec_tok[None, :] * tokens).astype(np.float32)
+    quality = np.asarray(data["quality"])[:, cols].astype(np.float32)
+
+    pool = CompiledArmPool(
+        hardware=aspec.hardware,
+        arms=tuple(names),
+        rb_models=tuple(rb_names[c] for c in cols),
+        cols=tuple(int(c) for c in cols),
+        quality=quality, cost=cost, latency_s=latency,
+        usd_per_token=usd_tok, sec_per_token=sec_tok,
+        step_s=np.array([r["step_s"] for r in per_arm], np.float64),
+        chips=np.array([r["chips"] for r in per_arm], np.int64),
+        dominant=tuple(r["dominant"] for r in per_arm),
+        params_b=np.array([cfg.param_count() / 1e9
+                           for _, cfg in resolved], np.float64),
+        decode_batch=int(aspec.decode_batch),
+        context=int(aspec.context),
+        cost_source=str(aspec.cost_source),
+        checksum=_table_checksum((quality, cost, latency), names),
+        calibration=calibration)
+    pool.validate_against(quality.shape[1])
+    return pool
+
+
+def build_pool_env(aspec, dspec, *, calibrate_fn=None):
+    """(ArmPoolSpec, DataSpec) -> (RouterBenchSim over the pool tables,
+    CompiledArmPool). The env is a drop-in for ``build_env``'s host
+    env: ``DeviceReplayEnv.from_host`` and everything downstream
+    consume it unchanged."""
+    from repro.data.routerbench import RouterBenchSim, generate_routerbench
+
+    data = generate_routerbench(dspec.seed, dspec.n_samples)
+    pool = compile_pool(aspec, data, calibrate_fn=calibrate_fn)
+    henv = RouterBenchSim(seed=dspec.seed, n_slices=dspec.n_slices,
+                          cost_lambda=dspec.cost_lambda,
+                          data=pool.as_data(data))
+    pool.validate_against(henv.K, what="pool env")
+    return henv, pool

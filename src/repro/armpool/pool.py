@@ -1,0 +1,162 @@
+"""Physical arm pool: hardware targets, the arm↔RouterBench mapping,
+and the per-arm roofline derivation (DESIGN.md §16).
+
+An *arm* here is a real ``ModelConfig`` from ``repro.configs`` deployed
+on a declared :class:`HardwareTarget`. Its serving economics are derived
+analytically: ``repro.roofline.decode_step_costs`` gives the per-decode-
+step FLOPs/bytes, the chip count follows from fitting the weights into
+HBM, and the three-term roofline turns that into a step-time lower bound
+— hence seconds/token and $/token (chip-hours burned per token). Its
+QUALITY column comes from the RouterBench replay tables through an
+EXPLICIT arm↔RouterBench-model mapping; nothing is paired positionally,
+and every mapping error (unknown arch, unknown table model, duplicate
+arm, K mismatch) raises with the offending names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+from repro.common.config import ModelConfig
+from repro.configs import ARCH_IDS, _ALIASES, get_config
+from repro.roofline.model import (
+    HW_CPU_HOST,
+    HW_V5E,
+    Hardware,
+    _DTYPE_BYTES,
+    decode_step_costs,
+    roofline_terms,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareTarget:
+    """A deployment target: roofline constants + what a chip-hour costs
+    (the bridge from step seconds to $/token)."""
+
+    name: str
+    hw: Hardware
+    usd_per_chip_hour: float
+
+
+HARDWARE_TARGETS: Dict[str, HardwareTarget] = {
+    "tpu-v5e": HardwareTarget("tpu-v5e", HW_V5E, 1.20),
+    # the calibration leg's host model (absolute scale is order-of-
+    # magnitude; the measured/analytic RATIO is the deliverable)
+    "cpu-host": HardwareTarget("cpu-host", HW_CPU_HOST, 0.10),
+}
+
+# Default arm -> RouterBench-model mapping, by capability tier: the
+# pool's frontier-scale members grade against the frontier columns, the
+# small members against the 7B-class columns. Overridable per-spec
+# (ArmPoolSpec.mapping); every arm MUST resolve to a table column —
+# there is deliberately no positional fallback.
+DEFAULT_RB_MAPPING: Dict[str, str] = {
+    "jamba_1_5_large_398b": "gpt-4",
+    "mistral_large_123b": "claude-v2",
+    "qwen3_moe_30b_a3b": "mixtral-8x7b",
+    "mistral_nemo_12b": "gpt-3.5-turbo",
+    "llama3_2_vision_11b": "claude-instant",
+    "gemma3_4b": "yi-34b-chat",
+    "llama3_2_3b": "mistral-7b-chat",
+    "granite_moe_1b_a400m": "wizardlm-13b",
+    "whisper_medium": "code-llama-34b",
+    "mamba2_130m": "zephyr-7b",
+}
+
+
+def canonical_arm(name: str) -> str:
+    """Normalize an arm name to its registry id (accepts the dashed
+    aliases the configs package accepts)."""
+    return _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+
+
+def resolve_arms(arms: Sequence[str]) -> List[Tuple[str, ModelConfig]]:
+    """Arm names -> [(canonical_name, ModelConfig)], loudly.
+
+    Unknown arch names and duplicate arms raise with every offender
+    listed (satellite: no silent positional pairing anywhere in the
+    pool path)."""
+    if not arms:
+        raise ValueError("arm pool is empty: list at least one arch "
+                         f"from {sorted(ARCH_IDS)}")
+    canon = [canonical_arm(a) for a in arms]
+    unknown = sorted({c for c in canon if c not in ARCH_IDS})
+    if unknown:
+        raise ValueError(f"unknown arm arch(s) {unknown}; known: "
+                         f"{sorted(ARCH_IDS)}")
+    dups = sorted({c for c in canon if canon.count(c) > 1})
+    if dups:
+        raise ValueError(f"duplicate arm(s) {dups}: each pool member "
+                         f"appears once (use one config per deployment)")
+    return [(c, get_config(c)) for c in canon]
+
+
+def resolve_mapping(arm_names: Sequence[str], table_models: Sequence[str],
+                    overrides: Sequence[Tuple[str, str]] = ()
+                    ) -> List[int]:
+    """Arm names -> RouterBench table column indices, loudly.
+
+    ``table_models`` is the replay data's ``model_names`` column order;
+    ``overrides`` are (arm, table_model) pairs layered over
+    :data:`DEFAULT_RB_MAPPING`. Raises with the offending names on an
+    override for an arm not in the pool, an arm with no mapping, or a
+    mapped model missing from the tables."""
+    cols = {str(m): i for i, m in enumerate(table_models)}
+    mapping = dict(DEFAULT_RB_MAPPING)
+    stray = sorted({canonical_arm(a) for a, _ in overrides}
+                   - set(arm_names))
+    if stray:
+        raise ValueError(f"mapping override(s) for arm(s) {stray} that "
+                         f"are not in the pool {sorted(arm_names)}")
+    for a, m in overrides:
+        mapping[canonical_arm(a)] = m
+    unmapped = sorted(a for a in arm_names if a not in mapping)
+    if unmapped:
+        raise ValueError(f"arm(s) {unmapped} have no RouterBench "
+                         f"mapping; add ArmPoolSpec.mapping entries "
+                         f"(table models: {sorted(cols)})")
+    missing = sorted({mapping[a] for a in arm_names} - set(cols))
+    if missing:
+        raise ValueError(f"mapped RouterBench model(s) {missing} not in "
+                         f"the replay tables (have: {sorted(cols)})")
+    return [cols[mapping[a]] for a in arm_names]
+
+
+def arm_roofline(cfg: ModelConfig, target: HardwareTarget, *,
+                 batch: int, context: int) -> Dict[str, float]:
+    """One arm's serving economics on one target.
+
+    Chip count = weights-fit-in-HBM (ideal tensor sharding); collective
+    traffic models a ring all-reduce of the residual stream per layer
+    when sharded. ``usd_per_token`` is chip-seconds burned per generated
+    token at the roofline step time; ``sec_per_token`` is the per-
+    request latency contribution of one token (one step)."""
+    hw = target.hw
+    db = _DTYPE_BYTES.get(cfg.dtype, 2)
+    costs = decode_step_costs(cfg, batch, context)
+    chips = max(1, math.ceil(cfg.param_count() * db / hw.hbm_bytes))
+    coll = 0.0
+    if chips > 1:
+        coll = (2.0 * (chips - 1) / chips) * batch * cfg.d_model * db \
+            * cfg.num_layers
+    terms = roofline_terms(costs["flops"] / chips,
+                           costs["hbm_bytes"] / chips, coll, hw)
+    step_s = terms["step_lower_bound_s"]
+    return {
+        "flops": costs["flops"], "hbm_bytes": costs["hbm_bytes"],
+        "chips": chips, "step_s": step_s,
+        "dominant": terms["dominant"],
+        "sec_per_token": step_s,
+        "tokens_per_s": batch / step_s if step_s > 0 else float("inf"),
+        "usd_per_token": chips * target.usd_per_chip_hour / 3600.0
+        * step_s / batch,
+    }
+
+
+def get_hardware_target(name: str) -> HardwareTarget:
+    if name not in HARDWARE_TARGETS:
+        raise ValueError(f"unknown hardware target {name!r}; known: "
+                         f"{sorted(HARDWARE_TARGETS)}")
+    return HARDWARE_TARGETS[name]

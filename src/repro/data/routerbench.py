@@ -63,6 +63,14 @@ MODEL_POOL: List[ModelSpec] = [
 ]
 
 
+def model_prices() -> Dict[str, float]:
+    """name -> $/1k-token price for the replay pool — the armpool uses
+    this to back out per-sample completion lengths from a mapped
+    model's cost column (cost = price * (prompt + completion) / 1000),
+    keyed BY NAME so a re-ordered pool cannot silently re-price arms."""
+    return {m.name: m.price for m in MODEL_POOL}
+
+
 def _unit(v, axis=-1):
     return v / np.maximum(np.linalg.norm(v, axis=axis, keepdims=True), 1e-9)
 

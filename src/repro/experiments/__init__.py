@@ -32,6 +32,7 @@ from repro.experiments.ope import score_policies_offline
 from repro.experiments.pretrain import build_corpus, pretrained_states
 from repro.experiments.spec import (
     SPEC_SCHEMA_VERSION,
+    ArmPoolSpec,
     DataSpec,
     ExperimentSpec,
     ForgettingSpec,
@@ -55,6 +56,7 @@ run = run_plan
 __all__ = [
     "SPEC_SCHEMA_VERSION",
     "RESULT_SCHEMA_VERSION",
+    "ArmPoolSpec",
     "DataSpec",
     "ExperimentSpec",
     "ExperimentPlan",

@@ -72,6 +72,11 @@ class ExperimentPlan:
     # flag. Labels marked True receive an offline-pretrained init state
     # from the runner; False labels are the cold controls.
     pretrain_labels: Optional[Dict[str, bool]] = None
+    # physical-pool mode (spec.armpool set): the CompiledArmPool whose
+    # tables the env was built from. With serving ALSO set the plan
+    # keeps its sweep calls — one spec drives the replay sweep AND the
+    # semi-real storm over the same pool (DESIGN.md §16.5).
+    pool: Optional[Any] = None
 
     @property
     def n_dispatches(self) -> int:
@@ -151,6 +156,15 @@ def compile_spec(spec: ExperimentSpec, *,
             if t not in POLICIES:
                 raise ValueError(f"ope target {t!r} not registered; "
                                  f"registered: {sorted(POLICIES)}")
+    pool = None
+    if spec.armpool is not None:
+        if env is not None or host_env is not None:
+            raise ValueError("compile_spec: spec.armpool compiles its "
+                             "own pool env; do not inject env/host_env")
+        from repro.armpool import build_pool_env
+        host_env, pool = build_pool_env(spec.armpool, spec.data)
+        env = DeviceReplayEnv.from_host(host_env)
+        pool.validate_against(env.K, what="device env")
     if env is None:
         if host_env is None:
             host_env, env = build_env(spec.data)
@@ -220,6 +234,7 @@ def compile_spec(spec: ExperimentSpec, *,
         train_steps = neuralucb_train_schedule(env, spec.train.epochs,
                                                spec.train.batch_size)
 
+    serving_policy = None
     if spec.serving is not None:
         from repro.serving.traffic import TRAFFIC_PATTERNS
         sv = spec.serving
@@ -235,12 +250,17 @@ def compile_spec(spec: ExperimentSpec, *,
                                  f"starts past the last wave "
                                  f"({sv.waves} waves)")
         label, fspec, pol, hyp, _ = resolved[0]
-        return ExperimentPlan(
-            spec=spec, env=env, host_env=host_env, cfg=cfg, calls=(),
-            train_steps=train_steps,
-            compile_s=time.perf_counter() - t0,
-            serving_policy=(label, pol, hyp, fspec.to_config()),
-            pretrain_labels=pretrain_labels or None)
+        serving_policy = (label, pol, hyp, fspec.to_config())
+        if pool is None:
+            # storm replaces the sweep (pre-PR-10 behavior). With a
+            # physical pool the plan falls through and KEEPS its sweep
+            # calls: one spec, one pool, sweep + semi-real storm.
+            return ExperimentPlan(
+                spec=spec, env=env, host_env=host_env, cfg=cfg,
+                calls=(), train_steps=train_steps,
+                compile_s=time.perf_counter() - t0,
+                serving_policy=serving_policy,
+                pretrain_labels=pretrain_labels or None)
 
     calls = []
     for scenario in spec.scenarios:
@@ -258,4 +278,6 @@ def compile_spec(spec: ExperimentSpec, *,
     return ExperimentPlan(spec=spec, env=env, host_env=host_env, cfg=cfg,
                           calls=tuple(calls), train_steps=train_steps,
                           compile_s=time.perf_counter() - t0,
-                          pretrain_labels=pretrain_labels or None)
+                          serving_policy=serving_policy,
+                          pretrain_labels=pretrain_labels or None,
+                          pool=pool)

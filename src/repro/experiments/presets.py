@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.experiments.spec import (
+    ArmPoolSpec,
     DataSpec,
     ExperimentSpec,
     ForgettingSpec,
@@ -153,6 +154,36 @@ def _serving_storm() -> ExperimentSpec:
             fail_decide_calls=(5,),
             train_every=8, p99_decide_ms=250.0,
             max_shed_fraction=0.02, require_zero_lost=True))
+
+
+@register_preset("physical_pool")
+def _physical_pool() -> ExperimentSpec:
+    """Physical arm pool (DESIGN.md §16): 8 real model configs costed
+    through the roofline on tpu-v5e feed ONE spec that runs BOTH the
+    replay policy sweep and a semi-real serving storm — mamba2-130m
+    executes real jitted decode steps, the large arms sleep their
+    roofline step time. CI shrinks it via --set serving.requests=...
+    data.n_samples=...; calibration stays off (calibrate=true times
+    real full-size decode steps — the bench's job)."""
+    return ExperimentSpec(
+        name="physical_pool",
+        data=DataSpec(n_samples=6000, n_slices=8),
+        policies=(PolicySpec("neuralucb"),),
+        seeds=(0,),
+        train=TrainSpec(train_steps=32, batch_size=64),
+        summarize=SummarizeSpec(curves=False),
+        armpool=ArmPoolSpec(
+            arms=("mamba2_130m", "llama3_2_3b", "gemma3_4b",
+                  "granite_moe_1b_a400m", "mistral_nemo_12b",
+                  "qwen3_moe_30b_a3b", "mistral_large_123b",
+                  "jamba_1_5_large_398b"),
+            hardware="tpu-v5e", decode_batch=8, context=2048,
+            calibrate=False, reduced_decode=True, max_new=4),
+        serving=ServingSpec(
+            requests=4000, waves=16, pattern="flash_crowd",
+            decide_batch=128, serve_batch=64, queue_capacity=4096,
+            train_every=4, p99_decide_ms=500.0,
+            max_shed_fraction=0.05, require_zero_lost=True))
 
 
 @register_preset("offline_online")

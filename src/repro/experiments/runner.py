@@ -108,6 +108,15 @@ def _run_serving_cell(plan: ExperimentPlan, *,
         batch_size=spec.train.batch_size, train_chunks=chunks, fcfg=fcfg,
         pretrained_state=pretrained_state,
         max_train_lag=sv.max_train_lag)
+    engines = None
+    engine_info: Dict[str, Any] = {}
+    max_new = 8
+    if plan.pool is not None:
+        # semi-real serve stage: small arms run REAL jitted decode
+        # steps, large arms sleep their roofline step time
+        from repro.armpool import build_arm_engines, engine_decode_steps
+        engines, engine_info = build_arm_engines(plan.pool, spec.armpool)
+        max_new = spec.armpool.max_new
     metrics = run_storm(
         plan.env, router, requests=sv.requests, waves=sv.waves,
         pattern=sv.pattern, outages=sv.outages,
@@ -115,7 +124,9 @@ def _run_serving_cell(plan: ExperimentPlan, *,
         serve_batch=sv.serve_batch,
         fail_decide_calls=sv.fail_decide_calls,
         train_every=sv.train_every, epochs=spec.train.epochs,
-        seed=sv.seed)
+        seed=sv.seed, engines=engines, max_new=max_new)
+    if engines is not None:
+        metrics["decode_steps"] = engine_decode_steps(engines)
 
     gates: Dict[str, bool] = {}
     if sv.require_zero_lost:
@@ -133,7 +144,7 @@ def _run_serving_cell(plan: ExperimentPlan, *,
               f"shed {metrics['shed']}, lost "
               f"{metrics['lost_requests']} -> "
               f"{'ok' if ok else 'FAIL ' + str(gates)}", flush=True)
-    return {"scenario": f"serving:{sv.pattern}", "policy": label,
+    cell = {"scenario": f"serving:{sv.pattern}", "policy": label,
             "point": {}, "train_steps": int(plan.train_steps or 0),
             "avg_reward_mean": metrics["avg_reward"],
             "avg_reward_std": 0.0,
@@ -141,6 +152,9 @@ def _run_serving_cell(plan: ExperimentPlan, *,
             "avg_quality_mean": metrics["avg_quality"],
             "serving": metrics, "serving_gates": gates,
             "serving_ok": bool(ok)}
+    if engine_info:
+        cell["armpool_engines"] = engine_info
+    return cell
 
 
 def run_plan(plan: ExperimentPlan, *, verbose: bool = False
@@ -230,6 +244,8 @@ def run_plan(plan: ExperimentPlan, *, verbose: bool = False
         manifest["pretrain"] = pretrain_info
     if ope_info:
         manifest["ope"] = ope_info
+    if plan.pool is not None:
+        manifest["armpool"] = plan.pool.manifest()
     return ExperimentResult(spec=spec, manifest=manifest, cells=cells)
 
 

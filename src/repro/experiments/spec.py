@@ -206,6 +206,72 @@ class ServingSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ArmPoolSpec:
+    """Physical arm pool (DESIGN.md §16): each arm is a real
+    ``ModelConfig`` from ``repro.configs`` with cost/latency derived
+    from the roofline model on ``hardware``; quality comes from the
+    RouterBench tables via the explicit ``mapping`` (defaulting to
+    ``repro.armpool.DEFAULT_RB_MAPPING``).
+
+    * ``arms`` — pool members (registry arch ids or their dashed
+      aliases); duplicates and unknown names raise at compile.
+    * ``mapping`` — ``(arm, routerbench_model)`` overrides; every arm
+      must resolve to a table column (no positional pairing).
+    * ``decode_batch`` / ``context`` — the serving operating point the
+      roofline is evaluated at (a "price shock" is a re-derivation at a
+      different point or target).
+    * ``cost_source`` — ``"roofline"`` ($/token from chip-seconds) or
+      ``"routerbench"`` (mapped replay columns as-is; the parity leg).
+    * ``calibrate`` — fold the measured/analytic decode-step ratio into
+      the tables for arms up to ``calibrate_max_params`` (times real
+      jitted decode steps; keep off in CI).
+    * Serving: arms up to ``serve_real_max_params`` execute REAL jitted
+      decode steps in the storm (``reduced_decode`` uses the config's
+      CPU-runnable reduced variant); larger arms sleep their roofline
+      step time scaled by ``latency_scale``; ``max_new`` tokens are
+      generated per request.
+    """
+
+    arms: Tuple[str, ...] = ()
+    hardware: str = "tpu-v5e"
+    mapping: Tuple[Tuple[str, str], ...] = ()
+    decode_batch: int = 8
+    context: int = 2048
+    cost_source: str = "roofline"
+    calibrate: bool = False
+    calibrate_max_params: int = 2_000_000_000
+    serve_real_max_params: int = 200_000_000
+    reduced_decode: bool = True
+    latency_scale: float = 1.0
+    max_new: int = 4
+
+    def __post_init__(self):
+        if not self.arms:
+            raise ValueError("ArmPoolSpec: no arms (list at least one "
+                             "repro.configs arch id)")
+        if self.decode_batch <= 0 or self.context <= 0:
+            raise ValueError("ArmPoolSpec: decode_batch and context "
+                             "must be positive")
+        if self.cost_source not in ("roofline", "routerbench"):
+            raise ValueError(f"ArmPoolSpec: cost_source must be "
+                             f"'roofline' or 'routerbench', got "
+                             f"{self.cost_source!r}")
+        if self.latency_scale < 0:
+            raise ValueError("ArmPoolSpec: latency_scale must be >= 0")
+        if self.max_new <= 0:
+            raise ValueError("ArmPoolSpec: max_new must be positive")
+        for pair in self.mapping:
+            if len(pair) != 2:
+                raise ValueError(f"ArmPoolSpec: mapping entry {pair!r} "
+                                 f"is not (arm, routerbench_model)")
+        keys = [a for a, _ in self.mapping]
+        if len(set(keys)) != len(keys):
+            dup = sorted({k for k in keys if keys.count(k) > 1})
+            raise ValueError(f"ArmPoolSpec: duplicate mapping keys "
+                             f"{dup}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PretrainSpec:
     """Offline pretraining phase (DESIGN.md §13.3): build a logged
     corpus, run every hooked policy's ``pretrain`` on it, and inject the
@@ -320,6 +386,7 @@ class ExperimentSpec:
     serving: Optional[ServingSpec] = None
     pretrain: Optional[PretrainSpec] = None
     ope: Optional[OPESpec] = None
+    armpool: Optional[ArmPoolSpec] = None
 
     def __post_init__(self):
         if not self.policies:
@@ -405,6 +472,12 @@ def spec_to_json(spec: ExperimentSpec) -> Dict[str, Any]:
         op["behavior_overrides"] = [[k, v] for k, v
                                     in spec.ope.behavior_overrides]
         j["ope"] = op
+    if spec.armpool is not None:
+        # emit-only-when-set: pre-PR-10 specs keep their hashes
+        ap = dataclasses.asdict(spec.armpool)
+        ap["arms"] = list(spec.armpool.arms)
+        ap["mapping"] = [[a, m] for a, m in spec.armpool.mapping]
+        j["armpool"] = ap
     return j
 
 
@@ -468,7 +541,7 @@ def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
                          f"{SPEC_SCHEMA_VERSION!r}")
     known = {"name", "data", "policies", "scenarios", "seeds", "train",
              "forgetting", "ucb_backend", "summarize", "serving",
-             "pretrain", "ope"}
+             "pretrain", "ope", "armpool"}
     unknown = set(d) - known
     if unknown:
         raise ValueError(f"ExperimentSpec: unknown keys "
@@ -526,6 +599,15 @@ def spec_from_json(d: Dict[str, Any]) -> ExperimentSpec:
             o["behavior_overrides"] = tuple(
                 (k, v) for k, v in o["behavior_overrides"])
         kw["ope"] = _strict(OPESpec, o)
+    if "armpool" in d and d["armpool"] is not None:
+        a = dict(d["armpool"])
+        if "arms" in a:
+            v = a["arms"]
+            a["arms"] = tuple(v) if isinstance(v, (list, tuple)) \
+                else (v,)
+        if "mapping" in a:
+            a["mapping"] = tuple((arm, m) for arm, m in a["mapping"])
+        kw["armpool"] = _strict(ArmPoolSpec, a)
     return ExperimentSpec(**kw)
 
 

@@ -1,4 +1,13 @@
 from repro.roofline.hlo import collective_bytes, parse_collectives
-from repro.roofline.model import roofline_terms, HW_V5E
+from repro.roofline.hlo_cost import hlo_cost
+from repro.roofline.model import (
+    HW_CPU_HOST,
+    HW_V5E,
+    Hardware,
+    decode_step_costs,
+    roofline_terms,
+)
 
-__all__ = ["collective_bytes", "parse_collectives", "roofline_terms", "HW_V5E"]
+__all__ = ["collective_bytes", "parse_collectives", "roofline_terms",
+           "decode_step_costs", "hlo_cost", "Hardware", "HW_V5E",
+           "HW_CPU_HOST"]

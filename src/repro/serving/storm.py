@@ -31,13 +31,18 @@ def run_storm(env, router, *, requests: int, waves: int,
               serve_batch: int = 256,
               fail_decide_calls: Sequence[int] = (),
               train_every: int = 0, epochs: int = 1, seed: int = 0,
-              log_capacity: Optional[int] = 1024) -> Dict:
+              log_capacity: Optional[int] = 1024,
+              engines: Optional[Sequence] = None,
+              max_new: int = 8) -> Dict:
     """Drive ``router`` through a storm over ``env``'s replay tables.
 
     ``env`` is a `DeviceReplayEnv` (feedback = its reward/quality/cost
     tables); ``outages`` are announced ``(arm, start_wave, end_wave)``
     windows, optionally augmented from a sim ``scenario``'s masks;
     ``train_every`` runs `end_slice` every that many waves (0 = never).
+    ``engines`` (one per arm, the armpool's semi-real mode) makes the
+    serve stage actually execute each request — ``max_new`` generated
+    tokens per request — while feedback stays table-replay.
     Returns the metrics dict (see `BENCH_serving.json` schema, README).
     """
     reward = np.asarray(env.reward)
@@ -49,10 +54,15 @@ def run_storm(env, router, *, requests: int, waves: int,
         outages += outages_from_scenario(scenario, env, waves)
     faults = ScriptedFaults(fail_decide_calls=fail_decide_calls,
                             outages=outages)
+    if engines is not None and len(engines) != K:
+        raise ValueError(f"run_storm: {len(engines)} engines for "
+                         f"{K} arms (one engine per arm)")
     engine = AsyncRouterEngine(
-        router, K, reward_table=reward, quality_table=quality,
+        router, K, engines=engines, reward_table=reward,
+        quality_table=quality,
         cost_table=cost, queue_capacity=queue_capacity,
         decide_batch=decide_batch, serve_batch=serve_batch,
+        max_new=max_new,
         fault_hook=faults.on_decide, log_capacity=log_capacity)
     sizes = wave_sizes(pattern, requests, waves, seed=seed)
     rng = np.random.default_rng(seed)

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.roofline.hlo import collective_bytes, parse_collectives
+from repro.roofline.hlo_cost import hlo_cost
 from repro.roofline.model import HW_V5E, roofline_terms
 
 SYNTH = """
@@ -53,6 +54,70 @@ def test_parse_real_psum_module():
     # 1-device groups may be optimized away; parser must not crash and must
     # return a well-formed dict either way
     assert "total" in agg
+
+
+# one dot, hand-countable: flops = 2*4*16*8 = 1024; bytes = the dot's
+# result (4*16*4=256) + both operands (4*8*4=128, 8*16*4=512) = 896
+# (parameter defs are free ops — only the consumer pays the traffic)
+_DOT_HLO = """
+HloModule tiny
+ENTRY %main (a: f32[4,8], b: f32[8,16]) -> f32[4,16] {
+  %a = f32[4,8] parameter(0)
+  %b = f32[8,16] parameter(1)
+  ROOT %d = f32[4,16] dot(f32[4,8] %a, f32[8,16] %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+# a 5-trip while whose body holds one dot + one add; XLA's own
+# cost_analysis would count the body ONCE — hlo_cost must multiply by
+# the known_trip_count (and fall back to the condition's constant)
+_LOOP_HLO = """
+HloModule loop
+%cond (p: (s32[], f32[4,8])) -> pred[] {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[4,8]) %p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+%body (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[4,8]) %p), index=0
+  %x = f32[4,8] get-tuple-element((s32[], f32[4,8]) %p), index=1
+  %w = f32[8,8] constant(0)
+  %d = f32[4,8] dot(f32[4,8] %x, f32[8,8] %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(s32[] %i, s32[] %one)
+  ROOT %t = (s32[], f32[4,8]) tuple(s32[] %ni, f32[4,8] %d)
+}
+ENTRY %main (a: f32[4,8]) -> (s32[], f32[4,8]) {
+  %a = f32[4,8] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,8]) tuple(s32[] %z, f32[4,8] %a)
+  ROOT %w2 = (s32[], f32[4,8]) while((s32[], f32[4,8]) %t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+}
+"""
+
+
+def test_hlo_cost_hand_counted_dot():
+    c = hlo_cost(_DOT_HLO)
+    assert c["flops"] == 2 * 4 * 16 * 8          # 1024
+    assert c["bytes"] == 256 + 128 + 512         # 896
+
+
+def test_hlo_cost_while_multiplies_by_trip_count():
+    c = hlo_cost(_LOOP_HLO)
+    # per trip: dot 2*4*8*8 = 512 flops; bytes = dot (128 result +
+    # 128 + 256 operands) + add (4 + 4 + 4) = 524. The while op itself,
+    # tuples, GTEs, parameters and constants are free; the condition
+    # computation is never charged.
+    assert c["flops"] == 512 * 5
+    assert c["bytes"] == 524 * 5
+
+
+def test_hlo_cost_trip_count_falls_back_to_cond_constant():
+    no_cfg = _LOOP_HLO.replace(
+        ', backend_config={"known_trip_count":{"n":"5"}}', "")
+    assert hlo_cost(no_cfg) == hlo_cost(_LOOP_HLO)
 
 
 def test_roofline_terms_math():
